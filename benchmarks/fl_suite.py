@@ -1,0 +1,155 @@
+"""Paper-table benchmarks (CPU-scale reproductions of Tables 1-2, Figs 3-6).
+
+Each function mirrors one table/figure of the paper on the synthetic image
+task; numbers land in EXPERIMENTS.md.  Scale: 10 clients / 5 per round /
+reduced rounds — enough for the orderings the paper claims (FedMRN ≈
+FedAvg ≫ sign-style ≫ model-compression baselines) to reproduce.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_image_task, make_partition, sample_local_batches
+from repro.fed import FLConfig, run_federated
+from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
+
+
+def _setup(partition: str, seed: int = 0):
+    task = make_image_task(seed, n=3000, hw=16, n_classes=8, noise=0.5)
+    n_test = 600
+    xtr, ytr = task.x[:-n_test], task.y[:-n_test]
+    xte = jnp.asarray(task.x[-n_test:])
+    yte = jnp.asarray(task.y[-n_test:])
+    parts = make_partition(partition, seed, ytr, num_clients=10)
+    params = cnn_init(jax.random.key(seed), n_classes=8, channels=(8, 16))
+    return xtr, ytr, xte, yte, parts, params
+
+
+def _run(algo: str, partition: str, rounds: int = 15, seed: int = 0,
+         **cfg_kw) -> Dict:
+    xtr, ytr, xte, yte, parts, params = _setup(partition, seed)
+    cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
+                   rounds=rounds, local_steps=10, batch_size=32, lr=0.1,
+                   seed=seed,
+                   **{"noise_alpha": 0.025 if algo == "fedmrns" else 0.05,
+                      **cfg_kw})
+
+    def batch_fn(rnd, cid):
+        return sample_local_batches(seed * 131 + rnd * 997 + cid, xtr, ytr,
+                                    parts[cid], steps=cfg.local_steps,
+                                    batch=cfg.batch_size)
+
+    def eval_fn(p):
+        return float(cnn_accuracy(p, xte, yte))
+
+    return run_federated(cnn_loss, params, batch_fn, eval_fn, cfg,
+                         eval_every=max(1, rounds // 4))
+
+
+def table1_accuracy(partitions=("iid", "noniid2"), rounds=15):
+    """Table 1/2: accuracy of all methods across data distributions."""
+    algos = ("fedavg", "fedmrn", "fedmrns", "signsgd", "terngrad", "topk",
+             "drive", "eden", "fedpm", "fedsparsify")
+    rows = []
+    for part in partitions:
+        for algo in algos:
+            t0 = time.time()
+            hist = _run(algo, part, rounds=rounds)
+            rows.append(dict(
+                name=f"table1/{part}/{algo}",
+                us_per_call=(time.time() - t0) * 1e6 / rounds,
+                derived=round(hist["final_acc"], 4)))
+    return rows
+
+
+def fig4_ablation(rounds=15):
+    """Fig 4: PSM ablations + post-training-SM comparison."""
+    variants = [
+        ("fedmrn", {}),                                    # full PSM
+        ("fedmrn_wo_pm", {"use_pm": False}),
+        ("fedmrn_wo_sm", {"use_sm": False}),
+        ("fedmrn_wo_psm", {"use_sm": False, "use_pm": False}),
+        ("fedavg_w_sm", {}),                               # post-train SM
+        ("signsgd", {}),
+    ]
+    rows = []
+    for name, kw in variants:
+        algo = ("post_sm" if name == "fedavg_w_sm"
+                else "signsgd" if name == "signsgd" else "fedmrn")
+        t0 = time.time()
+        hist = _run(algo, "noniid2", rounds=rounds, **kw)
+        rows.append(dict(name=f"fig4/{name}",
+                         us_per_call=(time.time() - t0) * 1e6 / rounds,
+                         derived=round(hist["final_acc"], 4)))
+    return rows
+
+
+def fig5_noise(rounds=12):
+    """Fig 5: noise distribution × magnitude sweep."""
+    rows = []
+    for dist in ("uniform", "gauss", "bernoulli"):
+        for alpha in (0.0125, 0.025, 0.05, 0.1):
+            t0 = time.time()
+            hist = _run("fedmrn", "noniid2", rounds=rounds,
+                        noise_dist=dist, noise_alpha=alpha)
+            rows.append(dict(
+                name=f"fig5/{dist}/a{alpha}",
+                us_per_call=(time.time() - t0) * 1e6 / rounds,
+                derived=round(hist["final_acc"], 4)))
+    return rows
+
+
+def fig6_complexity():
+    """Fig 6: local-training wall time + update-compression wall time."""
+    xtr, ytr, xte, yte, parts, params = _setup("iid")
+    from repro.core import (FedMRNConfig, NoiseConfig, client_local_update,
+                            make_compressor, sgd_local_update)
+    batches = sample_local_batches(0, xtr, ytr, parts[0], steps=10,
+                                   batch=32)
+    rows = []
+
+    def timed(fn, n=5):
+        fn()  # compile
+        t0 = time.time()
+        for _ in range(n):
+            jax.block_until_ready(fn())
+        return (time.time() - t0) / n
+
+    mrn_cfg = FedMRNConfig(noise=NoiseConfig(alpha=0.05), lr=0.1)
+    t_mrn = timed(lambda: client_local_update(
+        cnn_loss, params, batches, cfg=mrn_cfg, base_seed=0, round_idx=0,
+        client_id=0, train_key=jax.random.key(1)).losses)
+    rows.append(dict(name="fig6/train/fedmrn", us_per_call=t_mrn * 1e6,
+                     derived=0))
+    t_avg = timed(lambda: sgd_local_update(cnn_loss, params, batches,
+                                           lr=0.1)[1])
+    rows.append(dict(name="fig6/train/fedavg", us_per_call=t_avg * 1e6,
+                     derived=round(t_mrn / t_avg, 3)))
+    u, _ = sgd_local_update(cnn_loss, params, batches, lr=0.1)
+    for comp in ("signsgd", "terngrad", "topk", "drive", "eden"):
+        c = make_compressor(comp)
+        t = timed(lambda: c(u, jax.random.key(2)))
+        rows.append(dict(name=f"fig6/compress/{comp}", us_per_call=t * 1e6,
+                         derived=round(t / t_avg, 4)))
+    return rows
+
+
+def comm_table():
+    """Uplink cost accounting (paper §5.1.3 bit model, exact + paper-style)."""
+    from repro.core import baseline_record, fedmrn_record, tree_num_params
+    params = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
+    P = tree_num_params(params)
+    L = len(jax.tree_util.tree_leaves(params))
+    rows = [dict(name="comm/fedmrn",
+                 us_per_call=0.0,
+                 derived=round(fedmrn_record(P).uplink_bpp, 4))]
+    for m in ("fedavg", "signsgd", "terngrad", "topk", "qsgd", "eden"):
+        rec = baseline_record(m, P, L)
+        rows.append(dict(name=f"comm/{m}", us_per_call=0.0,
+                         derived=round(rec.uplink_bpp, 4)))
+    return rows

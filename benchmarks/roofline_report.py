@@ -1,0 +1,24 @@
+"""§Roofline benchmark: read dry-run records → three-term table rows."""
+from __future__ import annotations
+
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def roofline_rows():
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.sharding.roofline import load_all
+    rows = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return [dict(name="roofline/missing", us_per_call=0.0, derived=0.0)]
+    for rec, r in load_all(DRYRUN_DIR):
+        dom_ms = {"compute": r.compute_s, "memory": r.memory_s,
+                  "collective": r.collective_s}[r.dominant] * 1e3
+        rows.append(dict(
+            name=f"roofline/{r.arch}/{r.shape}/{r.mesh}/{r.dominant}",
+            us_per_call=round(dom_ms * 1e3, 1),   # dominant term in us
+            derived=round(r.useful_ratio, 4)))
+    return rows

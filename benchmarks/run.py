@@ -1,0 +1,47 @@
+"""Benchmark harness: one section per paper table/figure (+ roofline).
+
+Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the
+table-specific metric (accuracy for Tables/Figs, bits-per-param for the
+comm table, useful-compute ratio for the roofline).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer rounds (CI mode)")
+    ap.add_argument("--only", default=None,
+                    help="table1|fig4|fig5|fig6|comm|roofline")
+    args = ap.parse_args()
+
+    from . import fl_suite, roofline_report
+
+    rounds = 6 if args.quick else 15
+    sections = {
+        "table1": lambda: fl_suite.table1_accuracy(rounds=rounds),
+        "fig4": lambda: fl_suite.fig4_ablation(rounds=rounds),
+        "fig5": lambda: fl_suite.fig5_noise(rounds=max(4, rounds - 3)),
+        "fig6": fl_suite.fig6_complexity,
+        "comm": fl_suite.comm_table,
+        "roofline": roofline_report.roofline_rows,
+    }
+    if args.only:
+        sections = {args.only: sections[args.only]}
+
+    print("name,us_per_call,derived")
+    for name, fn in sections.items():
+        try:
+            for row in fn():
+                print(f"{row['name']},{row['us_per_call']:.1f},"
+                      f"{row['derived']}")
+                sys.stdout.flush()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0.0,{type(e).__name__}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Quickstart: FedMRN vs FedAvg on a synthetic federated image task.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+
+Demonstrates the paper's headline claim in ~1 min on CPU: FedMRN matches
+FedAvg accuracy while sending 1 bit per parameter uplink (~32x compression).
+"""
+import jax
+
+from repro.data import make_image_task, make_partition, sample_local_batches
+from repro.fed import FLConfig, run_federated
+from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
+
+
+def main():
+    task = make_image_task(0, n=2000, hw=16, n_classes=8, noise=0.5)
+    parts = make_partition("noniid2", 0, task.y, num_clients=10,
+                           labels_per_client=3)
+    params = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
+
+    def batch_fn_for(cfg):
+        def batch_fn(rnd, cid):
+            return sample_local_batches(
+                rnd * 997 + cid, task.x, task.y, parts[cid],
+                steps=cfg.local_steps, batch=cfg.batch_size)
+        return batch_fn
+
+    def eval_fn(p):
+        import jax.numpy as jnp
+        return float(cnn_accuracy(p, jnp.asarray(task.x),
+                                  jnp.asarray(task.y)))
+
+    for algo in ("fedavg", "fedmrn", "fedmrns", "signsgd"):
+        # noise magnitude must match the local-update scale (paper Fig. 5);
+        # FedMRNS needs about half of FedMRN's noise (paper §5.5)
+        cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
+                       rounds=15, local_steps=10, batch_size=32, lr=0.1,
+                       noise_alpha=0.025 if algo == "fedmrns" else 0.05)
+        hist = run_federated(cnn_loss, params, batch_fn_for(cfg), eval_fn,
+                             cfg, eval_every=5)
+        bpp = hist["uplink_bits_per_client"] / hist["params"]
+        print(f"{algo:10s} acc={hist['final_acc']:.3f} "
+              f"uplink={bpp:6.2f} bit/param "
+              f"(x{32/bpp:.1f} compression) wall={hist['wall_s']:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

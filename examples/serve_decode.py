@@ -1,0 +1,52 @@
+"""Serving demo: batched autoregressive decode with a KV cache on a reduced
+assigned architecture — the serve-side path the decode_32k / long_500k
+dry-run shapes exercise at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py --arch h2o-danube-1.8b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.models.registry import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b",
+                    choices=list_archs())
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--steps", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced(layers=2, d_model=128, vocab=128)
+    model = build_model(cfg)
+    params = model.init(jax.random.key(0))
+    cache = model.init_cache(args.batch, max_len=256, dtype=jnp.float32)
+
+    step = jax.jit(model.decode_step)
+    tok = jnp.zeros((args.batch, 1), jnp.int32)
+    # greedy decode loop
+    logits, cache = step(params, cache, tok)   # compile
+    t0 = time.time()
+    out = []
+    for _ in range(args.steps):
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        logits, cache = step(params, cache, tok)
+        out.append(tok[:, 0])
+    dt = time.time() - t0
+    seqs = jnp.stack(out, axis=1)
+    print(f"arch={args.arch} ({cfg.arch_type}) batch={args.batch}")
+    print(f"{args.steps} steps in {dt:.2f}s → "
+          f"{args.batch*args.steps/dt:.1f} tok/s (CPU, reduced model)")
+    print("sample:", seqs[0][:16].tolist())
+    if cfg.sliding_window:
+        print(f"SWA ring cache: window={cfg.sliding_window} "
+              "(bounded memory at any context length)")
+
+
+if __name__ == "__main__":
+    main()

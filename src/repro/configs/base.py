@@ -1,0 +1,121 @@
+"""Model/architecture configuration and the assigned input shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+ARCH_TYPES = ("dense", "moe", "ssm", "hybrid", "vlm", "audio")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """One config object covers every assigned architecture family."""
+
+    name: str
+    arch_type: str
+    num_layers: int
+    d_model: int
+    d_ff: int
+    vocab_size: int
+    # --- attention (0 heads ⇒ attention-free) -----------------------------
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0                 # default d_model // num_heads
+    qkv_bias: bool = False
+    sliding_window: int = 0           # 0 ⇒ full attention
+    rope_theta: float = 1e4
+    mrope: bool = False               # qwen2-vl 3-section M-RoPE
+    tie_embeddings: bool = False
+    logit_softcap: float = 0.0
+    # --- MoE ----------------------------------------------------------------
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+    # --- SSM (mamba2) ---------------------------------------------------------
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    conv_kernel: int = 4
+    # --- hybrid (zamba2): shared attention block every N mamba blocks -------
+    attn_every: int = 0
+    # --- enc-dec (seamless) ---------------------------------------------------
+    encoder_layers: int = 0
+    # --- modality frontends (STUBS per spec: embeddings provided) ------------
+    modality: str = "text"            # text | vision | audio
+    frontend_tokens: int = 0          # patches/frames consumed per sample
+    # --- numerics -------------------------------------------------------------
+    dtype: Any = jnp.float32
+    norm_eps: float = 1e-5
+
+    def __post_init__(self):
+        if self.arch_type not in ARCH_TYPES:
+            raise ValueError(f"bad arch_type {self.arch_type}")
+        if self.num_heads and not self.head_dim:
+            object.__setattr__(self, "head_dim", self.d_model // self.num_heads)
+
+    # ------------------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.num_heads == 0
+
+    @property
+    def subquadratic(self) -> bool:
+        """Eligible for long_500k decode (bounded per-token state)."""
+        return self.arch_type in ("ssm", "hybrid") or (
+            self.sliding_window > 0 and self.arch_type == "dense")
+
+    def reduced(self, *, layers: int = 2, d_model: int = 256,
+                experts: int = 4, vocab: int = 512) -> "ModelConfig":
+        """CPU-smoke-test variant of the same family (spec: ≤2L, d≤512)."""
+        heads = 0 if self.attention_free else max(2, min(4, self.num_heads))
+        kv = 0 if self.attention_free else max(
+            1, heads * max(1, self.num_kv_heads) // max(1, self.num_heads))
+        return dataclasses.replace(
+            self,
+            name=self.name + "-smoke",
+            num_layers=layers,
+            encoder_layers=min(self.encoder_layers, layers),
+            d_model=d_model,
+            d_ff=2 * d_model,
+            vocab_size=vocab,
+            num_heads=heads,
+            num_kv_heads=kv,
+            head_dim=d_model // heads if heads else 0,
+            num_experts=min(self.num_experts, experts) if self.num_experts else 0,
+            top_k=min(self.top_k, 2) if self.top_k else 0,
+            ssm_state=min(self.ssm_state, 16) if self.ssm_state else 0,
+            ssm_head_dim=32 if self.ssm_state else self.ssm_head_dim,
+            sliding_window=min(self.sliding_window, 64) if self.sliding_window else 0,
+            attn_every=min(self.attn_every, 2) if self.attn_every else 0,
+            frontend_tokens=min(self.frontend_tokens, 16),
+            dtype=jnp.float32,
+        )
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    """One of the four assigned global input shapes."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> Tuple[bool, str]:
+    """(runs?, reason) — the skip policy documented in DESIGN.md §4."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, ("full-attention arch: 500k dense KV cache is the "
+                       "quadratic-memory regime the spec says to skip")
+    return True, ""

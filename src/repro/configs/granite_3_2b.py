@@ -1,0 +1,11 @@
+"""Granite-3.0-2B [dense]: GQA, tied embeddings
+[hf:ibm-granite/granite-3.0-2b-base].
+40L d=2048 32H (GQA kv=8) d_ff=8192 V=49155."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b", arch_type="dense",
+    num_layers=40, d_model=2048, d_ff=8192, vocab_size=49155,
+    num_heads=32, num_kv_heads=8,
+    tie_embeddings=True,
+)

@@ -1,0 +1,11 @@
+"""H2O-Danube-1.8B [dense]: llama+mistral mix with sliding-window attention
+[arXiv:2401.16818]. 24L d=2560 32H (GQA kv=8) d_ff=6912 V=32000, SWA=4096.
+The SWA window bounds the decode KV to O(window) — long_500k eligible."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-1.8b", arch_type="dense",
+    num_layers=24, d_model=2560, d_ff=6912, vocab_size=32000,
+    num_heads=32, num_kv_heads=8,
+    sliding_window=4096,
+)

@@ -1,0 +1,9 @@
+"""Llama-3.2-1B [dense] [hf:meta-llama/Llama-3.2-1B].
+16L d=2048 32H (GQA kv=8) d_ff=8192 V=128256."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-1b", arch_type="dense",
+    num_layers=16, d_model=2048, d_ff=8192, vocab_size=128256,
+    num_heads=32, num_kv_heads=8, rope_theta=5e5,
+)

@@ -1,0 +1,10 @@
+"""OLMoE-1B-7B [moe]: 64 experts top-8 [arXiv:2409.02060].
+16L d=2048 16H (kv=16) expert d_ff=1024 V=50304."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", arch_type="moe",
+    num_layers=16, d_model=2048, d_ff=1024, vocab_size=50304,
+    num_heads=16, num_kv_heads=16,
+    num_experts=64, top_k=8,
+)

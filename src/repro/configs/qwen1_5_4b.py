@@ -1,0 +1,10 @@
+"""Qwen1.5-4B [dense]: QKV bias [hf:Qwen/Qwen1.5-0.5B].
+40L d=2560 20H (kv=20, head_dim=128) d_ff=6912 V=151936."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b", arch_type="dense",
+    num_layers=40, d_model=2560, d_ff=6912, vocab_size=151936,
+    num_heads=20, num_kv_heads=20,
+    qkv_bias=True,
+)

@@ -1,0 +1,11 @@
+"""Qwen2-VL-2B [vlm]: M-RoPE + dynamic resolution [arXiv:2409.12191].
+28L d=1536 12H (GQA kv=2, head_dim=128) d_ff=8960 V=151936.
+Vision frontend is a STUB: input_specs provides patch embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-2b", arch_type="vlm",
+    num_layers=28, d_model=1536, d_ff=8960, vocab_size=151936,
+    num_heads=12, num_kv_heads=2,
+    mrope=True, modality="vision", frontend_tokens=256, rope_theta=1e6,
+)

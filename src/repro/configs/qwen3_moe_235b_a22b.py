@@ -1,0 +1,10 @@
+"""Qwen3-MoE-235B-A22B [moe]: 128 experts top-8 [hf:Qwen/Qwen3-30B-A3B].
+94L d=4096 64H (GQA kv=4, head_dim=128) expert d_ff=1536 V=151936."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b", arch_type="moe",
+    num_layers=94, d_model=4096, d_ff=1536, vocab_size=151936,
+    num_heads=64, num_kv_heads=4, head_dim=128,
+    num_experts=128, top_k=8, rope_theta=1e6,
+)

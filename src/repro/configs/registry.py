@@ -1,0 +1,28 @@
+"""Arch-id → config lookup for ``--arch <id>``."""
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = {
+    "zamba2-1.2b": "zamba2_1_2b",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b_a22b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "rwkv6-3b": "rwkv6_3b",
+    "qwen1.5-4b": "qwen1_5_4b",
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "llama3.2-1b": "llama3_2_1b",
+    "granite-3-2b": "granite_3_2b",
+}
+
+
+def list_archs():
+    return sorted(ARCH_IDS)
+
+
+def get_config(arch_id: str):
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; choose from {list_archs()}")
+    mod = importlib.import_module(f"repro.configs.{ARCH_IDS[arch_id]}")
+    return mod.CONFIG

@@ -1,0 +1,9 @@
+"""RWKV6-3B "Finch" [ssm]: attention-free, data-dependent decay
+[arXiv:2404.05892]. 32L d=2560 d_ff=8960 V=65536. O(1) decode state."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-3b", arch_type="ssm",
+    num_layers=32, d_model=2560, d_ff=8960, vocab_size=65536,
+    num_heads=0, num_kv_heads=0,   # attention-free (RWKV6 mixer)
+)

@@ -1,0 +1,12 @@
+"""SeamlessM4T-medium [audio]: enc-dec, multimodal [arXiv:2308.11596].
+12L enc + 12L dec, d=1024 16H (kv=16) d_ff=4096 V=256206.
+Audio frontend is a STUB: input_specs provides frame embeddings."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", arch_type="audio",
+    num_layers=12, encoder_layers=12,
+    d_model=1024, d_ff=4096, vocab_size=256206,
+    num_heads=16, num_kv_heads=16,
+    modality="audio",
+)

@@ -1,0 +1,10 @@
+"""Zamba2-1.2B [hybrid]: Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242]. 38L d=2048 32H (kv=32) d_ff=8192 V=32000 ssm_state=64."""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", arch_type="hybrid",
+    num_layers=38, d_model=2048, d_ff=8192, vocab_size=32000,
+    num_heads=32, num_kv_heads=32,
+    ssm_state=64, attn_every=6,
+)

@@ -1,0 +1,38 @@
+"""FedMRN core: noise, masking (SM/PM/PSM), packing, compressors, protocol."""
+from .noise import NoiseConfig, client_round_key, gen_noise  # noqa: F401
+from .masking import (  # noqa: F401
+    MASK_MODES,
+    clip_to_noise,
+    deterministic_mask,
+    mask_prob_binary,
+    mask_prob_signed,
+    masked_noise_from_mask,
+    progressive_stochastic_masking,
+    sample_mask,
+    stochastic_masking,
+    tree_masked_noise,
+    tree_psm,
+    tree_sample_mask,
+    tree_sm,
+)
+from .packing import (  # noqa: F401
+    pack_bits,
+    pack_mask,
+    payload_bits,
+    tree_num_params,
+    tree_pack,
+    tree_unpack,
+    unpack_bits,
+    unpack_mask,
+)
+from .compressors import REGISTRY, Compressor, make_compressor  # noqa: F401
+from .fedmrn import (  # noqa: F401
+    ClientResult,
+    FedMRNConfig,
+    client_local_update,
+    server_aggregate,
+    server_aggregate_updates,
+    server_decode_update,
+    sgd_local_update,
+)
+from .comm import CommRecord, baseline_record, fedmrn_record  # noqa: F401

@@ -1,0 +1,71 @@
+"""Communication-cost accounting (uplink/downlink, bits per parameter).
+
+Mirrors the paper's §5.1.3 accounting: FedMRN/FedPM/SignSGD/EDEN/DRIVE are
+1 bpp uplink; TernGrad log2(3); Top-k/FedSparsify 32·density (paper ignores
+index overhead — we report both exact and paper-style figures).
+Downlink is uncompressed float32 for every method, as in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CommRecord:
+    method: str
+    params: int
+    uplink_bits: int          # exact, incl. headers/seeds/indices
+    uplink_bits_paper: int    # paper-style (ignores index/header overhead)
+    downlink_bits: int
+
+    @property
+    def uplink_bpp(self) -> float:
+        return self.uplink_bits / self.params
+
+    @property
+    def compression_x(self) -> float:
+        return 32.0 * self.params / self.uplink_bits
+
+    def row(self) -> Dict[str, Any]:
+        return dict(
+            method=self.method, params=self.params,
+            uplink_bpp=round(self.uplink_bpp, 4),
+            uplink_MB=round(self.uplink_bits / 8e6, 4),
+            compression_x=round(self.compression_x, 2),
+        )
+
+
+def fedmrn_record(params: int, *, n_leaves: int = 0) -> CommRecord:
+    # packed masks (padded to 32-bit words) + one 64-bit seed
+    words = (params + 31) // 32
+    exact = words * 32 + 64
+    return CommRecord("fedmrn", params, exact, params, 32 * params)
+
+
+def baseline_record(method: str, params: int, n_leaves: int,
+                    *, topk_frac: float = 0.03,
+                    qsgd_bits: int = 2) -> CommRecord:
+    m = method.lower()
+    if m in ("none", "fedavg"):
+        bits = 32 * params
+        return CommRecord("fedavg", params, bits, bits, bits)
+    if m in ("signsgd", "stochsign", "drive", "eden", "fedpm", "post_sm"):
+        exact = params + 32 * max(n_leaves, 1)
+        return CommRecord(m, params, exact, params, 32 * params)
+    if m == "terngrad":
+        bpp = math.log2(3)
+        exact = int(params * bpp) + 32 * max(n_leaves, 1)
+        return CommRecord(m, params, exact, int(params * bpp), 32 * params)
+    if m in ("topk", "fedsparsify"):
+        kept = int(math.ceil(topk_frac * params))
+        idx = max(1, math.ceil(math.log2(max(params, 2))))
+        exact = kept * (32 + idx)
+        return CommRecord(m, params, exact, kept * 32, 32 * params)
+    if m == "qsgd":
+        exact = params * qsgd_bits + 32 * max(n_leaves, 1)
+        return CommRecord(m, params, exact, params * qsgd_bits, 32 * params)
+    raise ValueError(f"unknown method {method!r}")

@@ -1,0 +1,159 @@
+"""Masking strategies: DM, SM, PM, PSM (paper §3.2) with STE backprop.
+
+All functions are elementwise over arrays; pytree variants map them over
+leaves with per-leaf folded keys.  Conventions:
+
+- ``u``  — trainable copy of the model update (the only trainable variable).
+- ``n``  — the predefined random noise G(s) (same shape as ``u``).
+- binary mode: mask m ∈ {0,1}, masked noise û = n·m          (Eq. 6)
+- signed mode: mask m ∈ {-1,1}, masked noise û = n·m         (Eq. 7)
+
+Zero-noise guard: with continuous noise P(n=0)=0, but we still guard the
+division so Bernoulli probabilities are always well defined.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+_EPS = 1e-30
+
+MASK_MODES = ("binary", "signed")
+
+
+def _safe_div(a, b):
+    return a / jnp.where(jnp.abs(b) < _EPS, jnp.where(b < 0, -_EPS, _EPS), b)
+
+
+# ---------------------------------------------------------------------------
+# probabilities (Eq. 6 / Eq. 7)
+# ---------------------------------------------------------------------------
+
+def mask_prob_binary(u: jax.Array, n: jax.Array) -> jax.Array:
+    """P[m=1] = clip(u/n, 0, 1).  Unbiased when u/n ∈ [0, 1]."""
+    return jnp.clip(_safe_div(u, n), 0.0, 1.0)
+
+
+def mask_prob_signed(u: jax.Array, n: jax.Array) -> jax.Array:
+    """P[m=+1] = clip((u+n)/(2n), 0, 1).  Unbiased when u/n ∈ [-1, 1]."""
+    return jnp.clip(_safe_div(u + n, 2.0 * n), 0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# mask sampling
+# ---------------------------------------------------------------------------
+
+def sample_mask(u, n, key, *, mode: str = "binary") -> jax.Array:
+    """Bernoulli-sample the mask (SM); returns {0,1} or {-1,+1} as int8."""
+    if mode == "binary":
+        p = mask_prob_binary(u, n)
+        return jax.random.bernoulli(key, p).astype(jnp.int8)
+    elif mode == "signed":
+        p = mask_prob_signed(u, n)
+        b = jax.random.bernoulli(key, p)
+        return jnp.where(b, jnp.int8(1), jnp.int8(-1))
+    raise ValueError(f"unknown mask mode {mode!r}")
+
+
+def deterministic_mask(u, n, *, mode: str = "binary") -> jax.Array:
+    """DM baseline (paper §3.2.1): sign agreement, no sampling — biased."""
+    if mode == "binary":
+        return (jnp.sign(u) == jnp.sign(n)).astype(jnp.int8)
+    elif mode == "signed":
+        same = jnp.sign(u) * jnp.sign(n) >= 0
+        return jnp.where(same, jnp.int8(1), jnp.int8(-1))
+    raise ValueError(f"unknown mask mode {mode!r}")
+
+
+# ---------------------------------------------------------------------------
+# SM: stochastic masking with straight-through estimator (Eq. 8/9)
+# ---------------------------------------------------------------------------
+
+def stochastic_masking(u, n, key, *, mode: str = "binary") -> jax.Array:
+    """û = S(u, n) = n ⊙ M(u, n) with ∂û/∂u = 1 (STE).
+
+    Forward value is the masked random noise; the gradient flows to ``u``
+    unchanged, per Eq.(9).
+    """
+    m = sample_mask(u, n, key, mode=mode)
+    hat = n * m.astype(u.dtype)
+    return u + jax.lax.stop_gradient(hat - u)
+
+
+def clip_to_noise(u, n, *, mode: str = "binary") -> jax.Array:
+    """ū = clip(u, G(s)) (Eq. 10 text): binary → interval [0, n] (or [n, 0]);
+    signed → [-|n|, |n|]."""
+    if mode == "binary":
+        lo = jnp.minimum(n, 0.0)
+        hi = jnp.maximum(n, 0.0)
+    else:
+        hi = jnp.abs(n)
+        lo = -hi
+    return jnp.clip(u, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# PSM: progressive stochastic masking (Eq. 10, Algorithm 1 lines 15-18)
+# ---------------------------------------------------------------------------
+
+def progressive_stochastic_masking(
+    u, n, key, *, progress, mode: str = "binary"
+) -> jax.Array:
+    """û = (1-P)⊙ū + P⊙S(u, n), P ~ Bern(progress); STE throughout.
+
+    ``progress`` = τ/S ∈ [0,1]; at 1.0 every element is masked noise, which is
+    what the final uplink transmits.
+    """
+    k_sm, k_pm = jax.random.split(key)
+    hat_sm = stochastic_masking(u, n, k_sm, mode=mode)  # carries its own STE
+    bar = clip_to_noise(u, n, mode=mode)                 # differentiable clip
+    P = jax.random.bernoulli(k_pm, progress, jnp.shape(u))
+    return jnp.where(P, hat_sm, bar)
+
+
+def masked_noise_from_mask(n, m):
+    """Reconstruct û = n ⊙ m given a {0,1}/{-1,1} mask (server side)."""
+    return n * m.astype(n.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pytree variants — one folded key per leaf
+# ---------------------------------------------------------------------------
+
+def _tree_keyed_map(fn, key: jax.Array, tree: Pytree, *rest: Pytree) -> Pytree:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    rests = [jax.tree_util.tree_flatten(r)[0] for r in rest]
+    out = []
+    for i, leaf in enumerate(leaves):
+        lk = jax.random.fold_in(key, i)
+        out.append(fn(leaf, *(r[i] for r in rests), lk))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_sample_mask(u: Pytree, n: Pytree, key, *, mode="binary") -> Pytree:
+    return _tree_keyed_map(
+        lambda ul, nl, k: sample_mask(ul, nl, k, mode=mode), key, u, n
+    )
+
+
+def tree_psm(u: Pytree, n: Pytree, key, *, progress, mode="binary") -> Pytree:
+    return _tree_keyed_map(
+        lambda ul, nl, k: progressive_stochastic_masking(
+            ul, nl, k, progress=progress, mode=mode
+        ),
+        key, u, n,
+    )
+
+
+def tree_sm(u: Pytree, n: Pytree, key, *, mode="binary") -> Pytree:
+    return _tree_keyed_map(
+        lambda ul, nl, k: stochastic_masking(ul, nl, k, mode=mode), key, u, n
+    )
+
+
+def tree_masked_noise(n: Pytree, m: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(masked_noise_from_mask, n, m)

@@ -1,0 +1,135 @@
+"""1-bit mask packing — the wire format of the FedMRN uplink.
+
+A mask tensor (values {0,1} or {-1,+1}) is flattened, padded to a multiple of
+32, and packed little-endian into ``uint32`` words.  Signed masks map
+-1 → bit 0, +1 → bit 1 (the paper's identity G⊙m_s = 2G⊙m − G makes the two
+formats interconvertible).  Packing is what makes the collective/uplink cost
+literally 1 bit per parameter — these arrays are what we all-gather across
+the client axis in the sharded round and what the comm model counts.
+
+Pure ``jnp`` (no host round-trip) so it stays inside jit/pjit programs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+WORD = 32
+
+
+def packed_len(n_bits: int) -> int:
+    return (n_bits + WORD - 1) // WORD
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a {0,1}-valued array (any shape) into a 1-D uint32 array.
+
+    bit i of word w corresponds to flat element w*32+i (little-endian).
+    """
+    flat = bits.reshape(-1).astype(jnp.uint32)
+    n = flat.shape[0]
+    pad = (-n) % WORD
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.uint32)])
+    words = flat.reshape(-1, WORD)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.bitwise_or.reduce(words << shifts, axis=1)
+
+
+def unpack_bits(words: jax.Array, n_bits: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`; returns {0,1} int8 of length ``n_bits``."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:n_bits].astype(jnp.int8)
+
+
+def pack_mask(mask: jax.Array, *, mode: str = "binary") -> jax.Array:
+    """Pack a mask tensor ({0,1} binary or {-1,1} signed) to uint32 words."""
+    if mode == "binary":
+        bits = (mask > 0)
+    elif mode == "signed":
+        bits = (mask > 0)  # -1 → 0, +1 → 1
+    else:
+        raise ValueError(f"unknown mask mode {mode!r}")
+    return pack_bits(bits)
+
+
+def unpack_mask(words: jax.Array, n_bits: int, *, mode: str = "binary") -> jax.Array:
+    bits = unpack_bits(words, n_bits)
+    if mode == "binary":
+        return bits
+    return (2 * bits - 1).astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# pytree wire format: one packed uint32 vector for the whole parameter pytree
+# ---------------------------------------------------------------------------
+
+def tree_bit_sizes(tree: Pytree):
+    """Per-leaf element counts (static)."""
+    return [math.prod(jnp.shape(l)) or 1 for l in jax.tree_util.tree_leaves(tree)]
+
+
+def tree_pack(mask_tree: Pytree, *, mode: str = "binary") -> jax.Array:
+    """Concatenate all leaves' bits into one padded uint32 payload."""
+    leaves = jax.tree_util.tree_leaves(mask_tree)
+    flat = jnp.concatenate(
+        [(l > 0).reshape(-1) for l in leaves]
+    )
+    del mode  # both modes store sign bit identically
+    return pack_bits(flat)
+
+
+def tree_unpack(words: jax.Array, like: Pytree, *, mode: str = "binary") -> Pytree:
+    """Unpack one payload into a mask pytree shaped like ``like``."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
+    total = sum(sizes)
+    bits = unpack_bits(words, total)
+    if mode == "signed":
+        bits = (2 * bits - 1).astype(jnp.int8)
+    out, off = [], 0
+    for leaf, sz in zip(leaves, sizes):
+        out.append(bits[off: off + sz].reshape(jnp.shape(leaf)))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def pack_lastdim(bits: jax.Array) -> jax.Array:
+    """Pack {0,1} bits along the LAST dim into uint32 words: (..., D) →
+    (..., ceil(D/32)).
+
+    Unlike :func:`pack_bits` this preserves leading dims — and therefore
+    their shardings — which is what the sharded pod round needs: each model
+    shard packs its own slice, so the packed payload stays model-sharded
+    and the client-axis all-gather moves exactly 1 bit per parameter.
+    """
+    D = bits.shape[-1]
+    pad = (-D) % WORD
+    x = bits.astype(jnp.uint32)
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    x = x.reshape(x.shape[:-1] + (-1, WORD))
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(x << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_lastdim(words: jax.Array, D: int) -> jax.Array:
+    """Inverse of :func:`pack_lastdim`; returns {0,1} int8 (..., D)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(bits.shape[:-2] + (-1,))
+    return flat[..., :D].astype(jnp.int8)
+
+
+def payload_bits(words: jax.Array) -> int:
+    """Wire size of a packed payload in bits."""
+    return int(words.size) * WORD
+
+
+def tree_num_params(tree: Pytree) -> int:
+    return sum(tree_bit_sizes(tree))

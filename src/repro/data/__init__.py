@@ -1,0 +1,6 @@
+"""Synthetic data + federated partitioners."""
+from .synthetic import (  # noqa: F401
+    ImageTask, make_image_task, make_lm_task, make_partition,
+    partition_dirichlet, partition_iid, partition_labels,
+    sample_local_batches,
+)

@@ -1,0 +1,153 @@
+"""Synthetic datasets + federated partitioners (paper §5.1.2).
+
+No datasets ship in this offline container, so the paper's FMNIST/SVHN/
+CIFAR are replaced by controllable synthetic tasks with the same *federated
+structure*: IID, Non-IID-1 (Dirichlet label skew) and Non-IID-2 (each
+client holds only a few labels) — the partitioners are exactly the paper's.
+
+Two task families:
+  - image-like classification: class prototypes + noise on (H, W, C) grids,
+    hard enough that a CNN beats a linear probe but CPU-trainable.
+  - token LM: a deterministic modular-sum language so next-token accuracy
+    is a meaningful, learnable metric for the LM examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ImageTask:
+    x: np.ndarray          # (N, H, W, C) float32
+    y: np.ndarray          # (N,) int32
+    n_classes: int
+
+
+def make_image_task(seed: int, *, n: int = 4000, hw: int = 16,
+                    n_classes: int = 8, noise: float = 0.6) -> ImageTask:
+    rng = np.random.RandomState(seed)
+    protos = rng.randn(n_classes, hw, hw, 1).astype(np.float32)
+    # low-pass the prototypes so convolutions have local structure to find
+    k = np.ones((3, 3)) / 9.0
+    for c in range(n_classes):
+        p = protos[c, :, :, 0]
+        p = np.pad(p, 1, mode="edge")
+        sm = sum(p[i:i + hw, j:j + hw] * k[i, j]
+                 for i in range(3) for j in range(3))
+        protos[c, :, :, 0] = sm
+    y = rng.randint(0, n_classes, size=n).astype(np.int32)
+    x = protos[y] + noise * rng.randn(n, hw, hw, 1).astype(np.float32)
+    return ImageTask(x.astype(np.float32), y, n_classes)
+
+
+def make_lm_task(seed: int, *, n_seq: int = 2048, seq_len: int = 32,
+                 vocab: int = 64) -> Tuple[np.ndarray, int]:
+    """Deterministic 'modular language': t_{i+1} = (t_i + t_{i-1}) % vocab.
+
+    Perfectly learnable; next-token accuracy → 1.0 for a capable model.
+    """
+    rng = np.random.RandomState(seed)
+    toks = np.zeros((n_seq, seq_len), np.int32)
+    toks[:, 0] = rng.randint(0, vocab, n_seq)
+    toks[:, 1] = rng.randint(0, vocab, n_seq)
+    for i in range(2, seq_len):
+        toks[:, i] = (toks[:, i - 1] + toks[:, i - 2]) % vocab
+    return toks, vocab
+
+
+# ---------------------------------------------------------------------------
+# federated partitioners (paper §5.1.2)
+# ---------------------------------------------------------------------------
+
+def partition_iid(seed: int, n: int, num_clients: int) -> List[np.ndarray]:
+    rng = np.random.RandomState(seed)
+    idx = rng.permutation(n)
+    return [np.sort(s) for s in np.array_split(idx, num_clients)]
+
+
+def partition_dirichlet(seed: int, labels: np.ndarray, num_clients: int,
+                        alpha: float = 0.3) -> List[np.ndarray]:
+    """Non-IID-1: per-label client proportions ~ Dir(alpha)."""
+    rng = np.random.RandomState(seed)
+    n_classes = int(labels.max()) + 1
+    out: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(n_classes):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * num_clients)
+        cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for cid, part in enumerate(np.split(idx, cuts)):
+            out[cid].extend(part.tolist())
+    # guarantee every client has at least one sample
+    for cid in range(num_clients):
+        if not out[cid]:
+            donor = max(range(num_clients), key=lambda i: len(out[i]))
+            out[cid].append(out[donor].pop())
+    return [np.sort(np.array(o, dtype=np.int64)) for o in out]
+
+
+def partition_labels(seed: int, labels: np.ndarray, num_clients: int,
+                     labels_per_client: int = 3) -> List[np.ndarray]:
+    """Non-IID-2: each client sees only ``labels_per_client`` labels."""
+    rng = np.random.RandomState(seed)
+    n_classes = int(labels.max()) + 1
+    # deal labels round-robin from repeated shuffles: every client gets
+    # exactly `labels_per_client` distinct labels AND every label is owned
+    # by ≥1 client (so no data is orphaned and no restriction is violated)
+    deck: List[int] = []
+    while len(deck) < num_clients * labels_per_client:
+        deck.extend(rng.permutation(n_classes).tolist())
+    client_labels: List[List[int]] = []
+    for cid in range(num_clients):
+        ls: List[int] = []
+        for l in deck[cid * labels_per_client:]:
+            if l not in ls:
+                ls.append(l)
+            if len(ls) == labels_per_client:
+                break
+        client_labels.append(ls)
+    per_label_clients: Dict[int, List[int]] = {c: [] for c in range(n_classes)}
+    for cid, ls in enumerate(client_labels):
+        for l in ls:
+            per_label_clients[int(l)].append(cid)
+    out: List[List[int]] = [[] for _ in range(num_clients)]
+    for c in range(n_classes):
+        idx = np.where(labels == c)[0]
+        rng.shuffle(idx)
+        owners = per_label_clients[c]
+        if not owners:   # possible when num_clients*k < n_classes
+            owners = [int(rng.randint(num_clients))]
+            client_labels[owners[0]].append(c)
+        for k, part in enumerate(np.array_split(idx, len(owners))):
+            out[owners[k]].extend(part.tolist())
+    return [np.sort(np.array(o, dtype=np.int64)) for o in out]
+
+
+def make_partition(kind: str, seed: int, labels: np.ndarray,
+                   num_clients: int, **kw) -> List[np.ndarray]:
+    if kind == "iid":
+        return partition_iid(seed, len(labels), num_clients)
+    if kind == "noniid1":
+        return partition_dirichlet(seed, labels, num_clients,
+                                   alpha=kw.get("alpha", 0.3))
+    if kind == "noniid2":
+        return partition_labels(seed, labels, num_clients,
+                                labels_per_client=kw.get("labels_per_client", 3))
+    raise ValueError(f"unknown partition kind {kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# fixed-shape local batch sampling (scan-friendly)
+# ---------------------------------------------------------------------------
+
+def sample_local_batches(seed: int, x: np.ndarray, y: np.ndarray,
+                         idx: np.ndarray, *, steps: int, batch: int):
+    """(steps, batch, ...) stacked batches sampled with replacement."""
+    rng = np.random.RandomState(seed)
+    take = rng.choice(idx, size=(steps, batch), replace=True)
+    return jnp.asarray(x[take]), jnp.asarray(y[take])

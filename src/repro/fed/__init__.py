@@ -1,0 +1,2 @@
+"""Federated training engine (simulation + sharded pod modes)."""
+from .simulation import ALGORITHMS, FLConfig, run_federated  # noqa: F401

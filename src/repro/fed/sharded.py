@@ -1,0 +1,168 @@
+"""FedMRN as a single pjit program on the production mesh — the paper's
+protocol mapped onto pod hardware (DESIGN.md §3).
+
+Clients = slices of one mesh axis ('pod' when multi-pod — cross-silo FL
+between pods over the slow inter-pod links — else 'data').  One round:
+
+  1. every client runs S local SGD steps on its update copy ``u`` with PSM
+     masking in the forward pass (vmap over the client axis; XLA partitions
+     the vmapped dim over the client mesh axis, so clients train in
+     parallel, tensor/ZeRO-parallel *within* their slice);
+  2. clients sample final masks and bit-pack them along each leaf's last
+     dim (sharding-preserving) — the packed uint32 payload IS the uplink;
+  3. the payload is all-gathered along the client axis (1 bit/param on the
+     wire — vs 32 for FedAvg's float all-reduce, directly visible in the
+     HLO collective bytes);
+  4. every shard regenerates each client's noise for the slice it owns
+     (seed → noise is deterministic, Eq. 5) and accumulates
+     w += mean_c G(s_c) ⊙ m_c.
+
+``mode='fedavg'`` lowers the float-aggregation baseline for the roofline
+comparison.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..core.masking import tree_psm, tree_sample_mask
+from ..core.noise import NoiseConfig, gen_noise
+from ..core.packing import pack_lastdim, unpack_lastdim
+from ..sharding.rules import param_shardings
+
+Pytree = Any
+
+LOCAL_STEPS = 2          # S for the dry-run round (linear in FLOPs)
+NOISE = NoiseConfig(dist="uniform", alpha=1e-2)
+
+
+def client_axis_of(mesh) -> str:
+    return "pod" if "pod" in mesh.shape else "data"
+
+
+def _shift_spec(ns: NamedSharding, client_axis: str, mesh) -> NamedSharding:
+    """Prepend the client axis to a param sharding (for u/masks/noise)."""
+    spec = list(ns.spec) if ns.spec else []
+    # params in fedmrn mode are zero-sharded over remaining data axes only;
+    # drop any use of the client axis inside the param dims
+    spec = [None if s == client_axis
+            else (tuple(x for x in s if x != client_axis) or None
+                  if isinstance(s, tuple) else s)
+            for s in spec]
+    return NamedSharding(mesh, P(client_axis, *spec))
+
+
+def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
+                         b_shard, *, mode: str = "fedmrn"):
+    """Returns (step_fn, arg_specs, in_shardings) for jit+lower."""
+    cfg = model.cfg
+    client_axis = client_axis_of(mesh)
+    C = mesh.shape[client_axis]
+
+    # params must NOT be zero-sharded over the client axis (each client
+    # needs the full model in its slice) — reshard with fsdp minus client
+    fsdp = tuple(a for a in ("pod", "data")
+                 if a in mesh.shape and a != client_axis)
+    p_shard = param_shardings(
+        p_specs, mesh, num_layers=cfg.num_layers,
+        encoder_layers=cfg.encoder_layers, zero=bool(fsdp), fsdp_axes=fsdp)
+
+    u_specs = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct((C,) + s.shape, jnp.float32)
+        if jnp.issubdtype(s.dtype, jnp.floating) else
+        jax.ShapeDtypeStruct((C,) + s.shape, s.dtype), p_specs)
+    u_shard = jax.tree_util.tree_map(
+        lambda ns: _shift_spec(ns, client_axis, mesh), p_shard)
+
+    # split the global batch into (C, S_local, b_local, ...) local streams
+    def split_batch_spec(s):
+        B = s.shape[0]
+        b_local = max(1, B // (C * LOCAL_STEPS))
+        return jax.ShapeDtypeStruct((C, LOCAL_STEPS, b_local) + s.shape[1:],
+                                    s.dtype)
+
+    fb_specs = {k: split_batch_spec(v) for k, v in batch_specs.items()
+                if k != "positions3"}
+    fb_shard = {k: NamedSharding(mesh, P(client_axis, None, None))
+                for k in fb_specs}
+
+    def one_client_update(u_c, batch_c, client_id, w):
+        """S local steps of SGD on u with PSM (Alg. 1)."""
+        key = jax.random.fold_in(jax.random.key(0), client_id)
+        noise = gen_noise(key, w, NOISE)
+
+        def local_step(u, inp):
+            tau, b = inp
+            progress = (tau + 1.0) / LOCAL_STEPS
+            k = jax.random.fold_in(key, 1000 + tau)
+
+            def fwd(u_):
+                if mode == "fedmrn":
+                    u_hat = tree_psm(u_, noise, k, progress=progress,
+                                     mode="binary")
+                else:
+                    u_hat = u_
+                wc = jax.tree_util.tree_map(
+                    lambda p, uh: (p.astype(jnp.float32) + uh).astype(p.dtype),
+                    w, u_hat)
+                return model.loss_fn(wc, b)
+
+            loss, g = jax.value_and_grad(fwd)(u)
+            u = jax.tree_util.tree_map(lambda a, gi: a - 0.1 * gi, u, g)
+            return u, loss
+
+        taus = jnp.arange(LOCAL_STEPS, dtype=jnp.float32)
+        u_c, losses = jax.lax.scan(local_step, u_c, (taus, batch_c))
+        if mode != "fedmrn":
+            return u_c, losses.mean(), noise
+        m = tree_sample_mask(u_c, noise, jax.random.fold_in(key, 999),
+                             mode="binary")
+        return m, losses.mean(), noise
+
+    def step(w, u, batch):
+        client_ids = jnp.arange(C)
+        out, losses, _ = jax.vmap(
+            lambda u_c, b_c, cid: one_client_update(u_c, b_c, cid, w)
+        )(u, batch, client_ids)
+
+        if mode == "fedmrn":
+            # ---- uplink: bit-packed masks, all-gathered over clients -------
+            payload = jax.tree_util.tree_map(
+                lambda m: pack_lastdim(m > 0), out)
+            payload = jax.tree_util.tree_map(
+                lambda words, ns: jax.lax.with_sharding_constraint(
+                    words, NamedSharding(mesh, P(None, *ns.spec))),
+                payload, p_shard)   # replicate client axis == all-gather
+
+            # ---- server: regen noise per client, Eq. (5) --------------------
+            def srv_body(acc, cid):
+                key = jax.random.fold_in(jax.random.key(0), cid)
+                noise_c = gen_noise(key, w, NOISE)
+                u_hat = jax.tree_util.tree_map(
+                    lambda words, wl, nl: nl * unpack_lastdim(
+                        words[cid], wl.shape[-1]).astype(nl.dtype),
+                    payload, w, noise_c)
+                acc = jax.tree_util.tree_map(jnp.add, acc, u_hat)
+                return acc, None
+
+            acc0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), w)
+            agg, _ = jax.lax.scan(srv_body, acc0, jnp.arange(C))
+        else:
+            # FedAvg: float updates cross the wire (mean over client axis
+            # → XLA all-reduce of f32) — the 32 bpp baseline
+            agg = jax.tree_util.tree_map(
+                lambda uc: jnp.sum(uc.astype(jnp.float32), axis=0), out)
+
+        new_w = jax.tree_util.tree_map(
+            lambda p, a: (p.astype(jnp.float32) + a / C).astype(p.dtype),
+            w, agg)
+        return new_w, losses.mean()
+
+    args = (p_specs, u_specs, fb_specs)
+    in_shardings = (p_shard, u_shard, fb_shard)
+    return step, args, in_shardings

@@ -1,0 +1,6 @@
+"""Pallas TPU kernels (validated on CPU with interpret=True).
+
+psm_mask    fused PSM masking chain (the paper's hot elementwise path)
+bitpack     1-bit mask wire-format pack/unpack
+rwkv6_scan  RWKV6 wkv linear-attention recurrence (chunked, VMEM state)
+"""

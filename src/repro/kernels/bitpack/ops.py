@@ -1,0 +1,15 @@
+"""Public pack/unpack ops with pallas/jnp dispatch."""
+from .bitpack import pack_bits_pallas, unpack_bits_pallas  # noqa: F401
+from .ref import pack_ref, unpack_ref  # noqa: F401
+
+
+def pack(bits, *, use_pallas=True, interpret=True):
+    if use_pallas:
+        return pack_bits_pallas(bits, interpret=interpret)
+    return pack_ref(bits)
+
+
+def unpack(words, *, use_pallas=True, interpret=True):
+    if use_pallas:
+        return unpack_bits_pallas(words, interpret=interpret)
+    return unpack_ref(words)

@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the bitpack kernel (mirrors core.packing)."""
+import jax.numpy as jnp
+
+WORD = 32
+
+
+def pack_ref(bits):
+    R, C = bits.shape
+    W = C // WORD
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    return jnp.sum(bits.astype(jnp.uint32).reshape(R, W, WORD) << shifts,
+                   axis=-1, dtype=jnp.uint32)
+
+
+def unpack_ref(words):
+    R, W = words.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(R, W * WORD).astype(jnp.int8)

@@ -1,0 +1,60 @@
+"""Public op: fused PSM on arbitrary-shaped tensors (+ pytree variant).
+
+``use_pallas=False`` (or non-TPU backends without interpret) falls back to
+the jnp oracle — bitwise-identical by construction (same uniforms).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .psm_mask import psm_fused
+from .ref import psm_ref
+
+_LANE = 128
+
+
+def _to_tiles(x: jax.Array):
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    cols = _LANE
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
+    return flat.reshape(rows, cols), n
+
+
+def psm_apply(u: jax.Array, n: jax.Array, key: jax.Array, progress,
+              *, mode: str = "binary", use_pallas: bool = True,
+              interpret: bool = True):
+    """PSM on a tensor of any shape → (û, mask int8) with u's shape."""
+    shape = u.shape
+    k_sm, k_pm = jax.random.split(key)
+    r_sm = jax.random.uniform(k_sm, shape, jnp.float32)
+    r_pm = jax.random.uniform(k_pm, shape, jnp.float32)
+    if not use_pallas:
+        return psm_ref(u, n, r_sm, r_pm, progress, mode=mode)
+    ut, nelem = _to_tiles(u)
+    nt, _ = _to_tiles(n)
+    rs, _ = _to_tiles(r_sm)
+    rp, _ = _to_tiles(r_pm)
+    uhat, mask = psm_fused(ut, nt, rs, rp, progress, mode=mode,
+                           interpret=interpret)
+    return (uhat.reshape(-1)[:nelem].reshape(shape),
+            mask.reshape(-1)[:nelem].reshape(shape))
+
+
+def psm_apply_tree(u: Any, n: Any, key: jax.Array, progress,
+                   *, mode: str = "binary", **kw):
+    leaves_u, treedef = jax.tree_util.tree_flatten(u)
+    leaves_n = jax.tree_util.tree_leaves(n)
+    outs = []
+    for i, (ul, nl) in enumerate(zip(leaves_u, leaves_n)):
+        outs.append(psm_apply(ul, nl, jax.random.fold_in(key, i),
+                              progress, mode=mode, **kw))
+    uhat = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    mask = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    return uhat, mask

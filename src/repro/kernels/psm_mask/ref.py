@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused PSM kernel (same pre-drawn uniforms)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+_EPS = 1e-30
+
+
+def psm_ref(u, n, r_sm, r_pm, progress, *, mode: str = "binary"):
+    u32 = u.astype(jnp.float32)
+    n32 = n.astype(jnp.float32)
+    safe_n = jnp.where(jnp.abs(n32) < _EPS, _EPS, n32)
+    if mode == "binary":
+        p = jnp.clip(u32 / safe_n, 0.0, 1.0)
+        m = r_sm < p
+        hat_sm = jnp.where(m, n32, 0.0)
+        lo = jnp.minimum(n32, 0.0)
+        hi = jnp.maximum(n32, 0.0)
+    else:
+        p = jnp.clip((u32 + n32) / (2.0 * safe_n), 0.0, 1.0)
+        m = r_sm < p
+        hat_sm = jnp.where(m, n32, -n32)
+        hi = jnp.abs(n32)
+        lo = -hi
+    bar = jnp.clip(u32, lo, hi)
+    gate = r_pm < progress
+    uhat = jnp.where(gate, hat_sm, bar).astype(u.dtype)
+    return uhat, m.astype(jnp.int8)

@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the wkv kernel (re-exports the model's scan)."""
+from ...models.rwkv6 import _wkv_scan
+
+
+def wkv_ref(r, k, v, w, u, s0):
+    import jax.numpy as jnp
+    return _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                     v.astype(jnp.float32), w.astype(jnp.float32), u, s0)

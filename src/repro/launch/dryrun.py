@@ -1,0 +1,233 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture × input shape × mesh) combination against the production
+mesh with ShapeDtypeStruct inputs — no allocation, proving the sharding
+config is coherent and the program fits.
+
+Outputs one JSON record per combination into experiments/dryrun/:
+memory_analysis, cost_analysis, HLO collective byte totals (per §Roofline),
+wall compile time.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
+      --shape train_4k [--multi-pod] [--all] [--fedmrn]
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import INPUT_SHAPES, get_config, list_archs, shape_applicable
+from ..models.registry import (build_model, cache_specs, input_specs,
+                               param_specs, count_params)
+from ..sharding.rules import (batch_shardings, cache_shardings,
+                              param_shardings)
+from ..sharding import hlo_analysis
+from ..sharding.hints import mesh_context
+from .mesh import V5E, make_production_mesh
+from .steps import TrainHParams, step_for_kind
+
+# gradient-accumulation factor per arch for the train shape (activation
+# memory ÷ M; chosen so every arch fits v5e's 16 GB HBM)
+MICROBATCHES = {
+    "qwen3-moe-235b-a22b": 4,
+    "zamba2-1.2b": 4,
+}
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _f32_promotion_bytes(hlo: str, threshold: float = 256e6) -> float:
+    """Bytes of large f32 buffers produced by bf16→f32 converts — the
+    XLA-CPU bf16-promotion artifact (absent on TPU)."""
+    total = 0.0
+    seen = set()
+    for m in re.finditer(
+            r"%([\w.\-]+) = f32\[([0-9,]+)\][^=\n]*"
+            r"(?:convert|wrapped_convert[\w.]*)\(", hlo):
+        name, dims = m.groups()
+        if name in seen:
+            continue
+        seen.add(name)
+        n = 1
+        for d in dims.split(","):
+            n *= int(d)
+        if n * 4 >= threshold:
+            total += n * 4
+    return total
+
+
+def _momentum_specs(params):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), params)
+
+
+def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+              dtype=jnp.bfloat16, fedmrn: bool = False,
+              fed_mode: str = "fedmrn"):
+    """Lower+compile one combination; returns the result record dict."""
+    cfg = get_config(arch)
+    cfg = cfg.__class__(**{**cfg.__dict__, "dtype": dtype})
+    shape = INPUT_SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "params": count_params(cfg),
+           "fedmrn": fedmrn}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    model = build_model(cfg)
+    p_specs = param_specs(cfg)
+    # params in the requested dtype
+    p_specs = jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, dtype if jnp.issubdtype(s.dtype, jnp.floating)
+            else s.dtype), p_specs)
+    # ZeRO-shard params over the data axes in every mode: training shards
+    # grads/opt-state alongside; serving shards weights (gathered at use)
+    p_shard = param_shardings(p_specs, mesh, num_layers=cfg.num_layers,
+                              encoder_layers=cfg.encoder_layers,
+                              zero=True)
+    specs = input_specs(cfg, shape)
+    b_shard = batch_shardings(specs["batch"], mesh)
+
+    if fedmrn:
+        from ..fed.sharded import make_fedmrn_pod_step
+        step, args, in_shardings = make_fedmrn_pod_step(
+            model, mesh, p_specs, p_shard, specs["batch"], b_shard,
+            mode=fed_mode)
+    elif shape.kind == "train":
+        hp = TrainHParams(microbatches=MICROBATCHES.get(arch, 1))
+        step = step_for_kind(model, "train", hp)
+        m_specs = _momentum_specs(p_specs)
+        m_shard = param_shardings(m_specs, mesh, num_layers=cfg.num_layers,
+                                  encoder_layers=cfg.encoder_layers,
+                                  zero=True)
+        args = (p_specs, m_specs, specs["batch"])
+        in_shardings = (p_shard, m_shard, b_shard)
+    elif shape.kind == "prefill":
+        step = step_for_kind(model, "prefill")
+        args = (p_specs, specs["batch"])
+        in_shardings = (p_shard, b_shard)
+    else:  # decode
+        step = step_for_kind(model, "decode")
+        c_specs = specs["cache"]
+        c_shard = cache_shardings(c_specs, mesh, batch=shape.global_batch)
+        args = (p_specs, c_specs, specs["batch"])
+        in_shardings = (p_shard, c_shard, b_shard)
+
+    hint_axes = None
+    if fedmrn:
+        # clients train independently: activation hints must not span the
+        # client axis ('pod' when multi-pod, else 'data')
+        from ..fed.sharded import client_axis_of
+        ca = client_axis_of(mesh)
+        hint_axes = tuple(a for a in ("pod", "data")
+                          if a in mesh.shape and a != ca)
+    t0 = time.time()
+    with mesh_context(mesh, batch_axes=hint_axes):
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    coll = hlo_analysis.analyze(hlo)
+    promo = _f32_promotion_bytes(hlo)
+
+    rec.update(
+        status="ok",
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        n_chips=n_chips,
+        memory={
+            "argument_B": int(ma.argument_size_in_bytes),
+            "output_B": int(ma.output_size_in_bytes),
+            "temp_B": int(ma.temp_size_in_bytes),
+            "total_B": int(ma.argument_size_in_bytes
+                           + ma.temp_size_in_bytes),
+            # XLA-CPU promotes ALL bf16 compute (incl. loop carries) to
+            # f32; on TPU bf16 is native and these copies don't exist.
+            # We report the identified promotion buffers and a
+            # TPU-adjusted fit (see EXPERIMENTS.md §Dry-run caveats).
+            "cpu_f32_promotion_B": int(promo),
+            "fits_v5e": bool(ma.argument_size_in_bytes
+                             + ma.temp_size_in_bytes < V5E.hbm_bytes),
+            "fits_v5e_tpu_adjusted": bool(
+                ma.argument_size_in_bytes + ma.temp_size_in_bytes - promo
+                < V5E.hbm_bytes),
+        },
+        xla_cost={k: float(v) for k, v in ca.items()
+                  if k in ("flops", "bytes accessed", "transcendentals")},
+        hlo_analysis=coll.as_dict(),
+    )
+    return rec
+
+
+def run_and_save(arch, shape_name, *, multi_pod, fedmrn=False,
+                 fed_mode="fedmrn", out_dir=OUT_DIR):
+    tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
+    if fedmrn:
+        tag += f"__{fed_mode}"
+    try:
+        rec = lower_one(arch, shape_name, multi_pod=multi_pod,
+                        fedmrn=fedmrn, fed_mode=fed_mode)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    mem = rec.get("memory", {})
+    print(f"[{rec['status']:7s}] {tag} "
+          f"compile={rec.get('compile_s', '-')}s "
+          f"temp={mem.get('temp_B', 0)/1e9:.2f}GB "
+          f"{rec.get('reason', rec.get('error', ''))[:80]}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fedmrn", action="store_true",
+                    help="lower the FedMRN pod round instead of plain steps")
+    ap.add_argument("--fed-mode", default="fedmrn",
+                    choices=["fedmrn", "fedavg"],
+                    help="pod-round aggregation (fedavg = float baseline)")
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                run_and_save(arch, shape, multi_pod=mp, fedmrn=args.fedmrn,
+                             fed_mode=args.fed_mode)
+
+
+if __name__ == "__main__":
+    main()

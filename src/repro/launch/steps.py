@@ -1,0 +1,125 @@
+"""Step builders: train_step / serve_step factories shared by the dry-run,
+the real train/serve drivers, and the benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..models.registry import Model, build_model
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: float = 3e-3
+    momentum: float = 0.9
+    grad_clip: float = 1.0
+    microbatches: int = 1   # gradient accumulation (activation memory ÷ M)
+
+
+def make_train_step(model: Model, hp: TrainHParams = TrainHParams()
+                    ) -> Callable:
+    """(params, momentum, batch) -> (params, momentum, loss).
+
+    SGD+momentum with fp32 momentum master state — the centralized
+    (non-federated) training path used by train_4k shapes.  With
+    ``microbatches > 1`` the global batch is split and gradients are
+    accumulated in fp32 (same step semantics, activations ÷ M).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(model.loss_fn)(params, batch)
+
+    def train_step(params, momentum, batch):
+        if hp.microbatches > 1:
+            M = hp.microbatches
+
+            def split(x):
+                # positions3 carries batch on dim 1
+                if x.ndim >= 2 and x.shape[0] == 3:
+                    return x.reshape((3, M, x.shape[1] // M) + x.shape[2:]
+                                     ).transpose(1, 0, *range(2, x.ndim + 1))
+                return x.reshape((M, x.shape[0] // M) + x.shape[1:])
+
+            mb = {k: split(v) for k, v in batch.items()}
+
+            def acc_body(carry, b):
+                loss_sum, g_acc = carry
+                loss, grads = grads_of(params, b)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), g_acc, grads)
+                return (loss_sum + loss, g_acc), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss_sum, grads), _ = jax.lax.scan(
+                acc_body, (jnp.float32(0), g0), mb)
+            loss = loss_sum / M
+            grads = jax.tree_util.tree_map(lambda g: g / M, grads)
+        else:
+            loss, grads = grads_of(params, batch)
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree_util.tree_leaves(grads))
+        scale = jnp.minimum(1.0, hp.grad_clip * jax.lax.rsqrt(gsq + 1e-12))
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: hp.momentum * m + scale * g.astype(jnp.float32),
+            momentum, grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: (p.astype(jnp.float32) - hp.lr * m).astype(p.dtype),
+            params, new_m)
+        return new_p, new_m, loss
+
+    return train_step
+
+
+def make_prefill_step(model: Model) -> Callable:
+    """(params, batch) -> last-position logits (serving prefill)."""
+    cfg = model.cfg
+
+    def prefill_step(params, batch):
+        if cfg.arch_type == "audio":
+            from ..models import encdec
+            enc_out = encdec.encode(params, cfg, batch["frontend_embeds"])
+            h = encdec._decoder_hidden(params, cfg, batch["tokens"], enc_out)
+        elif cfg.arch_type == "hybrid":
+            from ..models import zamba2
+            h, _ = zamba2.forward_hidden(params, cfg, batch)
+        else:
+            from ..models import transformer
+            h, _ = transformer.forward_hidden(params, cfg, batch,
+                                              inference=True)
+        last = h[:, -1]
+        if cfg.tie_embeddings:
+            head = params["embed"]["tok"].T
+        else:
+            head = params["head"]
+        return last.astype(jnp.float32) @ head.astype(jnp.float32)
+
+    return prefill_step
+
+
+def make_serve_step(model: Model) -> Callable:
+    """(params, cache, tokens) -> (logits, cache). One decode token."""
+
+    def serve_step(params, cache, batch):
+        return model.decode_step(params, cache, batch["tokens"])
+
+    return serve_step
+
+
+def step_for_kind(model: Model, kind: str,
+                  hp: TrainHParams = TrainHParams()) -> Callable:
+    if kind == "train":
+        return make_train_step(model, hp)
+    if kind == "prefill":
+        return make_prefill_step(model)
+    if kind == "decode":
+        return make_serve_step(model)
+    raise ValueError(kind)

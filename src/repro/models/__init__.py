@@ -1,0 +1,1 @@
+"""Model zoo: functional JAX implementations of the assigned families."""

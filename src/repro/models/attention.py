@@ -1,0 +1,294 @@
+"""GQA attention: chunked (flash-style) prefill/train, cached decode, SWA.
+
+Memory discipline: the (S × T) score matrix is never materialised — we scan
+over query chunks and, inside, over key/value chunks with an online softmax
+(running max / normaliser).  For sliding-window attention the inner loop
+reads only the static band of KV that the window can reach (so SWA costs
+O(S·W), not O(S²)).
+
+Decode uses a (B, T, KV, hd) cache with dynamic-slice writes; SWA decode
+uses a ring buffer of length ``window`` so a 500k-token stream needs only
+O(window) memory — this is what makes h2o-danube eligible for long_500k.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import rope as rope_mod
+from .layers import normal_init, split_keys
+
+Params = Dict[str, Any]
+NEG_INF = -1e30
+
+
+def attn_init(key, d: int, n_heads: int, n_kv: int, head_dim: int,
+              *, bias: bool, dtype) -> Params:
+    kq, kk, kv, ko = split_keys(key, 4)
+    s = d ** -0.5
+    p = {
+        "wq": normal_init(kq, (d, n_heads * head_dim), s, dtype),
+        "wk": normal_init(kk, (d, n_kv * head_dim), s, dtype),
+        "wv": normal_init(kv, (d, n_kv * head_dim), s, dtype),
+        "wo": normal_init(ko, (n_heads * head_dim, d),
+                          (n_heads * head_dim) ** -0.5, dtype),
+    }
+    if bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv * head_dim,), dtype)
+    return p
+
+
+def _project_qkv(p, xq, xkv, n_heads, n_kv, head_dim):
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    B, S = xq.shape[:2]
+    T = xkv.shape[1]
+    return (q.reshape(B, S, n_heads, head_dim),
+            k.reshape(B, T, n_kv, head_dim),
+            v.reshape(B, T, n_kv, head_dim))
+
+
+def _chunk_attend(q, k, v, mask_bias):
+    """One (q-chunk × kv-chunk) tile. q:(B,Cq,H,hd) k/v:(B,Ck,KV,hd).
+
+    KV heads are expanded to the full H inside the tile (a local gather —
+    Ck-sized, so the ×G memory cost is per-tile only).  This keeps every
+    einsum partitionable on the H dim, which is how the tile compute
+    shards over the 'model' axis (head-parallel attention).
+
+    Returns unnormalised (acc, m, l) pieces for online softmax merge.
+    mask_bias: (Cq, Ck) additive 0/-inf.
+    """
+    B, Cq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bchd->bhqc", q, k) / math.sqrt(hd)
+    s = s.astype(jnp.float32) + mask_bias[None, None]
+    m = jnp.max(s, axis=-1)                                   # (B,H,Cq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum("bhqc,bchd->bhqd", p.astype(v.dtype), v)
+    return acc.astype(jnp.float32), m, l
+
+
+def _merge(acc, m, l, acc2, m2, l2):
+    m_new = jnp.maximum(m, m2)
+    a1 = jnp.exp(m - m_new)
+    a2 = jnp.exp(m2 - m_new)
+    return (acc * a1[..., None] + acc2 * a2[..., None],
+            m_new, l * a1 + l2 * a2)
+
+
+def chunked_attention(
+    q: jax.Array, k: jax.Array, v: jax.Array,
+    *, causal: bool, window: int = 0,
+    q_chunk: int = 512, kv_chunk: int = 512,
+    q_offset: int = 0,
+) -> jax.Array:
+    """Flash-style attention. q:(B,S,H,hd), k/v:(B,T,KV,hd) → (B,S,H,hd).
+
+    ``q_offset`` is the absolute position of q[0] relative to k[0] (for
+    cross-chunk causal masking during chunked prefill of a cache).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    q_chunk = min(q_chunk, S)
+    kv_chunk = min(kv_chunk, T)
+    # pad to multiples
+    Sp = (S + q_chunk - 1) // q_chunk * q_chunk
+    Tp = (T + kv_chunk - 1) // kv_chunk * kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nq, nk = Sp // q_chunk, Tp // kv_chunk
+    G = H // KV
+
+    from ..sharding import hints
+    msize = hints.model_axis_size()
+    # head-parallel when H divides the model axis; otherwise shard the
+    # q-chunk (sequence-parallel) — covers 20-head/12-head archs
+    if H % max(msize, 1) == 0:
+        q_dims = {1: "batch", 3: "model"}
+        k_dims = {1: "batch", 3: "model"} if KV % max(msize, 1) == 0 \
+            else {1: "batch"}
+    else:
+        q_dims = {1: "batch", 2: "model"}
+        k_dims = {1: "batch"}
+    qs = hints.hint_spec(
+        qp.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 2, 3, 4), q_dims)
+    ks = hints.hint_spec(
+        kp.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4), k_dims)
+    vs = hints.hint_spec(
+        vp.reshape(B, nk, kv_chunk, KV, hd).transpose(1, 0, 2, 3, 4), k_dims)
+
+    q_pos_base = jnp.arange(q_chunk)
+    k_pos_base = jnp.arange(kv_chunk)
+
+    def q_body(_, qi_and_idx):
+        qi, iq = qi_and_idx
+        q_pos = q_offset + iq * q_chunk + q_pos_base       # (Cq,)
+
+        # checkpoint each (q-chunk × kv-chunk) tile: the backward pass
+        # recomputes the tile's score/softmax instead of saving a
+        # (B,KV,G,Cq,Ck) f32 tensor per tile (which is ~GBs per layer at
+        # 4k-32k sequence lengths — the classic flash-attention trade)
+        @jax.checkpoint
+        def kv_body(carry, kv_and_idx):
+            acc, m, l = carry
+            kj, vj, jk = kv_and_idx
+            k_pos = jk * kv_chunk + k_pos_base             # (Ck,)
+            bias = jnp.zeros((q_chunk, kv_chunk), jnp.float32)
+            if causal:
+                bias = jnp.where(k_pos[None, :] > q_pos[:, None],
+                                 NEG_INF, bias)
+            if window:
+                bias = jnp.where(k_pos[None, :] <= q_pos[:, None] - window,
+                                 NEG_INF, bias)
+            bias = jnp.where((k_pos[None, :] >= T), NEG_INF, bias)  # pad
+            acc2, m2, l2 = _chunk_attend(qi, kj, vj, bias)
+            return _merge(acc, m, l, acc2, m2, l2), None
+
+        acc0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_body, (acc0, m0, l0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-37)
+        out = out.astype(q.dtype)
+        hdim = {0: "batch", 1: "model"} if H % max(msize, 1) == 0 \
+            else {0: "batch", 2: "model"}
+        return None, hints.hint_spec(out, hdim)
+
+    _, outs = jax.lax.scan(q_body, None, (qs, jnp.arange(nq)))
+    # outs: (nq, B, H, Cq, hd) → (B, S, H, hd)
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(B, Sp, H, hd)
+    return out[:, :S]
+
+
+# ---------------------------------------------------------------------------
+# full attention module (projections + rope + chunked core)
+# ---------------------------------------------------------------------------
+
+def attention_fwd(
+    p: Params, x: jax.Array, *,
+    n_heads: int, n_kv: int, head_dim: int,
+    positions: Optional[jax.Array] = None,      # (B,S) or (3,B,S) for mrope
+    rope_theta: float = 1e4, use_mrope: bool = False,
+    causal: bool = True, window: int = 0,
+    x_kv: Optional[jax.Array] = None,           # cross-attention source
+    kv_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    xkv = x if x_kv is None else x_kv
+    q, k, v = _project_qkv(p, x, xkv, n_heads, n_kv, head_dim)
+    if positions is not None:
+        if use_mrope:
+            q = rope_mod.apply_mrope(q, positions, theta=rope_theta)
+            k = rope_mod.apply_mrope(
+                k, positions if kv_positions is None else kv_positions,
+                theta=rope_theta)
+        else:
+            q = rope_mod.apply_rope(q, positions, theta=rope_theta)
+            kp = positions if kv_positions is None else kv_positions
+            k = rope_mod.apply_rope(k, kp, theta=rope_theta)
+    out = chunked_attention(q, k, v, causal=causal, window=window)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, n_heads * head_dim) @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# decode path with KV cache (ring buffer when window > 0)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array        # (B, T, KV, hd); T = window if SWA else max_len
+    v: jax.Array
+    index: jax.Array    # scalar int32: absolute number of tokens seen
+
+
+def init_kv_cache(batch: int, max_len: int, n_kv: int, head_dim: int,
+                  *, window: int = 0, dtype=jnp.bfloat16) -> KVCache:
+    T = min(window, max_len) if window else max_len
+    z = jnp.zeros((batch, T, n_kv, head_dim), dtype)
+    return KVCache(z, z, jnp.zeros((), jnp.int32))
+
+
+def decode_attention(
+    p: Params, x: jax.Array, cache: KVCache, *,
+    n_heads: int, n_kv: int, head_dim: int,
+    rope_theta: float = 1e4, use_mrope: bool = False,
+    window: int = 0,
+) -> Tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, d)."""
+    B = x.shape[0]
+    q, k, v = _project_qkv(p, x, x, n_heads, n_kv, head_dim)
+    pos = jnp.full((B, 1), cache.index, jnp.int32)
+    if use_mrope:
+        pos3 = jnp.broadcast_to(pos, (3, B, 1))
+        q = rope_mod.apply_mrope(q, pos3, theta=rope_theta)
+        k = rope_mod.apply_mrope(k, pos3, theta=rope_theta)
+    else:
+        q = rope_mod.apply_rope(q, pos, theta=rope_theta)
+        k = rope_mod.apply_rope(k, pos, theta=rope_theta)
+
+    T = cache.k.shape[1]
+    slot = (cache.index % T).astype(jnp.int32) if window else cache.index
+    new_k = jax.lax.dynamic_update_slice(cache.k, k, (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v, (0, slot, 0, 0))
+
+    G = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, G, head_dim)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, new_k) / math.sqrt(head_dim)
+    t_idx = jnp.arange(T)
+    if window:
+        # ring buffer: every slot written so far is within the window
+        written = jnp.minimum(cache.index + 1, T)
+        valid = t_idx < written
+    else:
+        valid = t_idx <= cache.index
+    s = jnp.where(valid[None, None, None, None, :], s.astype(jnp.float32),
+                  NEG_INF)
+    a = jax.nn.softmax(s, axis=-1).astype(new_v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", a, new_v)
+    out = out.reshape(B, 1, n_heads * head_dim) @ p["wo"]
+    return out, KVCache(new_k, new_v, cache.index + 1)
+
+
+# ---------------------------------------------------------------------------
+# cross-attention decode: static precomputed encoder KV
+# ---------------------------------------------------------------------------
+
+def precompute_cross_kv(p: Params, enc_out: jax.Array, *,
+                        n_kv: int, head_dim: int):
+    k = (enc_out @ p["wk"])
+    v = (enc_out @ p["wv"])
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    B, T = enc_out.shape[:2]
+    return (k.reshape(B, T, n_kv, head_dim), v.reshape(B, T, n_kv, head_dim))
+
+
+def cross_attention_decode(p: Params, x: jax.Array, cross_kv, *,
+                           n_heads: int, n_kv: int, head_dim: int):
+    B = x.shape[0]
+    q = (x @ p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    q = q.reshape(B, 1, n_heads, head_dim)
+    k, v = cross_kv
+    G = n_heads // n_kv
+    qg = q.reshape(B, 1, n_kv, G, head_dim)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k) / math.sqrt(head_dim)
+    a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", a, v)
+    return out.reshape(B, 1, n_heads * head_dim) @ p["wo"]

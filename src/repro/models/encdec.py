@@ -1,0 +1,186 @@
+"""Encoder–decoder transformer (seamless-m4t style, audio → text).
+
+The audio frontend (mel + conformer conv) is a STUB per the assignment:
+``input_specs`` provides precomputed frame embeddings (B, S_enc, d).
+We implement the full transformer: bidirectional encoder over frames,
+causal decoder with cross-attention, chunked-softmax LM loss, and a decode
+path whose cache = per-layer self-attn KV + precomputed cross-attn KV.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import hints
+from . import attention as attn_mod
+from .layers import (chunked_xent, embed, embedding_init, gelu_mlp,
+                     gelu_mlp_init, normal_init, rmsnorm, rmsnorm_init,
+                     split_keys)
+
+Params = Dict[str, Any]
+
+
+def _enc_layer_init(key, cfg: ModelConfig) -> Params:
+    ka, km = split_keys(key, 2)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "attn": attn_mod.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   bias=True, dtype=cfg.dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def _dec_layer_init(key, cfg: ModelConfig) -> Params:
+    ka, kx, km = split_keys(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "self": attn_mod.attn_init(ka, cfg.d_model, cfg.num_heads,
+                                   cfg.num_kv_heads, cfg.head_dim,
+                                   bias=True, dtype=cfg.dtype),
+        "ln_x": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "cross": attn_mod.attn_init(kx, cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.head_dim,
+                                    bias=True, dtype=cfg.dtype),
+        "ln2": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "mlp": gelu_mlp_init(km, cfg.d_model, cfg.d_ff, cfg.dtype),
+    }
+
+
+def model_init(key, cfg: ModelConfig) -> Params:
+    ke, kenc, kdec, kh = split_keys(key, 4)
+    enc_keys = jnp.stack(split_keys(kenc, cfg.encoder_layers))
+    dec_keys = jnp.stack(split_keys(kdec, cfg.num_layers))
+    return {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "enc": jax.vmap(lambda k: _enc_layer_init(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_layer_init(k, cfg))(dec_keys),
+        "enc_ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "final_ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "head": normal_init(kh, (cfg.d_model, cfg.vocab_size),
+                            cfg.d_model ** -0.5, cfg.dtype),
+    }
+
+
+def encode(p: Params, cfg: ModelConfig, frames: jax.Array) -> jax.Array:
+    """frames: (B, S_enc, d) stub frontend embeddings → encoder states."""
+    B, S = frames.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(h, lp):
+        h = hints.hint_spec(h, {0: "batch", 2: "model"})
+        a = attn_mod.attention_fwd(
+            lp["attn"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=False)
+        h = h + a
+        h = h + gelu_mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    h, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        frames.astype(cfg.dtype), p["enc"])
+    return rmsnorm(p["enc_ln"], h, cfg.norm_eps)
+
+
+def _decoder_hidden(p, cfg, tokens, enc_out):
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    Se = enc_out.shape[1]
+    kv_positions = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    h = embed(p["embed"], tokens)
+
+    def body(h, lp):
+        h = hints.hint_spec(h, {0: "batch", 2: "model"})
+        a = attn_mod.attention_fwd(
+            lp["self"], rmsnorm(lp["ln1"], h, cfg.norm_eps),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=positions,
+            rope_theta=cfg.rope_theta, causal=True)
+        h = h + a
+        c = attn_mod.attention_fwd(
+            lp["cross"], rmsnorm(lp["ln_x"], h, cfg.norm_eps),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, positions=None, causal=False,
+            x_kv=enc_out)
+        h = h + c
+        h = h + gelu_mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, None
+
+    h, _ = jax.lax.scan(
+        jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable),
+        h, p["dec"])
+    return rmsnorm(p["final_ln"], h, cfg.norm_eps)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch) -> jax.Array:
+    enc_out = encode(p, cfg, batch["frontend_embeds"])
+    h = _decoder_hidden(p, cfg, batch["tokens"], enc_out)
+    return chunked_xent(h, p["head"], batch["labels"],
+                        softcap=cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_k: jax.Array    # (L, B, T, KV, hd)
+    self_v: jax.Array
+    cross_k: jax.Array   # (L, B, S_enc, KV, hd) — precomputed, static
+    cross_v: jax.Array
+    step: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, enc_len: int | None = None) -> EncDecCache:
+    L = cfg.num_layers
+    enc_len = enc_len or max_len
+    z = jnp.zeros((L, batch, max_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    zx = jnp.zeros((L, batch, enc_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return EncDecCache(z, z, zx, zx, jnp.zeros((), jnp.int32))
+
+
+def prime_cross_cache(p: Params, cfg: ModelConfig, cache: EncDecCache,
+                      enc_out: jax.Array) -> EncDecCache:
+    def one(lp):
+        return attn_mod.precompute_cross_kv(
+            lp["cross"], enc_out, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim)
+
+    ck, cv = jax.vmap(one)(p["dec"])
+    return cache._replace(cross_k=ck, cross_v=cv)
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: EncDecCache,
+                tokens: jax.Array):
+    h = embed(p["embed"], tokens)
+
+    def body(h, inp):
+        lp, (sk, sv, ck, cv) = inp
+        lc = attn_mod.KVCache(sk, sv, cache.step)
+        a, nc = attn_mod.decode_attention(
+            lp["self"], rmsnorm(lp["ln1"], h, cfg.norm_eps), lc,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta)
+        h = h + a
+        c = attn_mod.cross_attention_decode(
+            lp["cross"], rmsnorm(lp["ln_x"], h, cfg.norm_eps), (ck, cv),
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim)
+        h = h + c
+        h = h + gelu_mlp(lp["mlp"], rmsnorm(lp["ln2"], h, cfg.norm_eps))
+        return h, (nc.k, nc.v)
+
+    h, (nk, nv) = jax.lax.scan(
+        body, h, (p["dec"],
+                  (cache.self_k, cache.self_v, cache.cross_k, cache.cross_v)))
+    h = rmsnorm(p["final_ln"], h, cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ p["head"].astype(jnp.float32)
+    return logits, cache._replace(self_k=nk, self_v=nv,
+                                  step=cache.step + 1)

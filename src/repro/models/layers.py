@@ -1,0 +1,144 @@
+"""Shared building blocks: norms, MLPs, embeddings, initialisers.
+
+All modules are (init, apply) pairs of pure functions over dict pytrees.
+Weights are stored in float32 or bf16 per ``cfg.dtype``; math runs in the
+param dtype with float32 norm accumulation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, Any]
+
+
+def normal_init(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+def split_keys(key, n):
+    return list(jax.random.split(key, n))
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d, dtype):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP (llama-family) and GELU MLP (encoder stacks)
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d, f, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    s = d ** -0.5
+    return {
+        "gate": normal_init(k1, (d, f), s, dtype),
+        "up": normal_init(k2, (d, f), s, dtype),
+        "down": normal_init(k3, (f, d), f ** -0.5, dtype),
+    }
+
+
+def swiglu(p: Params, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["gate"])
+    return (g * (x @ p["up"])) @ p["down"]
+
+
+def gelu_mlp_init(key, d, f, dtype):
+    k1, k2 = split_keys(key, 2)
+    return {
+        "in": normal_init(k1, (d, f), d ** -0.5, dtype),
+        "out": normal_init(k2, (f, d), f ** -0.5, dtype),
+    }
+
+
+def gelu_mlp(p: Params, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["in"]) @ p["out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head with seq-chunked softmax cross-entropy.
+#
+# The chunked loss never materialises the full (B, S, V) logits tensor —
+# essential for 150k-vocab archs at 32k seq (a single full logits tensor
+# would be tens of GB per device).
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab, d, dtype):
+    return {"tok": normal_init(key, (vocab, d), 0.02, dtype)}
+
+
+def embed(p: Params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def lm_logits(emb_or_head: jax.Array, h: jax.Array,
+              softcap: float = 0.0) -> jax.Array:
+    logits = h @ emb_or_head
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+def chunked_xent(h: jax.Array, head: jax.Array, labels: jax.Array,
+                 *, chunk: int = 128, softcap: float = 0.0) -> jax.Array:
+    """Mean token cross-entropy, scanning over sequence chunks.
+
+    h: (B, S, D); head: (D, V); labels: (B, S) int32. S % chunk == 0 is
+    arranged by padding upstream.
+    """
+    B, S, D = h.shape
+    if S % chunk:
+        pad = chunk - S % chunk
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    n_chunks = S // chunk
+    from ..sharding import hints
+    hc = hints.hint_batch(
+        h.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3), bdim=1)
+    lc = hints.hint_batch(
+        labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2), bdim=1)
+
+    # checkpointed: the backward recomputes the (B, chunk, V) logits of
+    # each chunk rather than saving them (fp32 logits at 150k vocab are
+    # ~4 GB per chunk — saving all chunks would dominate device memory)
+    @jax.checkpoint
+    def body(acc, inp):
+        hx, lx = inp
+        logits = lm_logits(head, hx.astype(jnp.float32), softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lx, 0)[..., None], axis=-1)[..., 0]
+        valid = (lx >= 0).astype(jnp.float32)
+        nll = (lse - gold) * valid
+        return (acc[0] + nll.sum(), acc[1] + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)),
+                                 (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)

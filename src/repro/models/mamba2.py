@@ -1,0 +1,190 @@
+"""Mamba2 (SSD) block — selective state-space with scalar per-head decay.
+
+Faithful to the Mamba2 parameterisation (in_proj → [z | x | B | C | dt],
+depthwise causal conv on [x|B|C], softplus dt, A = -exp(A_log) scalar per
+head, SSM recurrence h ← exp(dt·A)·h + dt·(B ⊗ x), y = C·h + D·x, gated
+RMSNorm, out_proj), with n_groups = 1.
+
+Sequence processing is a `lax.scan` over time (the Pallas `mamba2_ssd`
+kernel implements the chunked form for TPU; this pure-JAX path is the
+oracle and the dry-run lowering).  Decode carries (conv_state, ssm_state) — O(1)
+per token, which is what qualifies SSM archs for long_500k.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import normal_init, rmsnorm, rmsnorm_init, split_keys
+
+Params = Dict[str, Any]
+
+
+class Mamba2Dims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    d_conv: int
+
+    @property
+    def conv_channels(self):
+        return self.d_inner + 2 * self.d_state
+
+
+def dims(d_model: int, *, state: int, head_dim: int = 64,
+         expand: int = 2, d_conv: int = 4) -> Mamba2Dims:
+    d_inner = expand * d_model
+    return Mamba2Dims(d_model, d_inner, d_inner // head_dim, head_dim,
+                      state, d_conv)
+
+
+def mamba2_init(key, dm: Mamba2Dims, dtype) -> Params:
+    kin, kconv, kdt, kout, knorm = split_keys(key, 5)
+    d, di, H = dm.d_model, dm.d_inner, dm.n_heads
+    proj_out = 2 * di + 2 * dm.d_state + H
+    return {
+        "in_proj": normal_init(kin, (d, proj_out), d ** -0.5, dtype),
+        "conv_w": normal_init(kconv, (dm.d_conv, dm.conv_channels),
+                              dm.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((dm.conv_channels,), dtype),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "norm": rmsnorm_init(di, dtype),
+        "out_proj": normal_init(kout, (di, d), di ** -0.5, dtype),
+    }
+
+
+def _split_proj(zxbcdt, dm: Mamba2Dims):
+    di, ds, H = dm.d_inner, dm.d_state, dm.n_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    B = zxbcdt[..., 2 * di:2 * di + ds]
+    C = zxbcdt[..., 2 * di + ds:2 * di + 2 * ds]
+    dt = zxbcdt[..., 2 * di + 2 * ds:]
+    return z, x, B, C, dt
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv. xbc: (B, S, C); w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _ssm_step(h, inp, A, dm: Mamba2Dims):
+    """h: (B, H, hd, N). One recurrence step."""
+    x_t, B_t, C_t, dt_t = inp       # (B,di) (B,N) (B,N) (B,H)
+    B_, H, hd, N = h.shape
+    xh = x_t.reshape(B_, H, hd)
+    decay = jnp.exp(dt_t * A)[:, :, None, None]           # (B,H,1,1)
+    dBx = (dt_t[:, :, None, None] * xh[..., None] *
+           B_t[:, None, None, :])                          # (B,H,hd,N)
+    h = decay * h + dBx
+    y = jnp.einsum("bhpn,bn->bhp", h, C_t)                 # (B,H,hd)
+    return h, y
+
+
+def mamba2_fwd(p: Params, x: jax.Array, dm: Mamba2Dims,
+               eps: float = 1e-5) -> jax.Array:
+    """x: (B, S, d) → (B, S, d). Full-sequence scan."""
+    from ..sharding import hints
+    Bb, S, d = x.shape
+    zxbcdt = hints.hint_spec(x @ p["in_proj"], {0: "batch", 2: "model"})
+    z, xs, Bs, Cs, dt_raw = _split_proj(zxbcdt, dm)
+    xbc = jnp.concatenate([xs, Bs, Cs], axis=-1)
+    xbc = hints.hint_spec(_causal_conv(xbc, p["conv_w"], p["conv_b"]),
+                          {0: "batch", 2: "model"})
+    xs = xbc[..., :dm.d_inner]
+    Bs = xbc[..., dm.d_inner:dm.d_inner + dm.d_state]
+    Cs = xbc[..., dm.d_inner + dm.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                # (H,)
+
+    out_dtype = x.dtype
+
+    def step(h, inp):
+        x_t, B_t, C_t, dt_t = inp
+        h, y = _ssm_step(
+            h, (x_t.astype(jnp.float32), B_t.astype(jnp.float32),
+                C_t.astype(jnp.float32), dt_t), A, dm)
+        return h, y.astype(out_dtype)   # stream outputs at model precision
+
+    h0 = jnp.zeros((Bb, dm.n_heads, dm.head_dim, dm.d_state), jnp.float32)
+    # stream xs in bf16 (largest panel); upcast per step — halves the
+    # sequence-resident buffers without touching state precision
+    seq = (hints.hint_spec(xs.transpose(1, 0, 2), {1: "batch", 2: "model"}),
+           Bs.transpose(1, 0, 2),
+           Cs.transpose(1, 0, 2),
+           dt.transpose(1, 0, 2))
+
+    # two-level scan with chunk-checkpointing: a flat scan's backward saves
+    # the (S, B, H, hd, N) state trajectory — ~68 GB/device at 4k seq.
+    # Chunking saves only chunk-boundary states and recomputes inside.
+    chunk = 64
+    if S % chunk == 0 and S > chunk:
+        nseq = jax.tree_util.tree_map(
+            lambda t: t.reshape((S // chunk, chunk) + t.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(h, inp):
+            return jax.lax.scan(step, h, inp)
+
+        _, ys = jax.lax.scan(chunk_body, h0, nseq)      # (S/c, c, B, H, hd)
+        ys = ys.reshape((S,) + ys.shape[2:])
+    else:
+        _, ys = jax.lax.scan(step, h0, seq)             # (S,B,H,hd)
+    y = ys.transpose(1, 0, 2, 3).astype(jnp.float32)
+    y = y + p["D"][None, None, :, None] * xs.reshape(
+        Bb, S, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    y = y.reshape(Bb, S, dm.d_inner).astype(x.dtype)
+    y = hints.hint_spec(y, {0: "batch", 2: "model"})
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), eps)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# decode: O(1) state per token
+# ---------------------------------------------------------------------------
+
+class Mamba2Cache(NamedTuple):
+    conv: jax.Array   # (B, K-1, conv_channels) last inputs
+    ssm: jax.Array    # (B, H, hd, N) float32
+
+
+def init_mamba2_cache(batch: int, dm: Mamba2Dims, dtype=jnp.bfloat16):
+    return Mamba2Cache(
+        jnp.zeros((batch, dm.d_conv - 1, dm.conv_channels), dtype),
+        jnp.zeros((batch, dm.n_heads, dm.head_dim, dm.d_state), jnp.float32),
+    )
+
+
+def mamba2_decode(p: Params, x: jax.Array, cache: Mamba2Cache,
+                  dm: Mamba2Dims, eps: float = 1e-5):
+    """x: (B, 1, d) → (B, 1, d), updated cache."""
+    Bb = x.shape[0]
+    zxbcdt = x[:, 0] @ p["in_proj"]
+    z, xs, Bs, Cs, dt_raw = _split_proj(zxbcdt, dm)
+    xbc_t = jnp.concatenate([xs, Bs, Cs], axis=-1)          # (B, C)
+    window = jnp.concatenate([cache.conv, xbc_t[:, None]], axis=1)
+    conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[..., :dm.d_inner]
+    Bs = conv_out[..., dm.d_inner:dm.d_inner + dm.d_state]
+    Cs = conv_out[..., dm.d_inner + dm.d_state:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    h, y = _ssm_step(cache.ssm,
+                     (xs.astype(jnp.float32), Bs.astype(jnp.float32),
+                      Cs.astype(jnp.float32), dt), A, dm)
+    y = y + p["D"][None, :, None] * xs.reshape(
+        Bb, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    y = y.reshape(Bb, 1, dm.d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z[:, None]), eps)
+    out = y @ p["out_proj"]
+    return out, Mamba2Cache(window[:, 1:], h)

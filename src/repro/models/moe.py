@@ -1,0 +1,231 @@
+"""Mixture-of-Experts layer: top-k router + capacity-based scatter dispatch.
+
+TPU adaptation (DESIGN.md §3): GShard/Switch fixed-capacity formulation —
+tokens are scatter-added into (E, C, d) buffers, experts run batched
+einsums (dense, MXU-aligned), outputs gather back with router weights.
+
+Sharding (§Perf iterations 1-3, EXPERIMENTS.md): the production path is a
+FULLY-MANUAL shard_map over (data [+pod], model):
+  - tokens are manual over the data axes (each shard routes/dispatches its
+    own tokens — zero dispatch communication);
+  - experts are manual over 'model' (each shard owns E/16 experts and
+    dispatches only tokens routed to THEM);
+  - ZeRO-sharded expert weights are all-gathered over 'data' explicitly
+    (the unavoidable ZeRO gather);
+  - the combine is ONE explicit psum over 'model' per layer.
+Earlier auto-'model' versions let XLA partition the combine gather and it
+emitted a full (Tb, d) all-reduce PER ASSIGNMENT k (8×/layer, 4.5 TB/step
+at qwen3-235b scale); moving the combine outside the shard_map was worse
+(boundary materialisation, 14.6 TB).  The manual psum-once design is the
+standard expert-parallel schedule.
+
+FLOP-faithful: compute is E·C·d·f with C ≈ tokens·top_k/E·capacity_factor,
+proportional to *active* experts only.  Overflow drops (standard).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding import hints
+from .layers import normal_init, split_keys
+
+Params = Dict[str, Any]
+
+
+def moe_init(key, d: int, f: int, n_experts: int, dtype) -> Params:
+    kr, kg, ku, kd = split_keys(key, 4)
+    s = d ** -0.5
+    return {
+        "router": normal_init(kr, (d, n_experts), s, jnp.float32),
+        "gate": normal_init(kg, (n_experts, d, f), s, dtype),
+        "up": normal_init(ku, (n_experts, d, f), s, dtype),
+        "down": normal_init(kd, (n_experts, f, d), f ** -0.5, dtype),
+    }
+
+
+def capacity(n_tokens: int, n_experts: int, top_k: int,
+             factor: float) -> int:
+    c = int(math.ceil(n_tokens * top_k / n_experts * factor))
+    return max(8, -(-c // 8) * 8)   # round up to 8 for TPU lane alignment
+
+
+def _route_block(xb, router, top_k):
+    """xb: (Tb, d) → (gate_vals, expert_ids, probs)."""
+    logits = xb.astype(jnp.float32) @ router
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, top_k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    return gate_vals, expert_ids, probs
+
+
+def _dispatch_top1(xb, ids, E, C, dtype, id_offset=0):
+    """Scatter the k-th assignment into a local (E, C, d) buffer.
+
+    ``id_offset``/E: in expert-parallel manual mode, only experts
+    [id_offset, id_offset+E) are local; other tokens are masked out.
+    """
+    Tb, d = xb.shape
+    local = ids - id_offset
+    owned = (local >= 0) & (local < E)
+    safe = jnp.where(owned, local, 0)
+    onehot = jax.nn.one_hot(safe, E, dtype=jnp.int32) * owned[:, None]
+    pos_in_expert = jnp.cumsum(onehot, axis=0) - onehot
+    pos = jnp.take_along_axis(pos_in_expert, safe[:, None], 1)[:, 0]
+    keep = owned & (pos < C)
+    dest = safe * C + jnp.minimum(pos, C - 1)
+    contrib = jnp.where(keep, 1.0, 0.0).astype(dtype)
+    buf = jnp.zeros((E * C, d), dtype)
+    buf = buf.at[dest].add(xb * contrib[:, None])
+    return buf.reshape(E, C, d), dest, contrib
+
+
+def _moe_manual(xb, router, gate, up, down, *, top_k, C1, aux_weight,
+                batch_axes, wdtype, E, zero_axes):
+    """Fully-manual expert-parallel MoE (inside shard_map over data+model).
+
+    xb: (T_local, d) — this data shard's tokens, replicated over 'model'.
+    gate/up/down: local (E/16, d, f[/zero]) slices; router: local slice
+    over its zero axis (re-gathered below).
+    """
+    gate = gate.astype(wdtype)
+    up = up.astype(wdtype)
+    down = down.astype(wdtype)
+    # ---- ZeRO re-gather of weights over the data axes (explicit) ----------
+    if zero_axes:
+        ax = zero_axes if len(zero_axes) > 1 else zero_axes[0]
+        router = jax.lax.all_gather(router, ax, axis=1, tiled=True)
+        gate = jax.lax.all_gather(gate, ax, axis=2, tiled=True)
+        up = jax.lax.all_gather(up, ax, axis=2, tiled=True)
+        down = jax.lax.all_gather(down, ax, axis=1, tiled=True)
+    router = router.astype(jnp.float32)
+    E_loc = gate.shape[0]
+    eo = jax.lax.axis_index("model") * E_loc
+    Tb, d = xb.shape
+    dtype = xb.dtype
+
+    gate_vals, expert_ids, probs = _route_block(xb, router, top_k)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (Tb * top_k))
+    aux = (aux_weight * E * jnp.sum(me * ce))[None]
+
+    def k_body(acc, inp):
+        ids, gv = inp
+        buf, dest, contrib = _dispatch_top1(xb, ids, E_loc, C1, dtype,
+                                            id_offset=eo)
+        g = jnp.einsum("ecd,edf->ecf", buf, gate)
+        u = jnp.einsum("ecd,edf->ecf", buf, up)
+        h = jax.nn.silu(g) * u
+        out_buf = jnp.einsum("ecf,efd->ecd", h, down)
+        gathered = out_buf.reshape(E_loc * C1, d)[dest] * contrib[:, None]
+        return acc + gathered * gv[:, None].astype(dtype), None
+
+    acc0 = jnp.zeros((Tb, d), dtype)
+    out_partial, _ = jax.lax.scan(k_body, acc0,
+                                  (expert_ids.T, gate_vals.T))
+    # ---- ONE combine reduction per layer: reduce-scatter over d (the
+    # residual consumer is d-sharded over 'model', so scattering matches
+    # the consumer layout AND halves the bytes vs a full psum) -------------
+    out = jax.lax.psum_scatter(out_partial.astype(jnp.float32), "model",
+                               scatter_dimension=1, tiled=True)
+    return out.astype(dtype), aux
+
+
+def moe_fwd(p: Params, x: jax.Array, *, top_k: int,
+            capacity_factor: float = 1.25,
+            aux_weight: float = 0.01,
+            inference: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) → (out, aux_loss).
+
+    ``inference=True`` skips the f32 shard_map boundary (only needed to
+    dodge an XLA-CPU crash in the *backward* replicated-input all-reduce).
+    """
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+
+    # ---- manual expert-parallel path (production mesh) ---------------------
+    mesh, baxes = hints.current_mesh()
+    if (mesh is not None and baxes and "model" in mesh.shape
+            and E % mesh.shape["model"] == 0):
+        dp = hints.batch_axes_size()
+        if T % dp == 0 and (T // dp) >= 8:
+            from jax.sharding import PartitionSpec as P
+            Tl = T // dp
+            msize = mesh.shape["model"]
+            C1 = capacity(Tl, E, 1, capacity_factor)
+            ba = baxes if len(baxes) > 1 else baxes[0]
+            # physical weight shardings (rules.py): gate/up (E→model,
+            # f→data when divisible); router (d, E) replicated-ish
+            f = p["gate"].shape[2]
+            zero_axes = baxes if (f % dp == 0 and
+                                  p["router"].shape[0] % dp == 0) else ()
+            za = (zero_axes if len(zero_axes) != 1 else zero_axes[0])
+            w_in = (P(None, za) if zero_axes else P(),
+                    P("model", None, za) if zero_axes else P("model"),
+                    P("model", None, za) if zero_axes else P("model"),
+                    P("model", za) if zero_axes else P("model"))
+            fn = partial(_moe_manual, top_k=top_k, C1=C1,
+                         aux_weight=aux_weight, batch_axes=baxes,
+                         wdtype=p["gate"].dtype, E=E, zero_axes=zero_axes)
+            sm = jax.shard_map(
+                fn, mesh=mesh,
+                in_specs=(P(ba, None),) + w_in,
+                out_specs=(P(ba, "model"), P(ba)),   # out d-sharded (RS)
+                axis_names=set(baxes) | {"model"}, check_vma=False)
+            if inference:
+                w_args = (p["router"], p["gate"], p["up"], p["down"])
+            else:
+                w_args = (p["router"].astype(jnp.float32),
+                          p["gate"].astype(jnp.float32),
+                          p["up"].astype(jnp.float32),
+                          p["down"].astype(jnp.float32))
+            out, aux = sm(x.reshape(T, d), *w_args)
+            return out.reshape(B, S, d), jnp.mean(aux)
+
+    # ---- local fallback (CPU tests / tiny meshes) ---------------------------
+    dp = hints.batch_axes_size()
+    if T % dp or (T // dp) < 8:
+        dp = 1
+    Tb = T // dp
+    C1 = capacity(Tb, E, 1, capacity_factor)
+
+    xt = hints.hint_spec(x.reshape(dp, Tb, d), {0: "batch"})
+    gate_vals, expert_ids, probs = jax.vmap(
+        lambda xb: _route_block(xb, p["router"], top_k))(xt)
+
+    me = jnp.mean(probs.reshape(T, E), axis=0)
+    ce = jnp.zeros((E,), jnp.float32).at[expert_ids.reshape(-1)].add(
+        1.0 / (T * top_k))
+    aux = aux_weight * E * jnp.sum(me * ce)
+
+    dtype = x.dtype
+    ids_k = expert_ids.transpose(2, 0, 1)        # (K, dp, Tb)
+    gv_k = gate_vals.transpose(2, 0, 1)          # (K, dp, Tb)
+
+    def k_body(acc, inp):
+        ids, gv = inp
+        buf, dest, contrib = jax.vmap(
+            lambda xb, i: _dispatch_top1(xb, i, E, C1, dtype))(xt, ids)
+        buf = hints.hint_spec(buf, {0: "batch", 1: "model"})
+        g = jnp.einsum("becd,edf->becf", buf, p["gate"])
+        u = jnp.einsum("becd,edf->becf", buf, p["up"])
+        h = jax.nn.silu(g) * u
+        out_buf = jnp.einsum("becf,efd->becd", h, p["down"])
+        out_buf = hints.hint_spec(out_buf, {0: "batch", 1: "model"})
+
+        def _combine(out_b, dest_b, contrib_b, gv_b):
+            gathered = out_b.reshape(E * C1, d)[dest_b] * contrib_b[:, None]
+            return gathered * gv_b[:, None].astype(dtype)
+
+        out_k = jax.vmap(_combine)(out_buf, dest, contrib, gv)
+        return acc + hints.hint_spec(out_k, {0: "batch"}), None
+
+    acc0 = jnp.zeros((dp, Tb, d), dtype)
+    out, _ = jax.lax.scan(k_body, acc0, (ids_k, gv_k))
+    return out.reshape(B, S, d), aux

@@ -1,0 +1,104 @@
+"""Model registry: one (init, loss, decode) bundle per architecture family,
+plus ``input_specs`` — ShapeDtypeStruct stand-ins for every input of every
+(arch × input-shape) combination (dry-run safe: no allocation).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import InputShape, ModelConfig
+from . import encdec, transformer, zamba2
+
+Params = Any
+
+
+class Model(NamedTuple):
+    cfg: ModelConfig
+    init: Callable[[jax.Array], Params]
+    loss_fn: Callable[[Params, Dict[str, jax.Array]], jax.Array]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    if cfg.arch_type == "hybrid":
+        mod = zamba2
+    elif cfg.arch_type == "audio":
+        mod = encdec
+    else:
+        mod = transformer
+    return Model(
+        cfg=cfg,
+        init=lambda key: mod.model_init(key, cfg),
+        loss_fn=lambda p, b: mod.loss_fn(p, cfg, b),
+        decode_step=lambda p, c, t: mod.decode_step(p, cfg, c, t),
+        init_cache=lambda batch, max_len, dtype=jnp.bfloat16:
+            mod.init_cache(cfg, batch, max_len, dtype),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs) per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, Any]:
+    tok = jnp.int32
+    if cfg.arch_type == "vlm":
+        P = cfg.frontend_tokens
+        return {
+            "frontend_embeds": _sds((B, P, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S - P), tok),
+            "labels": _sds((B, S - P), tok),
+            "positions3": _sds((3, B, S), tok),
+        }
+    if cfg.arch_type == "audio":
+        return {
+            "frontend_embeds": _sds((B, S, cfg.d_model), cfg.dtype),
+            "tokens": _sds((B, S), tok),
+            "labels": _sds((B, S), tok),
+        }
+    return {"tokens": _sds((B, S), tok), "labels": _sds((B, S), tok)}
+
+
+def cache_specs(cfg: ModelConfig, B: int, max_len: int,
+                dtype=jnp.bfloat16) -> Any:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init_cache(B, max_len, dtype))
+
+
+def decode_batch_specs(cfg: ModelConfig, B: int) -> Dict[str, Any]:
+    return {"tokens": _sds((B, 1), jnp.int32)}
+
+
+def param_specs(cfg: ModelConfig) -> Params:
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.key(0)))
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape) -> Dict[str, Any]:
+    """All non-param inputs for the step the shape exercises."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape.global_batch,
+                                           shape.seq_len)}
+    if shape.kind == "prefill":
+        specs = train_batch_specs(cfg, shape.global_batch, shape.seq_len)
+        specs.pop("labels", None)
+        return {"batch": specs}
+    # decode: one token + a seq_len-deep cache
+    return {
+        "batch": decode_batch_specs(cfg, shape.global_batch),
+        "cache": cache_specs(cfg, shape.global_batch, shape.seq_len),
+    }
+
+
+def count_params(cfg: ModelConfig) -> int:
+    import math
+    specs = param_specs(cfg)
+    return sum(math.prod(s.shape) for s in jax.tree_util.tree_leaves(specs))

@@ -1,0 +1,56 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE splits the head_dim rotary channels into three sections
+(temporal, height, width) rotated by three separate position streams; for
+text tokens the three streams coincide (t=h=w=index), recovering vanilla
+RoPE — exactly Qwen2-VL's scheme.  The vision frontend being a stub, the
+position streams arrive precomputed from ``input_specs`` as (3, B, S).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MROPE_SECTIONS = (2, 1, 1)  # fractions of head_dim/2 given to (t, h, w) *4ths
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def _apply_rot(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin,
+                            x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, *, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions3: (3, B, S) — (t, h, w) streams."""
+    hd = x.shape[-1]
+    half = hd // 2
+    tot = sum(MROPE_SECTIONS)
+    splits = [half * s // tot for s in MROPE_SECTIONS]
+    splits[-1] = half - sum(splits[:-1])
+    freqs = rope_freqs(hd, theta)                       # (half,)
+    # build a (B, S, half) angle tensor section-by-section
+    parts, off = [], 0
+    for i, w in enumerate(splits):
+        f = freqs[off: off + w]
+        ang = positions3[i][..., None].astype(jnp.float32) * f
+        parts.append(ang)
+        off += w
+    ang = jnp.concatenate(parts, axis=-1)               # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,147 @@
+"""RWKV6 "Finch" block — linear attention with data-dependent decay.
+
+Time-mix:   r,k,v,g projections of token-shift lerps; per-channel decay
+            w_t = exp(-exp(w0 + lora(x_t))) (the data-dependent decay that
+            distinguishes Finch from RWKV5); per-head state S ∈ R^{hd×hd}:
+              out_t = r_t · (diag(u)·k_tᵀv_t + S_t)
+              S_{t+1} = diag(w_t)·S_t + k_tᵀ v_t
+Channel-mix: squared-ReLU MLP gated by a receptance sigmoid.
+
+Decode state is O(heads·hd²) per layer regardless of context length —
+the arch is attention-free and long_500k-eligible.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import normal_init, rmsnorm, rmsnorm_init, split_keys
+
+Params = Dict[str, Any]
+HEAD_DIM = 64
+DECAY_LORA = 32
+
+
+def rwkv6_dims(d_model: int):
+    assert d_model % HEAD_DIM == 0
+    return d_model // HEAD_DIM, HEAD_DIM
+
+
+def time_mix_init(key, d: int, dtype) -> Params:
+    H, hd = rwkv6_dims(d)
+    ks = split_keys(key, 8)
+    s = d ** -0.5
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),     # lerp weights r,k,v,g,w
+        "wr": normal_init(ks[0], (d, d), s, dtype),
+        "wk": normal_init(ks[1], (d, d), s, dtype),
+        "wv": normal_init(ks[2], (d, d), s, dtype),
+        "wg": normal_init(ks[3], (d, d), s, dtype),
+        "wo": normal_init(ks[4], (d, d), s, dtype),
+        "w0": jnp.full((d,), -6.0, jnp.float32),  # decay bias (slow decay)
+        "w_lora_a": normal_init(ks[5], (d, DECAY_LORA), s, dtype),
+        "w_lora_b": normal_init(ks[6], (DECAY_LORA, d),
+                                DECAY_LORA ** -0.5, dtype),
+        "u": normal_init(ks[7], (H, hd), 0.5, jnp.float32),  # bonus
+        "ln_x": rmsnorm_init(d, dtype),
+    }
+
+
+def channel_mix_init(key, d: int, f: int, dtype) -> Params:
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),      # lerp weights k, r
+        "wk": normal_init(k1, (d, f), d ** -0.5, dtype),
+        "wv": normal_init(k2, (f, d), f ** -0.5, dtype),
+        "wr": normal_init(k3, (d, d), d ** -0.5, dtype),
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros or `last` for the first position)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """Per-head linear-attention recurrence.
+
+    r,k,v: (B, S, H, hd); w: (B, S, H, hd) decays in (0,1);
+    u: (H, hd) bonus; s0: (B, H, hd, hd) initial state.
+    Returns out (B, S, H, hd) and final state.
+    """
+    def step(s, inp):
+        r_t, k_t, v_t, w_t = inp                        # (B,H,hd)
+        kv = k_t[..., :, None] * v_t[..., None, :]      # (B,H,hd,hd)
+        out = jnp.einsum("bhk,bhkv->bhv", r_t,
+                         s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, out
+
+    seq = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    T = r.shape[1]
+    chunk = 64
+    if T % chunk == 0 and T > chunk:
+        # chunk-checkpointed scan: save only chunk-boundary states, not the
+        # full (T, B, H, hd, hd) trajectory (tens of GB at 4k seq)
+        nseq = jax.tree_util.tree_map(
+            lambda t: t.reshape((T // chunk, chunk) + t.shape[1:]), seq)
+
+        @jax.checkpoint
+        def chunk_body(s, inp):
+            return jax.lax.scan(step, s, inp)
+
+        s, outs = jax.lax.scan(chunk_body, s0, nseq)
+        outs = outs.reshape((T,) + outs.shape[2:])
+    else:
+        s, outs = jax.lax.scan(step, s0, seq)
+    return outs.transpose(1, 0, 2, 3), s
+
+
+def time_mix_fwd(p: Params, x: jax.Array, *, state=None, last_x=None,
+                 eps: float = 1e-5):
+    """x: (B,S,d). state: (B,H,hd,hd) carried across calls (decode)."""
+    B, S, d = x.shape
+    H, hd = rwkv6_dims(d)
+    xx = _shift(x, last_x) - x
+    lerp = lambda i: x + xx * p["mu"][i]
+    r = (lerp(0) @ p["wr"]).reshape(B, S, H, hd)
+    k = (lerp(1) @ p["wk"]).reshape(B, S, H, hd)
+    v = (lerp(2) @ p["wv"]).reshape(B, S, H, hd)
+    g = jax.nn.silu(lerp(3) @ p["wg"])
+    w_raw = p["w0"] + (lerp(4) @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_raw.astype(jnp.float32)))    # (B,S,d) ∈ (0,1)
+    w = w.reshape(B, S, H, hd)
+
+    if state is None:
+        state = jnp.zeros((B, H, hd, hd), jnp.float32)
+    out, new_state = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w, p["u"], state)
+    out = out.reshape(B, S, d).astype(x.dtype)
+    out = rmsnorm(p["ln_x"], out, eps) * g
+    return out @ p["wo"], new_state, x[:, -1:]
+
+
+def channel_mix_fwd(p: Params, x: jax.Array, *, last_x=None):
+    xx = _shift(x, last_x) - x
+    k = jnp.square(jax.nn.relu((x + xx * p["mu"][0]) @ p["wk"]))
+    r = jax.nn.sigmoid((x + xx * p["mu"][1]) @ p["wr"])
+    return r * (k @ p["wv"]), x[:, -1:]
+
+
+class RWKVLayerCache(NamedTuple):
+    state: jax.Array   # (B, H, hd, hd)
+    tm_x: jax.Array    # (B, 1, d) last input to time-mix
+    cm_x: jax.Array    # (B, 1, d) last input to channel-mix
+
+
+def init_rwkv_cache(batch: int, d: int, dtype=jnp.bfloat16):
+    H, hd = rwkv6_dims(d)
+    return RWKVLayerCache(
+        jnp.zeros((batch, H, hd, hd), jnp.float32),
+        jnp.zeros((batch, 1, d), dtype),
+        jnp.zeros((batch, 1, d), dtype),
+    )

@@ -1,0 +1,188 @@
+"""Zamba2 hybrid: Mamba2 backbone + one *shared* attention block.
+
+Zamba2's signature design (arXiv:2411.15242): the backbone is a stack of
+Mamba2 blocks; every ``attn_every`` blocks, a single shared transformer
+block (attention + SwiGLU, one set of weights reused at every application)
+is applied to ``concat(h, h_embed)`` (current hidden + the original
+embedding) projected back to d_model.
+
+Layout: the 38 Mamba2 layers are grouped into ``ceil(L/attn_every)``
+groups; each group is a stacked `lax.scan`, followed by one application of
+the shared block.  Decode carries one Mamba2 cache per layer plus one KV
+cache per shared-block *application* (activations differ per application
+even though weights are shared).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from ..sharding import hints
+from . import attention as attn_mod
+from . import mamba2 as m2
+from .layers import (chunked_xent, embed, embedding_init, normal_init,
+                     rmsnorm, rmsnorm_init, split_keys, swiglu, swiglu_init)
+
+Params = Dict[str, Any]
+
+
+def _mamba_dims(cfg: ModelConfig) -> m2.Mamba2Dims:
+    return m2.dims(cfg.d_model, state=cfg.ssm_state,
+                   head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+                   d_conv=cfg.conv_kernel)
+
+
+def _groups(cfg: ModelConfig) -> List[int]:
+    k = cfg.attn_every
+    full, rem = divmod(cfg.num_layers, k)
+    return [k] * full + ([rem] if rem else [])
+
+
+def shared_block_init(key, cfg: ModelConfig) -> Params:
+    kp, ka, km = split_keys(key, 3)
+    d = cfg.d_model
+    return {
+        "pre_proj": normal_init(kp, (2 * d, d), (2 * d) ** -0.5, cfg.dtype),
+        "ln1": rmsnorm_init(d, cfg.dtype),
+        "attn": attn_mod.attn_init(ka, d, cfg.num_heads, cfg.num_kv_heads,
+                                   cfg.head_dim, bias=cfg.qkv_bias,
+                                   dtype=cfg.dtype),
+        "ln2": rmsnorm_init(d, cfg.dtype),
+        "mlp": swiglu_init(km, d, cfg.d_ff, cfg.dtype),
+    }
+
+
+def model_init(key, cfg: ModelConfig) -> Params:
+    ke, km, ks, kh = split_keys(key, 4)
+    dm = _mamba_dims(cfg)
+    layer_keys = jnp.stack(split_keys(km, cfg.num_layers))
+
+    def one_mamba(k):
+        k1, = split_keys(k, 1)
+        return {"ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+                "mixer": m2.mamba2_init(k1, dm, cfg.dtype)}
+
+    return {
+        "embed": embedding_init(ke, cfg.vocab_size, cfg.d_model, cfg.dtype),
+        "mamba": jax.vmap(one_mamba)(layer_keys),
+        "shared": shared_block_init(ks, cfg),
+        "final_ln": rmsnorm_init(cfg.d_model, cfg.dtype),
+        "head": normal_init(kh, (cfg.d_model, cfg.vocab_size),
+                            cfg.d_model ** -0.5, cfg.dtype),
+    }
+
+
+def _shared_fwd(p: Params, h, h0, cfg: ModelConfig, *, positions):
+    x = jnp.concatenate([h, h0], axis=-1) @ p["pre_proj"]
+    a = attn_mod.attention_fwd(
+        p["attn"], rmsnorm(p["ln1"], x, cfg.norm_eps),
+        n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads, head_dim=cfg.head_dim,
+        positions=positions, rope_theta=cfg.rope_theta, causal=True,
+        window=cfg.sliding_window)
+    x = x + a
+    x = x + swiglu(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+    return h + x
+
+
+def forward_hidden(p: Params, cfg: ModelConfig, batch):
+    dm = _mamba_dims(cfg)
+    h = embed(p["embed"], batch["tokens"])
+    h0 = h
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def mamba_body(h, lp):
+        h = hints.hint_spec(h, {0: "batch", 2: "model"})
+        x = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        return h + m2.mamba2_fwd(lp["mixer"], x, dm, cfg.norm_eps), None
+
+    off = 0
+    for g in _groups(cfg):
+        sub = jax.tree_util.tree_map(lambda x: x[off: off + g], p["mamba"])
+        h, _ = jax.lax.scan(
+            jax.checkpoint(mamba_body,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            h, sub)
+        h = _shared_fwd(p["shared"], h, h0, cfg, positions=positions)
+        off += g
+    return rmsnorm(p["final_ln"], h, cfg.norm_eps), jnp.float32(0)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch) -> jax.Array:
+    h, _ = forward_hidden(p, cfg, batch)
+    return chunked_xent(h, p["head"], batch["labels"],
+                        softcap=cfg.logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+class Zamba2Cache(NamedTuple):
+    mamba: Any          # stacked (L, ...) Mamba2Cache
+    attn_k: jax.Array   # (n_apps, B, T, KV, hd)
+    attn_v: jax.Array
+    h0: jax.Array       # (B, 1, d) embedding of the current token
+    step: jax.Array
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> Zamba2Cache:
+    dm = _mamba_dims(cfg)
+    one = m2.init_mamba2_cache(batch, dm, dtype)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+    n_apps = len(_groups(cfg))
+    kv = jnp.zeros((n_apps, batch, max_len, cfg.num_kv_heads, cfg.head_dim),
+                   dtype)
+    return Zamba2Cache(stacked, kv, kv,
+                       jnp.zeros((batch, 1, cfg.d_model), dtype),
+                       jnp.zeros((), jnp.int32))
+
+
+def decode_step(p: Params, cfg: ModelConfig, cache: Zamba2Cache,
+                tokens: jax.Array):
+    dm = _mamba_dims(cfg)
+    h = embed(p["embed"], tokens)
+    h0 = h
+
+    def mamba_body(h, inp):
+        lp, lc = inp
+        x = rmsnorm(lp["ln"], h, cfg.norm_eps)
+        mix, nc = m2.mamba2_decode(lp["mixer"], x, lc, dm, cfg.norm_eps)
+        return h + mix, nc
+
+    new_mamba = []
+    ak, av = cache.attn_k, cache.attn_v
+    off = 0
+    for gi, g in enumerate(_groups(cfg)):
+        sub_p = jax.tree_util.tree_map(lambda x: x[off: off + g], p["mamba"])
+        sub_c = jax.tree_util.tree_map(lambda x: x[off: off + g],
+                                       cache.mamba)
+        h, nm = jax.lax.scan(mamba_body, h, (sub_p, sub_c))
+        new_mamba.append(nm)
+        # shared attention application gi with its own KV cache
+        x = jnp.concatenate([h, h0], axis=-1) @ p["shared"]["pre_proj"]
+        lc = attn_mod.KVCache(ak[gi], av[gi], cache.step)
+        a, nc = attn_mod.decode_attention(
+            p["shared"]["attn"],
+            rmsnorm(p["shared"]["ln1"], x, cfg.norm_eps), lc,
+            n_heads=cfg.num_heads, n_kv=cfg.num_kv_heads,
+            head_dim=cfg.head_dim, rope_theta=cfg.rope_theta,
+            window=cfg.sliding_window)
+        ak = ak.at[gi].set(nc.k)
+        av = av.at[gi].set(nc.v)
+        x = x + a
+        x = x + swiglu(p["shared"]["mlp"],
+                       rmsnorm(p["shared"]["ln2"], x, cfg.norm_eps))
+        h = h + x
+        off += g
+
+    new_mamba = jax.tree_util.tree_map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *new_mamba)
+    h = rmsnorm(p["final_ln"], h, cfg.norm_eps)
+    logits = h.astype(jnp.float32) @ p["head"].astype(jnp.float32)
+    return logits, Zamba2Cache(new_mamba, ak, av, h0, cache.step + 1)

@@ -1,0 +1,95 @@
+"""Minimal optimizer library: SGD(+momentum), AdamW, LR schedules.
+
+(init, update) pairs over pytrees; no external deps.  ``update`` returns
+(new_params, new_state).  Used by the centralized train driver and as the
+server optimizer in federated mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jax.Array], Tuple[Pytree, Pytree]]
+    # update(params, grads, state, step) -> (params, state)
+
+
+def sgd(lr: float | Callable[[jax.Array], jax.Array],
+        momentum: float = 0.0, weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        if momentum == 0.0:
+            return ()
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def update(params, grads, state, step):
+        eta = lr_fn(step)
+        if weight_decay:
+            grads = jax.tree_util.tree_map(
+                lambda g, p: g + weight_decay * p, grads, params)
+        if momentum == 0.0:
+            new_p = jax.tree_util.tree_map(
+                lambda p, g: p - eta * g, params, grads)
+            return new_p, state
+        new_m = jax.tree_util.tree_map(
+            lambda m, g: momentum * m + g, state, grads)
+        new_p = jax.tree_util.tree_map(
+            lambda p, m: p - eta * m, params, new_m)
+        return new_p, new_m
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array],
+          b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        z = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return (z, z)
+
+    def update(params, grads, state, step):
+        m, v = state
+        t = step.astype(jnp.float32) + 1.0
+        m = jax.tree_util.tree_map(
+            lambda a, g: b1 * a + (1 - b1) * g.astype(jnp.float32), m, grads)
+        v = jax.tree_util.tree_map(
+            lambda a, g: b2 * a + (1 - b2) *
+            jnp.square(g.astype(jnp.float32)), v, grads)
+        eta = lr_fn(step)
+
+        def upd(p, mi, vi):
+            mh = mi / (1 - b1 ** t)
+            vh = vi / (1 - b2 ** t)
+            step_ = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                step_ = step_ + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * step_).astype(p.dtype)
+
+        new_p = jax.tree_util.tree_map(upd, params, m, v)
+        return new_p, (m, v)
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup: int = 0, final_frac: float = 0.1):
+    def lr_fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) /
+                        jnp.maximum(total_steps - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(
+            jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr_fn

@@ -1,0 +1,1 @@
+"""Sharding rules + HLO static cost analysis."""

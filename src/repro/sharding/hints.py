@@ -1,0 +1,119 @@
+"""Activation-sharding hints.
+
+Model code is mesh-agnostic; the launcher installs the active mesh here and
+the models call :func:`hint_batch` on the tensors whose sharding XLA's SPMD
+propagation otherwise gets wrong (observed: scan-stacked checkpoint saves
+and xent chunks materialising with GLOBAL batch — 8.6 GB/device buffers —
+because nothing constrained their batch dim to the data axes).
+
+No-ops when no mesh is installed (CPU smoke tests, simulation engine).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _get() -> Tuple[Optional[Mesh], Tuple[str, ...]]:
+    return (getattr(_STATE, "mesh", None), getattr(_STATE, "batch_axes", ()))
+
+
+@contextmanager
+def mesh_context(mesh: Optional[Mesh], batch_axes: Optional[tuple] = None):
+    """Install the active mesh.  ``batch_axes`` overrides which mesh axes
+    activation batch dims shard over — the FedMRN pod round must EXCLUDE
+    its client axis (clients train independently; constraining activations
+    over the client axis drags them across the slow inter-client links)."""
+    old = _get()
+    if mesh is None:
+        _STATE.mesh, _STATE.batch_axes = None, ()
+    else:
+        _STATE.mesh = mesh
+        _STATE.batch_axes = (tuple(batch_axes) if batch_axes is not None
+                             else tuple(a for a in ("pod", "data")
+                                        if a in mesh.shape))
+    try:
+        yield
+    finally:
+        _STATE.mesh, _STATE.batch_axes = old
+
+
+def hint_batch(x: jax.Array, bdim: int = 0) -> jax.Array:
+    """Constrain dim ``bdim`` to the data axes (if divisible)."""
+    mesh, axes = _get()
+    if mesh is None or not axes or x.ndim <= bdim:
+        return x
+    need = 1
+    for a in axes:
+        need *= mesh.shape[a]
+    if x.shape[bdim] % need:
+        return x
+    spec = [None] * x.ndim
+    spec[bdim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def current_mesh():
+    """(mesh, batch_axes) — (None, ()) when nothing installed."""
+    return _get()
+
+
+def model_axis_size() -> int:
+    """Size of the 'model' mesh axis (1 when no mesh installed)."""
+    mesh, _ = _get()
+    if mesh is None or "model" not in mesh.shape:
+        return 1
+    return mesh.shape["model"]
+
+
+def batch_axes_size() -> int:
+    mesh, axes = _get()
+    if mesh is None:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def hint_spec(x: jax.Array, spec_dims: dict) -> jax.Array:
+    """Constrain selected dims: {dim: 'model'|'batch'}; others replicated.
+
+    Skips the constraint entirely if any requested dim is not divisible.
+    """
+    mesh, axes = _get()
+    if mesh is None:
+        return x
+    spec = [None] * x.ndim
+    for d, kind in spec_dims.items():
+        if kind == "batch":
+            need = batch_axes_size()
+            if need <= 1 or x.shape[d] % need:
+                continue
+            spec[d] = axes if len(axes) > 1 else axes[0]
+        else:
+            if "model" not in mesh.shape or x.shape[d] % mesh.shape["model"]:
+                continue
+            spec[d] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))
+
+
+def hint(x: jax.Array, *spec) -> jax.Array:
+    """Raw constraint with explicit per-dim axis names (None = replicated)."""
+    mesh, _ = _get()
+    if mesh is None:
+        return x
+    clean = tuple(s if (s is None or
+                        all(a in mesh.shape for a in
+                            (s if isinstance(s, tuple) else (s,))))
+                  else None for s in spec)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*clean)))

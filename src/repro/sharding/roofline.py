@@ -1,0 +1,121 @@
+"""Roofline synthesis: dry-run records → three-term analysis (§Roofline).
+
+  compute    = HLO_FLOPs(per chip)        / peak_FLOP/s      (197e12 bf16)
+  memory     = HLO_bytes(per chip)        / HBM_bw           (819e9)
+  collective = collective_bytes(per chip) / ICI link bw      (50e9)
+
+HLO terms come from ``hlo_analysis`` (loop-trip-count-aware walk of the
+compiled module — XLA's aggregate cost_analysis drops loop trip counts).
+MODEL_FLOPS is the analytic 6·N·D / 2·N·D / 2·N_active·B reference; the
+ratio MODEL_FLOPS / HLO_FLOPs is the "useful compute" fraction that makes
+remat/causal-rectangle/replication waste visible.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+from typing import Any, Dict, Optional
+
+from ..configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def active_params(cfg: ModelConfig, total: int) -> int:
+    """Per-token active params (MoE: top_k of E experts)."""
+    if not cfg.num_experts:
+        return total
+    expert_params = (cfg.num_layers * cfg.num_experts *
+                     3 * cfg.d_model * cfg.d_ff)
+    dense_part = total - expert_params
+    return dense_part + expert_params * cfg.top_k // cfg.num_experts
+
+
+def model_flops(cfg: ModelConfig, shape: InputShape, total_params: int
+                ) -> float:
+    """Analytic global FLOPs per step (matmul-only reference)."""
+    n_act = active_params(cfg, total_params)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence (+ attention cache reads are
+    # bandwidth, not FLOPs, at B·T·d_kv scale)
+    return 2.0 * n_act * shape.global_batch
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    hlo_flops: float
+    model_flops_per_chip: float
+    useful_ratio: float
+    fits: bool
+    by_collective: Dict[str, float]
+
+    def row(self):
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "compute_ms": round(self.compute_s * 1e3, 3),
+            "memory_ms": round(self.memory_s * 1e3, 3),
+            "collective_ms": round(self.collective_s * 1e3, 3),
+            "dominant": self.dominant,
+            "useful_ratio": round(self.useful_ratio, 3),
+            "fits_v5e": self.fits,
+        }
+
+
+def from_record(rec: Dict[str, Any], cfg: Optional[ModelConfig] = None
+                ) -> Optional[Roofline]:
+    if rec.get("status") != "ok":
+        return None
+    h = rec["hlo_analysis"]
+    n_chips = rec["n_chips"]
+    shape = INPUT_SHAPES[rec["shape"]]
+    mf = (model_flops(cfg, shape, rec["params"]) / n_chips
+          if cfg is not None else 0.0)
+    compute_s = h["flops"] / PEAK_FLOPS
+    memory_s = h["hbm_bytes"] / HBM_BW
+    collective_s = h["collective_bytes"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dom = max(terms, key=terms.get)
+    return Roofline(
+        arch=rec["arch"], shape=rec["shape"], mesh=rec["mesh"],
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dom, hlo_flops=h["flops"], model_flops_per_chip=mf,
+        useful_ratio=(mf / h["flops"]) if h["flops"] else 0.0,
+        fits=rec["memory"]["fits_v5e"],
+        by_collective=h.get("by_collective", {}),
+    )
+
+
+def load_all(dryrun_dir: str):
+    from ..configs import get_config
+    out = []
+    for fn in sorted(os.listdir(dryrun_dir)):
+        if not fn.endswith(".json"):
+            continue
+        with open(os.path.join(dryrun_dir, fn)) as f:
+            rec = json.load(f)
+        cfg = None
+        try:
+            cfg = get_config(rec["arch"])
+        except Exception:
+            pass
+        r = from_record(rec, cfg)
+        if r is not None:
+            out.append((rec, r))
+    return out

@@ -1,0 +1,223 @@
+"""Parameter / activation sharding rules → PartitionSpecs.
+
+Strategy (DESIGN.md §5):
+  - tensor-parallel orientation for the big matmuls over the 'model' axis
+    (col-parallel in-projections, row-parallel out-projections, experts
+    expert-parallel over 'model');
+  - ZeRO/FSDP: remaining large params additionally sharded over the data
+    axes on their largest divisible dimension in *train* mode;
+  - everything else replicated (norms, small biases);
+  - activations: batch over ('pod','data'); long_500k (batch=1) decode
+    shards the cache over 'model' instead.
+
+Rules are path-pattern based so every arch family (attn/moe/mamba/rwkv/
+enc-dec) is covered by one table; the fallback shards the largest
+divisible axis.  Any leaf can be overridden by an explicit entry.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# (path regex, dim → axis name) — dim indexes AFTER the stacked-layer axis
+# is skipped (we detect the leading L axis by rank mismatch).
+_RULES: Sequence[Tuple[str, Dict[int, str]]] = (
+    # --- attention ---------------------------------------------------------
+    (r"attn/w[qkv]$|self/w[qkv]$|cross/w[qkv]$", {1: "model"}),
+    (r"attn/wo$|self/wo$|cross/wo$", {0: "model"}),
+    (r"attn/b[qkv]$|self/b[qkv]$|cross/b[qkv]$", {0: "model"}),
+    # --- dense mlp ----------------------------------------------------------
+    (r"mlp/(gate|up|in)$", {1: "model"}),
+    (r"mlp/(down|out)$", {0: "model"}),
+    # --- moe: expert-parallel over 'model' ----------------------------------
+    (r"moe/router$", {}),
+    (r"moe/(gate|up|down)$", {0: "model"}),
+    # --- mamba2 --------------------------------------------------------------
+    (r"mixer/in_proj$", {0: "model"}),
+    (r"mixer/out_proj$", {1: "model"}),
+    (r"mixer/(conv_w|conv_b|dt_bias|A_log|D)$", {}),
+    # --- rwkv6 ---------------------------------------------------------------
+    (r"mixer/w[rkvg]$", {1: "model"}),
+    (r"mixer/wo$", {0: "model"}),
+    (r"mixer/(w_lora_a|w_lora_b|w0|u|mu)$", {}),
+    (r"mlp/w[kr]$", {1: "model"}),
+    (r"mlp/wv$", {0: "model"}),
+    # --- zamba2 shared block --------------------------------------------------
+    (r"shared/pre_proj$", {1: "model"}),
+    # --- embeddings / head ----------------------------------------------------
+    (r"embed/tok$", {0: "model"}),
+    (r"^head$", {1: "model"}),
+    # --- norms & everything small ----------------------------------------------
+    (r"ln|norm|scale|bias|gamma|beta", {}),
+)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                    for p in path)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape.keys())
+
+
+def param_spec(path, leaf, mesh: Mesh, *, stacked: bool, zero: bool,
+               min_zero_size: int = 1 << 16,
+               fsdp_axes: Optional[Tuple[str, ...]] = None) -> P:
+    """PartitionSpec for one param leaf.
+
+    stacked: leaf has a leading layer axis (dim 0) that stays unsharded.
+    zero: additionally shard over the data axes (train mode).
+    fsdp_axes: override which mesh axes ZeRO-shards use (default: all of
+    ('pod','data') present in the mesh; the fedmrn round excludes its
+    client axis).
+    """
+    shape = jax.numpy.shape(leaf)
+    rank = len(shape)
+    off = 1 if stacked and rank >= 2 else 0
+    spec = [None] * rank
+    pstr = _path_str(path)
+    matched = False
+    for pat, dims in _RULES:
+        if re.search(pat, pstr):
+            matched = True
+            for dim, axis in dims.items():
+                d = dim + off
+                if d < rank and shape[d] % _axis_size(mesh, axis) == 0:
+                    spec[d] = axis
+            break
+    if not matched:
+        # fallback: largest divisible dim over 'model'
+        order = sorted(range(off, rank), key=lambda d: -shape[d])
+        for d in order:
+            if shape[d] % _axis_size(mesh, "model") == 0:
+                spec[d] = "model"
+                break
+    if zero and sum(1 for s in shape) and _nelem(shape) >= min_zero_size:
+        fs = _fsdp_axes(mesh) if fsdp_axes is None else fsdp_axes
+        if fs:
+            need = 1
+            for a in fs:
+                need *= _axis_size(mesh, a)
+            # largest still-free dim divisible by the full fsdp extent
+            order = sorted((d for d in range(off, rank) if spec[d] is None),
+                           key=lambda d: -shape[d])
+            for d in order:
+                if shape[d] % need == 0:
+                    spec[d] = fs if len(fs) > 1 else fs[0]
+                    break
+    return P(*spec)
+
+
+def _nelem(shape) -> int:
+    n = 1
+    for s in shape:
+        n *= s
+    return n
+
+
+def _is_stacked(path, leaf, num_layers: int) -> bool:
+    pstr = _path_str(path)
+    shape = jax.numpy.shape(leaf)
+    under = re.search(r"layers|mamba|^enc/|^dec/|/enc/|/dec/", pstr)
+    return bool(under) and len(shape) >= 1 and shape[0] == num_layers
+
+
+def param_shardings(param_tree: Pytree, mesh: Mesh, *, num_layers: int,
+                    encoder_layers: int = 0, zero: bool = False,
+                    fsdp_axes: Optional[Tuple[str, ...]] = None) -> Pytree:
+    """NamedSharding pytree matching ``param_tree`` (specs or arrays)."""
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        L = num_layers
+        if re.search(r"^enc/|/enc/", pstr) and encoder_layers:
+            L = encoder_layers
+        stacked = _is_stacked(path, leaf, L)
+        return NamedSharding(mesh, param_spec(path, leaf, mesh,
+                                              stacked=stacked, zero=zero,
+                                              fsdp_axes=fsdp_axes))
+
+    return jax.tree_util.tree_map_with_path(one, param_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def _batch_axes(mesh: Mesh) -> Any:
+    fs = _fsdp_axes(mesh)
+    return fs if len(fs) > 1 else (fs[0] if fs else None)
+
+
+def batch_shardings(batch: Pytree, mesh: Mesh, *, batch_dividable: bool = True
+                    ) -> Pytree:
+    """Shard dim 0 (batch) over the data axes; positions3 dim 1."""
+    ba = _batch_axes(mesh)
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        shape = jax.numpy.shape(leaf)
+        need = 1
+        fs = _fsdp_axes(mesh)
+        for a in fs:
+            need *= _axis_size(mesh, a)
+        spec = [None] * len(shape)
+        bdim = 1 if pstr.endswith("positions3") else 0
+        if (batch_dividable and len(shape) > bdim
+                and shape[bdim] % max(need, 1) == 0 and need > 1):
+            spec[bdim] = ba
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_shardings(cache: Pytree, mesh: Mesh, *, batch: int) -> Pytree:
+    """Decode caches: batch over data axes when divisible, else shard the
+    largest head/feature dim over 'model' (long_500k, batch=1)."""
+    fs = _fsdp_axes(mesh)
+    need = 1
+    for a in fs:
+        need *= _axis_size(mesh, a)
+    ba = _batch_axes(mesh)
+    msize = _axis_size(mesh, "model")
+
+    def one(leaf):
+        shape = jax.numpy.shape(leaf)
+        rank = len(shape)
+        spec = [None] * rank
+        # cache leaves are stacked (L, B, ...) or scalar steps
+        if rank >= 2 and shape[1] == batch and batch % max(need, 1) == 0 \
+                and need > 1:
+            spec[1] = ba
+        if rank == 5:
+            # attention KV cache (L, B, T, KV, hd): shard KV heads when
+            # divisible, else the time dim (sequence-parallel decode) —
+            # sharding hd conflicts with the decode dot's preferred
+            # sharding and triggers per-layer full rematerialisation
+            if shape[3] % msize == 0:
+                spec[3] = "model"
+            elif shape[2] % msize == 0:
+                spec[2] = "model"
+            elif shape[4] % msize == 0:
+                spec[4] = "model"
+        else:
+            for d in range(rank - 1, 1, -1):
+                if spec[d] is None and shape[d] % msize == 0 \
+                        and shape[d] >= msize:
+                    spec[d] = "model"
+                    break
+        if rank == 0:
+            return NamedSharding(mesh, P())
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache)

@@ -1,0 +1,158 @@
+"""Tests for the post-training compressor zoo and the FedMRN protocol."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    FedMRNConfig, NoiseConfig, client_local_update, make_compressor,
+    server_aggregate, server_aggregate_updates, sgd_local_update,
+    baseline_record, fedmrn_record,
+)
+from repro.core.compressors import REGISTRY, fwht, next_pow2
+
+KEY = jax.random.key(0)
+
+
+def _mktree(key, scale=0.01):
+    ka, kb = jax.random.split(key)
+    return {"w": scale * jax.random.normal(ka, (37, 11)),
+            "b": scale * jax.random.normal(kb, (19,))}
+
+
+class TestCompressors:
+    @pytest.mark.parametrize("name", REGISTRY)
+    def test_roundtrip_shapes_finite(self, name):
+        u = _mktree(KEY)
+        comp = make_compressor(name)
+        out = comp(u, KEY)
+        jax.tree_util.tree_map(
+            lambda a, b: (np.testing.assert_array_equal(a.shape, b.shape),
+                          np.isfinite(np.asarray(b)).all()), u, out)
+
+    @pytest.mark.parametrize("name", ["stochsign", "terngrad", "qsgd"])
+    def test_unbiased_compressors(self, name):
+        """Stochastic quantizers are unbiased: mean over samples → u."""
+        u = {"w": jnp.full((20_000,), 0.003)}
+        comp = make_compressor(name)
+        acc = np.zeros((20_000,))
+        R = 30
+        for i in range(R):
+            acc += np.asarray(comp(u, jax.random.key(i))["w"])
+        np.testing.assert_allclose(acc.mean() / R, 0.003, rtol=0.1)
+
+    def test_topk_sparsity(self):
+        u = {"w": jax.random.normal(KEY, (1000,))}
+        comp = make_compressor("topk", topk_frac=0.03)
+        out = np.asarray(comp(u, KEY)["w"])
+        assert (out != 0).sum() <= 31  # ceil(30) + ties
+
+    def test_fwht_involution(self):
+        x = jax.random.normal(KEY, (256,))
+        np.testing.assert_allclose(np.asarray(fwht(fwht(x))), np.asarray(x),
+                                   atol=1e-5)
+
+    def test_next_pow2(self):
+        assert [next_pow2(i) for i in (1, 2, 3, 5, 8, 9)] == [1, 2, 4, 8, 8, 16]
+
+    def test_drive_eden_better_than_sign(self):
+        """Rotation-based 1-bit beats naive sign on L2 error (paper §2.3)."""
+        k1, k2 = jax.random.split(KEY)
+        u = {"w": jax.random.normal(k1, (4096,)) *
+                  jnp.abs(jax.random.normal(k2, (4096,)))}  # heavy-tailed
+
+        def err(name):
+            out = make_compressor(name)(u, KEY)
+            return float(jnp.sum((out["w"] - u["w"]) ** 2))
+
+        assert err("drive") < err("signsgd")
+
+    def test_wire_bits_accounting(self):
+        rec = fedmrn_record(10_000)
+        assert rec.uplink_bpp < 1.01 and rec.compression_x > 31
+        fa = baseline_record("fedavg", 10_000, 2)
+        assert fa.uplink_bpp == 32
+        tk = baseline_record("topk", 10_000, 2)
+        assert tk.uplink_bits > tk.uplink_bits_paper  # index overhead counted
+
+
+# ---------------------------------------------------------------------------
+# FedMRN protocol end-to-end on a toy quadratic objective
+# ---------------------------------------------------------------------------
+
+def quad_loss(params, batch):
+    """|| (w - target) ||^2 with per-batch jitter, smooth and convex."""
+    tgt, _ = batch
+    d = jax.tree_util.tree_map(lambda p, t: p - t, params, tgt)
+    return sum(jnp.sum(x ** 2) for x in jax.tree_util.tree_leaves(d))
+
+
+def _batches(target, S=8):
+    # identical targets at every step; shaped (S, ...) for scan
+    return (jax.tree_util.tree_map(
+                lambda t: jnp.broadcast_to(t, (S,) + t.shape), target),
+            jnp.zeros((S, 1)))
+
+
+class TestFedMRNProtocol:
+    @pytest.mark.parametrize("mode", ["binary", "signed"])
+    def test_local_training_reduces_loss(self, mode):
+        w = {"w": jnp.zeros((64,))}
+        target = {"w": jnp.full((64,), 0.05)}
+        cfg = FedMRNConfig(mask_mode=mode,
+                           noise=NoiseConfig(alpha=2e-2), lr=0.05)
+        res = client_local_update(
+            quad_loss, w, _batches(target, S=16), cfg=cfg, base_seed=0,
+            round_idx=0, client_id=0, train_key=KEY)
+        losses = np.asarray(res.losses)
+        assert losses[-1] < losses[0]
+
+    def test_server_aggregation_moves_toward_target(self):
+        """A few FedMRN rounds on the quadratic shrink the global error."""
+        w = {"w": jnp.zeros((128,))}
+        target = {"w": jnp.full((128,), 0.03)}
+        cfg = FedMRNConfig(noise=NoiseConfig(alpha=1e-2), lr=0.05)
+        err0 = float(quad_loss(w, (target, None)))
+        # per-round progress is bounded by the noise magnitude alpha (each
+        # param moves at most alpha per round) — 8 rounds suffice here
+        for rnd in range(8):
+            results, weights = [], []
+            for cid in range(3):
+                res = client_local_update(
+                    quad_loss, w, _batches(target, S=16), cfg=cfg,
+                    base_seed=0, round_idx=rnd, client_id=cid,
+                    train_key=jax.random.fold_in(KEY, rnd * 10 + cid))
+                results.append(res)
+                weights.append(1.0)
+            w = server_aggregate(w, results, weights, cfg=cfg)
+        err = float(quad_loss(w, (target, None)))
+        assert err < 0.25 * err0
+
+    def test_fedavg_baseline_path(self):
+        w = {"w": jnp.zeros((32,))}
+        target = {"w": jnp.full((32,), 0.05)}
+        u, losses = sgd_local_update(quad_loss, w, _batches(target), lr=0.1)
+        w2 = server_aggregate_updates(w, [u, u], [1.0, 1.0])
+        assert float(quad_loss(w2, (target, None))) < float(
+            quad_loss(w, (target, None)))
+
+    def test_ablation_flags_run(self):
+        w = {"w": jnp.zeros((16,))}
+        target = {"w": jnp.full((16,), 0.02)}
+        for use_sm, use_pm in [(True, False), (False, True), (False, False)]:
+            cfg = FedMRNConfig(noise=NoiseConfig(alpha=1e-2), lr=0.05,
+                               use_sm=use_sm, use_pm=use_pm)
+            res = client_local_update(
+                quad_loss, w, _batches(target), cfg=cfg, base_seed=0,
+                round_idx=0, client_id=0, train_key=KEY)
+            assert np.isfinite(np.asarray(res.losses)).all()
+
+    def test_error_feedback_residual(self):
+        w = {"w": jnp.zeros((16,))}
+        target = {"w": jnp.full((16,), 0.02)}
+        cfg = FedMRNConfig(noise=NoiseConfig(alpha=1e-2), lr=0.05,
+                           error_feedback=True)
+        res = client_local_update(
+            quad_loss, w, _batches(target), cfg=cfg, base_seed=0,
+            round_idx=0, client_id=0, train_key=KEY)
+        assert np.abs(np.asarray(res.residual["w"])).sum() > 0

@@ -1,0 +1,223 @@
+"""Unit + property tests for the FedMRN core (noise, masking, packing)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    NoiseConfig, client_round_key, gen_noise,
+    mask_prob_binary, mask_prob_signed, sample_mask, deterministic_mask,
+    stochastic_masking, progressive_stochastic_masking, clip_to_noise,
+    pack_bits, unpack_bits, tree_pack, tree_unpack, tree_num_params,
+    tree_psm, tree_sample_mask, tree_masked_noise,
+)
+
+KEY = jax.random.key(0)
+
+
+# ---------------------------------------------------------------------------
+# noise generator G(s)
+# ---------------------------------------------------------------------------
+
+class TestNoise:
+    def test_seed_determinism(self):
+        """Server regenerating G(s) from the seed matches the client exactly."""
+        tree = {"a": jnp.zeros((17, 5)), "b": jnp.zeros((3,))}
+        k = client_round_key(42, 3, 7)
+        n1 = gen_noise(k, tree, NoiseConfig())
+        n2 = gen_noise(client_round_key(42, 3, 7), tree, NoiseConfig())
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(a, b), n1, n2)
+
+    def test_distinct_clients_distinct_noise(self):
+        tree = {"a": jnp.zeros((64,))}
+        n1 = gen_noise(client_round_key(0, 1, 1), tree, NoiseConfig())
+        n2 = gen_noise(client_round_key(0, 1, 2), tree, NoiseConfig())
+        assert not np.allclose(n1["a"], n2["a"])
+
+    @pytest.mark.parametrize("dist", ["uniform", "gauss", "bernoulli"])
+    def test_distributions(self, dist):
+        tree = jnp.zeros((4096,))
+        n = gen_noise(KEY, tree, NoiseConfig(dist=dist, alpha=1e-2))
+        n = np.asarray(n)
+        if dist == "uniform":
+            assert n.min() >= -1e-2 and n.max() <= 1e-2
+            assert abs(n.mean()) < 1e-3
+        elif dist == "bernoulli":
+            assert set(np.unique(np.abs(n))) == {np.float32(1e-2)}
+        else:
+            assert abs(n.std() - 1e-2) < 1e-3
+
+    def test_bad_dist_raises(self):
+        with pytest.raises(ValueError):
+            NoiseConfig(dist="cauchy")
+
+
+# ---------------------------------------------------------------------------
+# masking probabilities & unbiasedness (the paper's Eq. 6/7 property)
+# ---------------------------------------------------------------------------
+
+class TestMaskingMath:
+    def test_prob_binary_in_range(self):
+        u = jnp.array([-1.0, 0.0, 0.5, 2.0])
+        n = jnp.array([1.0, 1.0, 1.0, 1.0])
+        p = mask_prob_binary(u, n)
+        assert (np.asarray(p) == [0.0, 0.0, 0.5, 1.0]).all()
+
+    def test_prob_signed(self):
+        u = jnp.array([-1.0, 0.0, 1.0])
+        n = jnp.array([1.0, 1.0, 1.0])
+        p = mask_prob_signed(u, n)
+        assert (np.asarray(p) == [0.0, 0.5, 1.0]).all()
+
+    @pytest.mark.parametrize("mode", ["binary", "signed"])
+    def test_sm_unbiased(self, mode):
+        """E[n·M(u,n) − u] = 0 when u/n is in the feasible interval."""
+        N = 200_000
+        n = jnp.full((N,), 0.01)
+        u = jnp.full((N,), 0.004 if mode == "binary" else -0.004)
+        m = sample_mask(u, n, KEY, mode=mode)
+        est = np.asarray(n * m.astype(n.dtype))
+        np.testing.assert_allclose(est.mean(), float(u[0]), atol=3e-4)
+
+    def test_dm_biased(self):
+        """DM ignores magnitude: u=0.1n still maps to full n — the flaw SM fixes."""
+        n = jnp.full((1000,), 0.01)
+        u = 0.1 * n
+        m = deterministic_mask(u, n, mode="binary")
+        est = np.asarray(n * m.astype(n.dtype)).mean()
+        assert est == pytest.approx(0.01)          # biased: 10x too large
+        m_sm = sample_mask(u, n, KEY, mode="binary")
+        est_sm = np.asarray(n * m_sm.astype(n.dtype)).mean()
+        assert abs(est_sm - 0.001) < 3e-4          # SM: unbiased
+
+    @pytest.mark.parametrize("mode", ["binary", "signed"])
+    def test_clip_to_noise_interval(self, mode):
+        n = jnp.array([0.01, -0.01])
+        u = jnp.array([5.0, -5.0])
+        bar = np.asarray(clip_to_noise(u, n, mode=mode))
+        assert (np.abs(bar) <= 0.01 + 1e-9).all()
+
+    def test_ste_gradient_is_identity(self):
+        """∂S/∂u = 1 (Eq. 9): gradient flows through masking unchanged."""
+        u = jnp.ones((8,)) * 0.003
+        n = jnp.full((8,), 0.01)
+
+        def f(u_):
+            return jnp.sum(stochastic_masking(u_, n, KEY, mode="binary") ** 2)
+
+        g = jax.grad(f)(u)
+        hat = stochastic_masking(u, n, KEY, mode="binary")
+        np.testing.assert_allclose(np.asarray(g), np.asarray(2 * hat),
+                                   rtol=1e-6)
+
+    def test_psm_progress_zero_is_clip(self):
+        u = jnp.ones((64,)) * 0.02
+        n = jnp.full((64,), 0.01)
+        out = progressive_stochastic_masking(u, n, KEY, progress=0.0,
+                                             mode="binary")
+        np.testing.assert_allclose(np.asarray(out), 0.01)  # clipped to n
+
+    def test_psm_progress_one_is_sm(self):
+        u = jnp.ones((4096,)) * 0.5e-2
+        n = jnp.full((4096,), 1e-2)
+        out = np.asarray(progressive_stochastic_masking(
+            u, n, KEY, progress=1.0, mode="binary"))
+        assert set(np.unique(out)) <= {np.float32(0.0), np.float32(1e-2)}
+
+    def test_signed_binary_equivalence(self):
+        """G⊙m_s = 2G⊙m − G for m = (m_s+1)/2 (paper §3.1 identity)."""
+        g = jax.random.normal(KEY, (128,))
+        ms = jnp.where(jax.random.bernoulli(KEY, 0.5, (128,)), 1, -1)
+        m = (ms + 1) // 2
+        lhs = g * ms
+        rhs = 2 * g * m - g
+        np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                                   rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@st.composite
+def u_and_n(draw):
+    size = draw(st.integers(1, 257))
+    alpha = draw(st.sampled_from([1e-3, 1e-2, 1.0]))
+    seed = draw(st.integers(0, 2**31 - 1))
+    k = jax.random.key(seed)
+    ku, kn = jax.random.split(k)
+    u = alpha * jax.random.normal(ku, (size,))
+    n = jax.random.uniform(kn, (size,), minval=-alpha, maxval=alpha)
+    return u, n
+
+
+class TestProperties:
+    @settings(max_examples=25, deadline=None)
+    @given(u_and_n())
+    def test_probability_always_valid(self, un):
+        u, n = un
+        for p in (mask_prob_binary(u, n), mask_prob_signed(u, n)):
+            p = np.asarray(p)
+            assert np.isfinite(p).all() and (p >= 0).all() and (p <= 1).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(u_and_n(), st.sampled_from(["binary", "signed"]))
+    def test_mask_values_in_domain(self, un, mode):
+        u, n = un
+        m = np.asarray(sample_mask(u, n, KEY, mode=mode))
+        dom = {0, 1} if mode == "binary" else {-1, 1}
+        assert set(np.unique(m)) <= dom
+
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(1, 2048), st.integers(0, 2**31 - 1))
+    def test_pack_unpack_roundtrip(self, n_bits, seed):
+        bits = np.asarray(
+            jax.random.bernoulli(jax.random.key(seed), 0.5, (n_bits,))
+        ).astype(np.int8)
+        words = pack_bits(jnp.asarray(bits))
+        rec = np.asarray(unpack_bits(words, n_bits))
+        np.testing.assert_array_equal(rec, bits)
+        assert words.size == (n_bits + 31) // 32
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.sampled_from(["binary", "signed"]))
+    def test_tree_pack_roundtrip(self, seed, mode):
+        k = jax.random.key(seed)
+        tree = {"w": jnp.zeros((13, 7)), "b": jnp.zeros((5,)),
+                "n": {"x": jnp.zeros((1,))}}
+        noise = gen_noise(k, tree, NoiseConfig())
+        u = jax.tree_util.tree_map(lambda n: 0.3 * n, noise)
+        m = tree_sample_mask(u, noise, k, mode=mode)
+        words = tree_pack(m, mode=mode)
+        m2 = tree_unpack(words, tree, mode=mode)
+        jax.tree_util.tree_map(
+            lambda a, b: np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b)), m, m2)
+        assert words.size * 32 >= tree_num_params(tree)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end client→server exactness
+# ---------------------------------------------------------------------------
+
+def test_wire_roundtrip_reconstruction():
+    """Server's G(s)⊙m from (mask, seed) equals the client's û exactly."""
+    tree = {"w": jnp.zeros((33, 9)), "b": jnp.zeros((4,))}
+    seed_key = client_round_key(7, 2, 5)
+    noise = gen_noise(seed_key, tree, NoiseConfig())
+    u = jax.tree_util.tree_map(lambda n: 0.5 * n, noise)
+    m = tree_sample_mask(u, noise, KEY, mode="binary")
+    client_uhat = tree_masked_noise(noise, m)
+
+    # --- wire: packed mask + seed only -------------------------------------
+    words = tree_pack(m, mode="binary")
+    server_noise = gen_noise(seed_key, tree, NoiseConfig())
+    server_m = tree_unpack(words, tree, mode="binary")
+    server_uhat = tree_masked_noise(server_noise, server_m)
+
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)),
+        client_uhat, server_uhat)

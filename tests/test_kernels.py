@@ -1,0 +1,140 @@
+"""Pallas kernel validation: interpret=True vs pure-jnp oracles, with
+shape/dtype sweeps per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.bitpack.bitpack import pack_bits_pallas, unpack_bits_pallas
+from repro.kernels.bitpack.ref import pack_ref, unpack_ref
+from repro.kernels.psm_mask.psm_mask import psm_fused
+from repro.kernels.psm_mask.ref import psm_ref
+from repro.kernels.psm_mask.ops import psm_apply, psm_apply_tree
+from repro.kernels.rwkv6_scan.rwkv6_scan import wkv_pallas
+from repro.models.rwkv6 import _wkv_scan
+
+KEY = jax.random.key(0)
+
+
+class TestPSMKernel:
+    @pytest.mark.parametrize("shape", [(8, 128), (64, 512), (5, 384),
+                                       (256, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("mode", ["binary", "signed"])
+    def test_matches_ref(self, shape, dtype, mode):
+        k1, k2, k3, k4 = jax.random.split(KEY, 4)
+        u = (0.01 * jax.random.normal(k1, shape)).astype(dtype)
+        n = jax.random.uniform(k2, shape, jnp.float32,
+                               minval=-0.01, maxval=0.01).astype(dtype)
+        r_sm = jax.random.uniform(k3, shape, jnp.float32)
+        r_pm = jax.random.uniform(k4, shape, jnp.float32)
+        for prog in (0.0, 0.5, 1.0):
+            got_u, got_m = psm_fused(u, n, r_sm, r_pm, prog, mode=mode,
+                                     interpret=True)
+            want_u, want_m = psm_ref(u, n, r_sm, r_pm, prog, mode=mode)
+            np.testing.assert_allclose(
+                np.asarray(got_u, np.float32),
+                np.asarray(want_u, np.float32), atol=1e-6)
+            np.testing.assert_array_equal(np.asarray(got_m),
+                                          np.asarray(want_m))
+
+    def test_arbitrary_shape_op(self):
+        u = 0.01 * jax.random.normal(KEY, (3, 7, 11))
+        n = jnp.full((3, 7, 11), 0.01)
+        uhat_p, m_p = psm_apply(u, n, KEY, 0.7, use_pallas=True)
+        uhat_r, m_r = psm_apply(u, n, KEY, 0.7, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(uhat_p), np.asarray(uhat_r),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(m_p), np.asarray(m_r))
+
+    def test_tree_variant(self):
+        tree_u = {"a": 0.01 * jax.random.normal(KEY, (17,)),
+                  "b": 0.01 * jax.random.normal(KEY, (4, 9))}
+        tree_n = jax.tree_util.tree_map(
+            lambda x: jnp.full(x.shape, 0.01), tree_u)
+        uhat, mask = psm_apply_tree(tree_u, tree_n, KEY, 1.0)
+        for l in jax.tree_util.tree_leaves(uhat):
+            assert np.isfinite(np.asarray(l)).all()
+        for l in jax.tree_util.tree_leaves(mask):
+            assert set(np.unique(np.asarray(l))) <= {0, 1}
+
+    def test_kernel_unbiased_at_progress_one(self):
+        """The fused kernel preserves the paper's unbiasedness property."""
+        N = 100_000
+        u = jnp.full((N // 128, 128), 0.004)
+        n = jnp.full((N // 128, 128), 0.01)
+        k1, k2 = jax.random.split(KEY)
+        r_sm = jax.random.uniform(k1, u.shape, jnp.float32)
+        r_pm = jax.random.uniform(k2, u.shape, jnp.float32)
+        uhat, _ = psm_fused(u, n, r_sm, r_pm, 1.0, mode="binary",
+                            interpret=True)
+        assert abs(float(jnp.mean(uhat)) - 0.004) < 3e-4
+
+
+class TestBitpackKernel:
+    @pytest.mark.parametrize("shape", [(8, 128), (3, 32), (16, 4096),
+                                       (1, 64), (9, 224)])
+    def test_pack_matches_ref(self, shape):
+        bits = jax.random.bernoulli(KEY, 0.5, shape).astype(jnp.int8)
+        got = pack_bits_pallas(bits, interpret=True)
+        want = pack_ref(bits)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    @pytest.mark.parametrize("shape", [(8, 4), (3, 1), (16, 128)])
+    def test_unpack_roundtrip(self, shape):
+        words = jax.random.randint(
+            KEY, shape, 0, 2**31 - 1).astype(jnp.uint32)
+        bits = unpack_bits_pallas(words, interpret=True)
+        np.testing.assert_array_equal(np.asarray(bits),
+                                      np.asarray(unpack_ref(words)))
+        back = pack_bits_pallas(bits, interpret=True)
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(words))
+
+    def test_wire_width_is_one_bit(self):
+        bits = jnp.ones((4, 320), jnp.int8)
+        words = pack_bits_pallas(bits, interpret=True)
+        assert words.size * 32 == bits.size
+
+
+class TestRWKV6Kernel:
+    @pytest.mark.parametrize("B,T,H,hd", [(1, 8, 1, 16), (2, 16, 3, 32),
+                                          (2, 33, 2, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_model_scan(self, B, T, H, hd, dtype):
+        ks = jax.random.split(KEY, 5)
+        r = (0.5 * jax.random.normal(ks[0], (B, T, H, hd))).astype(dtype)
+        k = (0.5 * jax.random.normal(ks[1], (B, T, H, hd))).astype(dtype)
+        v = (0.5 * jax.random.normal(ks[2], (B, T, H, hd))).astype(dtype)
+        w = jax.nn.sigmoid(
+            jax.random.normal(ks[3], (B, T, H, hd))).astype(dtype)
+        u = 0.3 * jax.random.normal(ks[4], (H, hd))
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        out_k, s_k = wkv_pallas(r, k, v, w, u, s0, interpret=True)
+        out_r, s_r = _wkv_scan(r.astype(jnp.float32), k.astype(jnp.float32),
+                               v.astype(jnp.float32), w.astype(jnp.float32),
+                               u, s0)
+        tol = 1e-5 if dtype == jnp.float32 else 3e-2
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                                   atol=tol, rtol=tol)
+        np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_r),
+                                   atol=tol, rtol=tol)
+
+    def test_state_carry_composes(self):
+        """Running two halves with carried state == one full pass."""
+        B, T, H, hd = 1, 16, 2, 32
+        ks = jax.random.split(KEY, 5)
+        mk = lambda i: 0.5 * jax.random.normal(ks[i], (B, T, H, hd))
+        r, k, v = mk(0), mk(1), mk(2)
+        w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, hd)))
+        u = 0.3 * jax.random.normal(ks[4], (H, hd))
+        s0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+        full, s_full = wkv_pallas(r, k, v, w, u, s0, interpret=True)
+        h1, s_mid = wkv_pallas(r[:, :8], k[:, :8], v[:, :8], w[:, :8],
+                               u, s0, interpret=True)
+        h2, s_end = wkv_pallas(r[:, 8:], k[:, 8:], v[:, 8:], w[:, 8:],
+                               u, s_mid, interpret=True)
+        np.testing.assert_allclose(np.asarray(full),
+                                   np.concatenate([h1, h2], axis=1),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s_full), np.asarray(s_end),
+                                   atol=1e-5)
