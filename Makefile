@@ -1,0 +1,23 @@
+# Repro harness targets.  PYTHONPATH=src is baked into every target.
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test test-fast bench-engine bench quickstart
+
+# tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
+test:
+	$(PY) -m pytest -x -q
+
+# engine + core only (skips the slow per-arch smoke sweep)
+test-fast:
+	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
+	    tests/test_round_engine.py tests/test_fed_engine.py
+
+# looped-vs-batched round engine benchmark (ISSUE 1 acceptance)
+bench-engine:
+	$(PY) -m benchmarks.run --only engine
+
+bench:
+	$(PY) -m benchmarks.run --quick
+
+quickstart:
+	$(PY) examples/quickstart.py

@@ -1,0 +1,122 @@
+"""Looped-vs-batched round-engine benchmark (the tentpole's receipts).
+
+Measures steady-state rounds/sec of the seed's per-client loop (one jitted
+local update per client + blocking host sync + eager server aggregation —
+``fed/looped.py``'s execution model) against the batched round engine (one
+jitted XLA program per round, ``fed/engine.py``) on the synthetic CNN
+workload.  Both paths compute the same algorithm with the same keys; only
+the execution model differs, so the ratio is pure engine overhead.
+
+Rows:  engine/<algo>/looped, engine/<algo>/batched   (derived = rounds/sec)
+       engine/<algo>/speedup                         (derived = ratio)
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_image_task, make_partition, sample_local_batches
+from repro.fed import FLConfig
+from repro.fed.engine import make_round_engine, stack_client_batches
+from repro.core import (client_local_update, server_aggregate,
+                        server_aggregate_updates, sgd_local_update)
+from repro.models.cnn import cnn_init, cnn_loss
+
+K = 8               # clients per round
+STEPS = 5           # local steps
+BATCH = 16
+
+
+def _setup():
+    task = make_image_task(0, n=2000, hw=8, n_classes=8, noise=0.5)
+    parts = make_partition("iid", 0, task.y, num_clients=16)
+    params = cnn_init(jax.random.key(0), n_classes=8, channels=(4, 8), hw=8)
+    batches = [
+        sample_local_batches(131 + cid, task.x, task.y, parts[cid],
+                             steps=STEPS, batch=BATCH)
+        for cid in range(K)]
+    return params, batches
+
+
+def _time_rounds(round_once, n: int) -> float:
+    """Wall-seconds per round after a compile/warmup call."""
+    jax.block_until_ready(round_once())
+    t0 = time.time()
+    out = None
+    for _ in range(n):
+        out = round_once()
+    jax.block_until_ready(out)
+    return (time.time() - t0) / n
+
+
+def engine_rows(n_rounds: int = 30) -> List[Dict]:
+    params, batches = _setup()
+    picked = np.arange(K)
+    weights = [1.0] * K
+    rows = []
+
+    for algo in ("fedmrn", "fedavg"):
+        cfg = FLConfig(algorithm=algo, num_clients=16, clients_per_round=K,
+                       rounds=1, local_steps=STEPS, batch_size=BATCH,
+                       lr=0.1, noise_alpha=0.05)
+        mrn = cfg.fedmrn_config()
+
+        # ---- seed execution model: per-client jitted calls + host syncs ----
+        if algo == "fedmrn":
+            local = jax.jit(partial(client_local_update, cnn_loss, cfg=mrn,
+                                    base_seed=cfg.seed))
+
+            def looped_round():
+                results, losses = [], []
+                for cid in picked:
+                    res = local(params, batches[cid], round_idx=0,
+                                client_id=int(cid),
+                                train_key=jax.random.fold_in(
+                                    jax.random.key(cfg.seed + 1), int(cid)))
+                    results.append(res)
+                    losses.append(float(res.losses[-1]))   # seed's host sync
+                return server_aggregate(params, results, weights, cfg=mrn)
+        else:
+            local = jax.jit(partial(sgd_local_update, cnn_loss, lr=cfg.lr))
+
+            def looped_round():
+                updates, losses = [], []
+                for cid in picked:
+                    u, ls = local(params, batches[cid])
+                    updates.append(u)
+                    losses.append(float(ls[-1]))           # seed's host sync
+                return server_aggregate_updates(params, updates, weights)
+
+        # ---- batched: one jitted XLA program per round --------------------
+        round_fn, state0 = make_round_engine(cnn_loss, cfg, params)
+        stacked = stack_client_batches(batches)
+        picked_dev = jnp.asarray(picked, jnp.int32)
+        weights_dev = jnp.asarray(weights, jnp.float32)
+
+        def batched_round():
+            w, _, losses = round_fn(params, state0, stacked, picked_dev,
+                                    jnp.int32(0), weights_dev)
+            return w, losses          # losses stay device-resident
+
+        t_loop = _time_rounds(looped_round, n_rounds)
+        t_batch = _time_rounds(batched_round, n_rounds)
+        rows.append(dict(name=f"engine/{algo}/looped",
+                         us_per_call=t_loop * 1e6,
+                         derived=round(1.0 / t_loop, 2)))
+        rows.append(dict(name=f"engine/{algo}/batched",
+                         us_per_call=t_batch * 1e6,
+                         derived=round(1.0 / t_batch, 2)))
+        rows.append(dict(name=f"engine/{algo}/speedup", us_per_call=0.0,
+                         derived=round(t_loop / t_batch, 2)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in engine_rows():
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")

@@ -31,7 +31,7 @@ def _setup(partition: str, seed: int = 0):
 
 
 def _run(algo: str, partition: str, rounds: int = 15, seed: int = 0,
-         **cfg_kw) -> Dict:
+         engine: str = "batched", **cfg_kw) -> Dict:
     xtr, ytr, xte, yte, parts, params = _setup(partition, seed)
     cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
                    rounds=rounds, local_steps=10, batch_size=32, lr=0.1,
@@ -47,8 +47,10 @@ def _run(algo: str, partition: str, rounds: int = 15, seed: int = 0,
     def eval_fn(p):
         return float(cnn_accuracy(p, xte, yte))
 
+    # every table/figure runs on the batched round engine (one XLA program
+    # per round); engine="looped" reproduces the seed's reference loop
     return run_federated(cnn_loss, params, batch_fn, eval_fn, cfg,
-                         eval_every=max(1, rounds // 4))
+                         eval_every=max(1, rounds // 4), engine=engine)
 
 
 def table1_accuracy(partitions=("iid", "noniid2"), rounds=15):

@@ -15,10 +15,10 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer rounds (CI mode)")
     ap.add_argument("--only", default=None,
-                    help="table1|fig4|fig5|fig6|comm|roofline")
+                    help="table1|fig4|fig5|fig6|comm|engine|roofline")
     args = ap.parse_args()
 
-    from . import fl_suite, roofline_report
+    from . import engine_bench, fl_suite, roofline_report
 
     rounds = 6 if args.quick else 15
     sections = {
@@ -27,6 +27,8 @@ def main() -> None:
         "fig5": lambda: fl_suite.fig5_noise(rounds=max(4, rounds - 3)),
         "fig6": fl_suite.fig6_complexity,
         "comm": fl_suite.comm_table,
+        "engine": lambda: engine_bench.engine_rows(
+            n_rounds=10 if args.quick else 30),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:

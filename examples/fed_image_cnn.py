@@ -24,6 +24,10 @@ def main():
     ap.add_argument("--partition", default="noniid2",
                     choices=["iid", "noniid1", "noniid2"])
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--engine", default="batched",
+                    choices=["batched", "looped"],
+                    help="batched = one XLA program per round (default); "
+                         "looped = legacy per-client reference loop")
     ap.add_argument("--out", default="/tmp/fed_image_cnn")
     args = ap.parse_args()
 
@@ -53,7 +57,8 @@ def main():
             return float(cnn_accuracy(p, xte, yte))
 
         hist = run_federated(cnn_loss, params0, batch_fn, eval_fn, cfg,
-                             eval_every=max(1, args.rounds // 5))
+                             eval_every=max(1, args.rounds // 5),
+                             engine=args.engine)
         bpp = hist["uplink_bits_per_client"] / hist["params"]
         curve = " ".join(f"{a:.2f}" for a in hist["acc"])
         print(f"{algo:12s} {hist['final_acc']:6.3f} {bpp:7.2f} {curve}")

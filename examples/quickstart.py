@@ -4,6 +4,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 Demonstrates the paper's headline claim in ~1 min on CPU: FedMRN matches
 FedAvg accuracy while sending 1 bit per parameter uplink (~32x compression).
+
+Each round executes as ONE jitted XLA program (all selected clients vmapped
+over a stacked client axis — see src/repro/fed/engine.py); pass
+``engine="looped"`` to run_federated for the legacy per-client loop.
 """
 import jax
 

@@ -1,0 +1,63 @@
+"""Version-compat shims for the jax APIs this repo uses.
+
+Pinned floor is jax 0.4.37 (the container's toolchain); newer releases
+added two things we rely on:
+
+- ``jax.sharding.AxisType`` (mesh axis_types kwarg).  Older jax takes no
+  ``axis_types`` and treats every axis as Auto — exactly the behaviour we
+  request, so the shim simply drops the kwarg.
+- autodiff/batching rules for ``jax.lax.optimization_barrier``.  On
+  0.4.37 reverse-mode (and vmap) through the barrier raise
+  NotImplementedError; the barrier is semantically the identity, so the
+  shim registers identity jvp/transpose/batching rules directly on the
+  primitive.  The barrier itself still applies in the forward computation
+  — only the missing transformation rules are filled in.
+"""
+from __future__ import annotations
+
+import jax
+
+AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def mesh_axis_kwargs(n_axes: int) -> dict:
+    """kwargs for jax.make_mesh marking all ``n_axes`` axes Auto."""
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
+
+
+def _install_barrier_rules() -> None:
+    from jax.interpreters import ad, batching
+    try:
+        from jax._src.lax.lax import optimization_barrier_p as prim
+    except ImportError:      # layout changed → newer jax → rules exist
+        return
+
+    def _tuple(outs):
+        return tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
+
+    if prim not in batching.primitive_batchers:
+        def _batch(args, dims):
+            return _tuple(prim.bind(*args)), dims
+
+        batching.primitive_batchers[prim] = _batch
+
+    if prim not in ad.primitive_jvps:
+        def _jvp(primals, tangents):
+            tans = tuple(ad.instantiate_zeros(t) if isinstance(t, ad.Zero)
+                         else t for t in tangents)
+            return _tuple(prim.bind(*primals)), tans
+
+        ad.primitive_jvps[prim] = _jvp
+
+    if prim not in ad.primitive_transposes:
+        def _transpose(cts, *args):
+            return _tuple(cts)
+
+        ad.primitive_transposes[prim] = _transpose
+
+
+_install_barrier_rules()
+
+optimization_barrier = jax.lax.optimization_barrier

@@ -1,4 +1,11 @@
 """FedMRN core: noise, masking (SM/PM/PSM), packing, compressors, protocol."""
+from .backend import (  # noqa: F401
+    BACKENDS,
+    default_backend,
+    pallas_interpret,
+    resolve_backend,
+    use_backend,
+)
 from .noise import NoiseConfig, client_round_key, gen_noise  # noqa: F401
 from .masking import (  # noqa: F401
     MASK_MODES,
@@ -18,18 +25,26 @@ from .masking import (  # noqa: F401
 from .packing import (  # noqa: F401
     pack_bits,
     pack_mask,
+    pack_rows,
     payload_bits,
     tree_num_params,
     tree_pack,
+    tree_pack_stacked,
     tree_unpack,
+    tree_unpack_stacked,
     unpack_bits,
     unpack_mask,
+    unpack_rows,
 )
 from .compressors import REGISTRY, Compressor, make_compressor  # noqa: F401
 from .fedmrn import (  # noqa: F401
     ClientResult,
     FedMRNConfig,
     client_local_update,
+    final_mask_key,
+    mix_add,
+    psm_local_train,
+    sample_final_mask,
     server_aggregate,
     server_aggregate_updates,
     server_decode_update,

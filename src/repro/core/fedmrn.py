@@ -34,6 +34,7 @@ class FedMRNConfig:
     use_pm: bool = True              # ablation: False → progress ≡ 1
     error_feedback: bool = False     # beyond-paper: carry u − û residual
     lr: float = 0.1
+    backend: str | None = None       # masking/packing kernels: ref | pallas
 
     def __post_init__(self):
         if self.mask_mode not in masking.MASK_MODES:
@@ -57,11 +58,24 @@ def _tree_zeros_like(t: Pytree) -> Pytree:
     return jax.tree_util.tree_map(jnp.zeros_like, t)
 
 
+def mix_add(p, u_hat):
+    """w + û leaf-mix with the model's param dtype preserved (bf16-safe).
+
+    The ONE definition of how updates meet params — engine aggregation and
+    the pod program reuse it, so precision rules change in one place.
+    """
+    return (p.astype(jnp.float32) + u_hat).astype(p.dtype)
+
+
+_mix_add = mix_add  # internal alias
+
+
 def _masked_update(u, noise, key, *, progress, cfg: FedMRNConfig) -> Pytree:
     """The û actually used in the forward pass (Alg. 1 lines 15-18)."""
     if cfg.use_sm and cfg.use_pm:
         return masking.tree_psm(
-            u, noise, key, progress=progress, mode=cfg.mask_mode
+            u, noise, key, progress=progress, mode=cfg.mask_mode,
+            backend=cfg.backend,
         )
     if cfg.use_sm:  # SM only: every element masked every step
         return masking.tree_sm(u, noise, key, mode=cfg.mask_mode)
@@ -78,6 +92,66 @@ def _masked_update(u, noise, key, *, progress, cfg: FedMRNConfig) -> Pytree:
         return jnp.where(P, hat, bar)
 
     return masking._tree_keyed_map(dm_leaf, key, u, noise)
+
+
+def psm_local_train(
+    loss_fn: LossFn,
+    w_global: Pytree,
+    batches: Pytree,           # leaves stacked along leading axis S
+    noise: Pytree,
+    train_key: jax.Array,
+    *,
+    cfg: FedMRNConfig,
+    u0: Pytree | None = None,
+) -> Tuple[Pytree, jax.Array]:
+    """S local SGD steps on ``u`` with PSM forward (Alg. 1 lines 12-18).
+
+    The shared local-training body of every FedMRN round program: the
+    simulation engine vmaps it over a stacked client axis, the pod program
+    runs it per mesh-client slice.  Returns (u_final, per-step losses).
+    """
+    num_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    if u0 is None:
+        u0 = _tree_zeros_like(w_global)
+
+    def step(u, inp):
+        tau, batch = inp
+        progress = (tau + 1.0) / num_steps
+        k = jax.random.fold_in(train_key, tau)
+
+        def fwd(u_):
+            u_hat = _masked_update(u_, noise, k, progress=progress, cfg=cfg)
+            return loss_fn(jax.tree_util.tree_map(_mix_add, w_global, u_hat),
+                           batch)
+
+        loss, grads = jax.value_and_grad(fwd)(u)
+        u = jax.tree_util.tree_map(lambda a, g: a - cfg.lr * g, u, grads)
+        return u, loss
+
+    taus = jnp.arange(num_steps, dtype=jnp.float32)
+    return jax.lax.scan(step, u0, (taus, batches))
+
+
+def sample_final_mask(
+    u_final: Pytree,
+    noise: Pytree,
+    mask_key: jax.Array,
+    *,
+    cfg: FedMRNConfig,
+) -> Pytree:
+    """Final uplink masks M(u^{S+1}, G(s)) (Alg. 1 line 19)."""
+    if cfg.use_sm:
+        return masking.tree_sample_mask(u_final, noise, mask_key,
+                                        mode=cfg.mask_mode)
+    return jax.tree_util.tree_map(
+        lambda ul, nl: masking.deterministic_mask(ul, nl,
+                                                  mode=cfg.mask_mode),
+        u_final, noise)
+
+
+def final_mask_key(train_key: jax.Array, num_steps: int) -> jax.Array:
+    """Key convention for the post-training mask draw."""
+    return jax.random.fold_in(train_key, num_steps + 1)
 
 
 def client_local_update(
@@ -97,38 +171,16 @@ def client_local_update(
     noise = gen_noise(seed_key, w_global, cfg.noise)
     num_steps = jax.tree_util.tree_leaves(batches)[0].shape[0]
 
-    u0 = _tree_zeros_like(w_global)
+    u0 = None
     if cfg.error_feedback and init_residual is not None:
         # beyond-paper: warm-start u at last round's compression residual
         u0 = init_residual
 
-    def step(u, inp):
-        tau, batch = inp
-        progress = (tau + 1.0) / num_steps
-        k = jax.random.fold_in(train_key, tau)
-
-        def fwd(u_):
-            u_hat = _masked_update(u_, noise, k, progress=progress, cfg=cfg)
-            return loss_fn(_tree_add(w_global, u_hat), batch)
-
-        loss, grads = jax.value_and_grad(fwd)(u)
-        u = jax.tree_util.tree_map(lambda a, g: a - cfg.lr * g, u, grads)
-        return u, loss
-
-    taus = jnp.arange(num_steps, dtype=jnp.float32)
-    u_final, losses = jax.lax.scan(step, u0, (taus, batches))
-
-    # final masks: M(u^{S+1}, G(s))  (Alg. 1 line 19)
-    mask_key = jax.random.fold_in(train_key, num_steps + 1)
-    if cfg.use_sm:
-        m = masking.tree_sample_mask(u_final, noise, mask_key,
-                                     mode=cfg.mask_mode)
-    else:
-        m = jax.tree_util.tree_map(
-            lambda ul, nl: masking.deterministic_mask(ul, nl,
-                                                      mode=cfg.mask_mode),
-            u_final, noise)
-    packed = packing.tree_pack(m, mode=cfg.mask_mode)
+    u_final, losses = psm_local_train(loss_fn, w_global, batches, noise,
+                                      train_key, cfg=cfg, u0=u0)
+    m = sample_final_mask(u_final, noise,
+                          final_mask_key(train_key, num_steps), cfg=cfg)
+    packed = packing.tree_pack(m, mode=cfg.mask_mode, backend=cfg.backend)
 
     u_hat = masking.tree_masked_noise(noise, m)
     residual = (jax.tree_util.tree_map(jnp.subtract, u_final, u_hat)
@@ -172,7 +224,8 @@ def server_decode_update(
 ) -> Pytree:
     """Recover û = G(s) ⊙ m from the wire payload."""
     noise = gen_noise(seed_key, like, cfg.noise)
-    m = packing.tree_unpack(packed_mask, like, mode=cfg.mask_mode)
+    m = packing.tree_unpack(packed_mask, like, mode=cfg.mask_mode,
+                            backend=cfg.backend)
     return masking.tree_masked_noise(noise, m)
 
 

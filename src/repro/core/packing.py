@@ -17,6 +17,8 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from .backend import pallas_interpret, resolve_backend
+
 Pytree = Any
 WORD = 32
 
@@ -74,27 +76,105 @@ def tree_bit_sizes(tree: Pytree):
     return [math.prod(jnp.shape(l)) or 1 for l in jax.tree_util.tree_leaves(tree)]
 
 
-def tree_pack(mask_tree: Pytree, *, mode: str = "binary") -> jax.Array:
-    """Concatenate all leaves' bits into one padded uint32 payload."""
+# --- backend-dispatched row packing (the wire hot path) --------------------
+#
+# ``pack_rows``/``unpack_rows`` operate on a (rows, n_bits) {0,1} matrix —
+# one row per client in the batched round — and dispatch to the Pallas
+# bitpack kernel (``kernels/bitpack``) or the jnp reference.  Both produce
+# the same little-endian uint32 words, so dispatch is value-transparent.
+
+def pack_rows(bits: jax.Array, *, backend: str | None = None) -> jax.Array:
+    """(R, n_bits) {0,1} → (R, ceil(n_bits/32)) uint32, little-endian."""
+    backend = resolve_backend(backend)
+    n_bits = bits.shape[-1]
+    if backend == "pallas":
+        from ..kernels.bitpack.ops import pack
+        pad = (-n_bits) % WORD
+        x = bits.astype(jnp.int8)
+        if pad:
+            x = jnp.pad(x, [(0, 0), (0, pad)])
+        return pack(x, use_pallas=True, interpret=pallas_interpret())
+    return pack_lastdim(bits)
+
+
+def unpack_rows(words: jax.Array, n_bits: int,
+                *, backend: str | None = None) -> jax.Array:
+    """(R, W) uint32 → (R, n_bits) {0,1} int8; inverse of :func:`pack_rows`."""
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        from ..kernels.bitpack.ops import unpack
+        bits = unpack(words, use_pallas=True, interpret=pallas_interpret())
+        return bits[..., :n_bits]
+    return unpack_lastdim(words, n_bits)
+
+
+def _tree_bits(mask_tree: Pytree) -> jax.Array:
+    """Flatten a mask pytree to one {0,1} bool vector (leaf order)."""
     leaves = jax.tree_util.tree_leaves(mask_tree)
-    flat = jnp.concatenate(
-        [(l > 0).reshape(-1) for l in leaves]
-    )
+    return jnp.concatenate([(l > 0).reshape(-1) for l in leaves])
+
+
+def tree_pack(mask_tree: Pytree, *, mode: str = "binary",
+              backend: str | None = None) -> jax.Array:
+    """Concatenate all leaves' bits into one padded uint32 payload."""
     del mode  # both modes store sign bit identically
+    flat = _tree_bits(mask_tree)
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        return pack_rows(flat[None, :], backend=backend).reshape(-1)
     return pack_bits(flat)
 
 
-def tree_unpack(words: jax.Array, like: Pytree, *, mode: str = "binary") -> Pytree:
+def tree_unpack(words: jax.Array, like: Pytree, *, mode: str = "binary",
+                backend: str | None = None) -> Pytree:
     """Unpack one payload into a mask pytree shaped like ``like``."""
     leaves, treedef = jax.tree_util.tree_flatten(like)
     sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
     total = sum(sizes)
-    bits = unpack_bits(words, total)
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        bits = unpack_rows(words[None, :], total, backend=backend)[0]
+    else:
+        bits = unpack_bits(words, total)
     if mode == "signed":
         bits = (2 * bits - 1).astype(jnp.int8)
     out, off = [], 0
     for leaf, sz in zip(leaves, sizes):
         out.append(bits[off: off + sz].reshape(jnp.shape(leaf)))
+        off += sz
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_pack_stacked(mask_tree: Pytree, *, mode: str = "binary",
+                      backend: str | None = None) -> jax.Array:
+    """Pack a client-stacked mask pytree (leading axis K on every leaf).
+
+    Returns the (K, ceil(P/32)) uint32 payload matrix — row k is exactly
+    ``tree_pack`` of client k's mask, but the whole batch is packed in one
+    kernel launch, which is the uplink hot path of the batched round.
+    """
+    del mode
+    leaves = jax.tree_util.tree_leaves(mask_tree)
+    K = leaves[0].shape[0]
+    flat = jnp.concatenate(
+        [(l > 0).reshape(K, -1) for l in leaves], axis=1)
+    return pack_rows(flat, backend=backend)
+
+
+def tree_unpack_stacked(words: jax.Array, like: Pytree, *,
+                        mode: str = "binary",
+                        backend: str | None = None) -> Pytree:
+    """Inverse of :func:`tree_pack_stacked`: (K, W) → stacked mask pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
+    total = sum(sizes)
+    K = words.shape[0]
+    bits = unpack_rows(words, total, backend=backend)
+    if mode == "signed":
+        bits = (2 * bits - 1).astype(jnp.int8)
+    out, off = [], 0
+    for leaf, sz in zip(leaves, sizes):
+        out.append(bits[:, off: off + sz].reshape((K,) + tuple(jnp.shape(leaf))))
         off += sz
     return jax.tree_util.tree_unflatten(treedef, out)
 

@@ -1,2 +1,3 @@
 """Federated training engine (simulation + sharded pod modes)."""
+from .engine import make_round_engine, uplink_bits  # noqa: F401
 from .simulation import ALGORITHMS, FLConfig, run_federated  # noqa: F401

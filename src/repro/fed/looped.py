@@ -1,0 +1,152 @@
+"""Legacy per-client round loop — the REFERENCE engine.
+
+This is the seed's execution model: a Python loop over the K selected
+clients with one jitted local-update call and a blocking ``float(...)``
+host sync per client.  It computes the same algorithm as the batched
+round program in ``fed/engine.py`` (same key derivations, same
+aggregation), and exists for exactly two purposes:
+
+  1. parity tests — the batched engine must reproduce its accuracy
+     trajectory at a fixed seed;
+  2. the looped-vs-batched engine benchmark (``benchmarks`` entry
+     ``engine/*``), which quantifies the rounds/sec win.
+
+Production callers should use ``run_federated`` (batched) instead.
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (NoiseConfig, client_local_update, gen_noise,
+                    make_compressor, server_aggregate,
+                    server_aggregate_updates, sgd_local_update,
+                    tree_num_params)
+from .engine import FLConfig, fedpm_local, fedsparsify_local, uplink_bits
+
+Pytree = Any
+
+
+def run_federated_looped(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    init_params: Pytree,
+    client_batch_fn: Callable[[int, int], Any],
+    eval_fn: Callable[[Pytree], float],
+    cfg: FLConfig,
+    *,
+    eval_every: int = 1,
+    client_weights: Optional[List[float]] = None,
+) -> Dict[str, Any]:
+    rng = np.random.RandomState(cfg.seed)
+    w = init_params
+    mrn_cfg = cfg.fedmrn_config()
+    history: Dict[str, Any] = {
+        "algorithm": cfg.algorithm, "acc": [], "round": [],
+        "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
+        "params": tree_num_params(w),
+    }
+    if client_weights is None:
+        client_weights = [1.0] * cfg.num_clients
+
+    # jitted workers (compiled once, reused by every client/round)
+    if cfg.algorithm in ("fedmrn", "fedmrns"):
+        local = jax.jit(partial(client_local_update, loss_fn, cfg=mrn_cfg,
+                                base_seed=cfg.seed))
+    elif cfg.algorithm == "fedpm":
+        local_pm = jax.jit(partial(fedpm_local, loss_fn, lr=cfg.lr))
+        noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
+        w_frozen = gen_noise(jax.random.key(cfg.seed), w, noise_cfg)
+        scores_global = jax.tree_util.tree_map(jnp.zeros_like, w)
+    elif cfg.algorithm == "fedsparsify":
+        local_sp = jax.jit(partial(fedsparsify_local, loss_fn, lr=cfg.lr,
+                                   frac=cfg.sparsify_frac))
+    else:
+        local_sgd = jax.jit(partial(sgd_local_update, loss_fn, lr=cfg.lr))
+        compressor = (None if cfg.algorithm == "fedavg" else
+                      make_compressor(cfg.algorithm,
+                                      topk_frac=cfg.topk_frac,
+                                      qsgd_bits=cfg.qsgd_bits,
+                                      noise=mrn_cfg.noise))
+        if compressor is not None:
+            comp_fn = jax.jit(compressor.roundtrip)
+
+    residuals: Dict[int, Pytree] = {}
+    t0 = time.time()
+    for rnd in range(cfg.rounds):
+        picked = rng.choice(cfg.num_clients, cfg.clients_per_round,
+                            replace=False)
+        weights = [client_weights[c] for c in picked]
+        losses = []
+
+        if cfg.algorithm in ("fedmrn", "fedmrns"):
+            results = []
+            for cid in picked:
+                batches = client_batch_fn(rnd, int(cid))
+                noise_id = 0 if cfg.shared_noise else int(cid)
+                res = local(w, batches, round_idx=rnd, client_id=noise_id,
+                            train_key=jax.random.fold_in(
+                                jax.random.key(cfg.seed + 1),
+                                rnd * 1000 + int(cid)),
+                            init_residual=residuals.get(int(cid)))
+                if cfg.error_feedback:
+                    residuals[int(cid)] = res.residual
+                results.append(res)
+                losses.append(float(res.losses[-1]))
+            w = server_aggregate(w, results, weights, cfg=mrn_cfg)
+
+        elif cfg.algorithm == "fedpm":
+            mask_sum = jax.tree_util.tree_map(jnp.zeros_like, scores_global)
+            tot = 0.0
+            for cid in picked:
+                batches = client_batch_fn(rnd, int(cid))
+                masks, ls = local_pm(
+                    w_frozen, scores_global, batches,
+                    key=jax.random.fold_in(jax.random.key(cfg.seed + 2),
+                                           rnd * 1000 + int(cid)))
+                mask_sum = jax.tree_util.tree_map(jnp.add, mask_sum, masks)
+                tot += 1.0
+                losses.append(float(ls[-1]))
+            # Beta(1,1)-posterior estimate — see engine._make_fedpm_round
+            probs = jax.tree_util.tree_map(
+                lambda m: (m.astype(jnp.float32) + 1.0) / (tot + 2.0),
+                mask_sum)
+            scores_global = jax.tree_util.tree_map(
+                lambda p_: jnp.log(p_ / (1 - p_)), probs)   # sigmoid^-1
+            w = jax.tree_util.tree_map(
+                lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
+
+        elif cfg.algorithm == "fedsparsify":
+            ws = []
+            for cid in picked:
+                batches = client_batch_fn(rnd, int(cid))
+                w_local, ls = local_sp(w, batches)
+                ws.append(w_local)
+                losses.append(float(ls[-1]))
+            zero = jax.tree_util.tree_map(jnp.zeros_like, w)
+            w = server_aggregate_updates(zero, ws, weights)
+
+        else:  # fedavg + post-training compressors
+            updates = []
+            for cid in picked:
+                batches = client_batch_fn(rnd, int(cid))
+                u, ls = local_sgd(w, batches)
+                if compressor is not None:
+                    u = comp_fn(u, jax.random.fold_in(
+                        jax.random.key(cfg.seed + 3),
+                        rnd * 1000 + int(cid)))
+                updates.append(u)
+                losses.append(float(ls[-1]))
+            w = server_aggregate_updates(w, updates, weights)
+
+        history["local_loss"].append(float(np.mean(losses)))
+        if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
+            history["acc"].append(float(eval_fn(w)))
+            history["round"].append(rnd)
+    history["wall_s"] = time.time() - t0
+    history["final_acc"] = history["acc"][-1]
+    return history

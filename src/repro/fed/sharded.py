@@ -17,11 +17,18 @@ between pods over the slow inter-pod links — else 'data').  One round:
      (seed → noise is deterministic, Eq. 5) and accumulates
      w += mean_c G(s_c) ⊙ m_c.
 
+The per-client local computation is the SAME round-program code the
+simulation engine vmaps (``core.fedmrn.psm_local_train`` /
+``sample_final_mask``), parameterised by :class:`PodRoundSpec` instead of
+hardcoded hyper-parameters; only the collective choreography (last-dim
+packing, client-axis all-gather, per-shard noise regen) is pod-specific.
+
 ``mode='fedavg'`` lowers the float-aggregation baseline for the roofline
 comparison.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 from typing import Any, Dict, Tuple
 
@@ -29,8 +36,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.masking import tree_psm, tree_sample_mask
-from ..core.noise import NoiseConfig, gen_noise
+from ..core.fedmrn import (FedMRNConfig, final_mask_key, mix_add,
+                           psm_local_train, sample_final_mask)
+from ..core.noise import NoiseConfig, client_round_key, gen_noise
 from ..core.packing import pack_lastdim, unpack_lastdim
 from ..sharding.rules import param_shardings
 
@@ -38,6 +46,22 @@ Pytree = Any
 
 LOCAL_STEPS = 2          # S for the dry-run round (linear in FLOPs)
 NOISE = NoiseConfig(dist="uniform", alpha=1e-2)
+
+
+@dataclasses.dataclass(frozen=True)
+class PodRoundSpec:
+    """Round hyper-parameters for the pod program (was hardcoded)."""
+
+    local_steps: int = LOCAL_STEPS
+    lr: float = 0.1
+    noise: NoiseConfig = NOISE
+    mask_mode: str = "binary"
+    base_seed: int = 0
+    backend: str | None = None     # masking/packing kernel backend
+
+    def fedmrn_config(self) -> FedMRNConfig:
+        return FedMRNConfig(mask_mode=self.mask_mode, noise=self.noise,
+                            lr=self.lr, backend=self.backend)
 
 
 def client_axis_of(mesh) -> str:
@@ -57,11 +81,14 @@ def _shift_spec(ns: NamedSharding, client_axis: str, mesh) -> NamedSharding:
 
 
 def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
-                         b_shard, *, mode: str = "fedmrn"):
+                         b_shard, *, mode: str = "fedmrn",
+                         spec: PodRoundSpec = PodRoundSpec()):
     """Returns (step_fn, arg_specs, in_shardings) for jit+lower."""
     cfg = model.cfg
     client_axis = client_axis_of(mesh)
     C = mesh.shape[client_axis]
+    mrn = spec.fedmrn_config()
+    S = spec.local_steps
 
     # params must NOT be zero-sharded over the client axis (each client
     # needs the full model in its slice) — reshard with fsdp minus client
@@ -81,9 +108,8 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
     # split the global batch into (C, S_local, b_local, ...) local streams
     def split_batch_spec(s):
         B = s.shape[0]
-        b_local = max(1, B // (C * LOCAL_STEPS))
-        return jax.ShapeDtypeStruct((C, LOCAL_STEPS, b_local) + s.shape[1:],
-                                    s.dtype)
+        b_local = max(1, B // (C * S))
+        return jax.ShapeDtypeStruct((C, S, b_local) + s.shape[1:], s.dtype)
 
     fb_specs = {k: split_batch_spec(v) for k, v in batch_specs.items()
                 if k != "positions3"}
@@ -91,37 +117,32 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
                 for k in fb_specs}
 
     def one_client_update(u_c, batch_c, client_id, w):
-        """S local steps of SGD on u with PSM (Alg. 1)."""
-        key = jax.random.fold_in(jax.random.key(0), client_id)
-        noise = gen_noise(key, w, NOISE)
+        """S local steps of SGD on u with PSM — the shared Alg. 1 body."""
+        seed_key = client_round_key(spec.base_seed, 0, client_id)
+        noise = gen_noise(seed_key, w, mrn.noise)
+        train_key = jax.random.fold_in(
+            jax.random.key(spec.base_seed + 1), client_id)
 
-        def local_step(u, inp):
-            tau, b = inp
-            progress = (tau + 1.0) / LOCAL_STEPS
-            k = jax.random.fold_in(key, 1000 + tau)
+        if mode == "fedmrn":
+            u_c, losses = psm_local_train(model.loss_fn, w, batch_c, noise,
+                                          train_key, cfg=mrn, u0=u_c)
+            m = sample_final_mask(u_c, noise, final_mask_key(train_key, S),
+                                  cfg=mrn)
+            return m, losses.mean(), noise
 
+        # fedavg baseline: same scan shape, no masking
+        def local_step(u, batch):
             def fwd(u_):
-                if mode == "fedmrn":
-                    u_hat = tree_psm(u_, noise, k, progress=progress,
-                                     mode="binary")
-                else:
-                    u_hat = u_
-                wc = jax.tree_util.tree_map(
-                    lambda p, uh: (p.astype(jnp.float32) + uh).astype(p.dtype),
-                    w, u_hat)
-                return model.loss_fn(wc, b)
+                wc = jax.tree_util.tree_map(mix_add, w, u_)
+                return model.loss_fn(wc, batch)
 
             loss, g = jax.value_and_grad(fwd)(u)
-            u = jax.tree_util.tree_map(lambda a, gi: a - 0.1 * gi, u, g)
+            u = jax.tree_util.tree_map(
+                lambda a, gi: a - spec.lr * gi, u, g)
             return u, loss
 
-        taus = jnp.arange(LOCAL_STEPS, dtype=jnp.float32)
-        u_c, losses = jax.lax.scan(local_step, u_c, (taus, batch_c))
-        if mode != "fedmrn":
-            return u_c, losses.mean(), noise
-        m = tree_sample_mask(u_c, noise, jax.random.fold_in(key, 999),
-                             mode="binary")
-        return m, losses.mean(), noise
+        u_c, losses = jax.lax.scan(local_step, u_c, batch_c)
+        return u_c, losses.mean(), noise
 
     def step(w, u, batch):
         client_ids = jnp.arange(C)
@@ -140,8 +161,8 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
 
             # ---- server: regen noise per client, Eq. (5) --------------------
             def srv_body(acc, cid):
-                key = jax.random.fold_in(jax.random.key(0), cid)
-                noise_c = gen_noise(key, w, NOISE)
+                key = client_round_key(spec.base_seed, 0, cid)
+                noise_c = gen_noise(key, w, mrn.noise)
                 u_hat = jax.tree_util.tree_map(
                     lambda words, wl, nl: nl * unpack_lastdim(
                         words[cid], wl.shape[-1]).astype(nl.dtype),
@@ -159,8 +180,7 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
                 lambda uc: jnp.sum(uc.astype(jnp.float32), axis=0), out)
 
         new_w = jax.tree_util.tree_map(
-            lambda p, a: (p.astype(jnp.float32) + a / C).astype(p.dtype),
-            w, agg)
+            lambda p, a: mix_add(p, a / C), w, agg)
         return new_w, losses.mean()
 
     args = (p_specs, u_specs, fb_specs)

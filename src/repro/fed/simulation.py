@@ -9,143 +9,35 @@ Runs R rounds of K-client FL with any of:
   fedpm             supermask-as-weights baseline (masks on frozen noise)
   fedsparsify       magnitude-pruned weight upload baseline
 
-All local computation is jitted once per algorithm; clients share the
-jitted program.  The engine records per-round global accuracy, local
-losses, and exact uplink bits, so every paper table/figure can be emitted
-from one ``history`` dict.
+Execution model (``fed/engine.py``): each round is ONE jitted XLA program —
+all K selected clients run as a vmap over a stacked client axis, with
+local training, mask sampling, Pallas-backed bit-packing, and server
+aggregation fused end-to-end.  This host loop only samples client ids,
+stacks their batches, and reads metrics; per-round losses stay on device
+and the only host syncs are the eval reads.
+
+``engine="looped"`` dispatches to the legacy per-client reference loop
+(``fed/looped.py``) — kept for parity tests and the engine benchmark.
+
+The engine records per-round global accuracy, local losses, and exact
+uplink bits, so every paper table/figure can be emitted from one
+``history`` dict.
 """
 from __future__ import annotations
 
-import dataclasses
 import time
-from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (FedMRNConfig, NoiseConfig, client_local_update,
-                    client_round_key, gen_noise, make_compressor,
-                    server_aggregate, server_aggregate_updates,
-                    sgd_local_update, baseline_record, fedmrn_record,
-                    tree_num_params)
-from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
+from ..core import tree_num_params
+from .engine import (ALGORITHMS, FLConfig, make_round_engine,  # noqa: F401
+                     stack_client_batches, uplink_bits)
 
 Pytree = Any
 
-ALGORITHMS = (("fedavg", "fedmrn", "fedmrns", "fedpm", "fedsparsify")
-              + tuple(c for c in COMPRESSOR_REGISTRY if c != "none"))
-
-
-@dataclasses.dataclass(frozen=True)
-class FLConfig:
-    algorithm: str = "fedmrn"
-    num_clients: int = 20
-    clients_per_round: int = 5
-    rounds: int = 30
-    local_steps: int = 20
-    batch_size: int = 32
-    lr: float = 0.1
-    seed: int = 0
-    # fedmrn specifics (paper defaults: uniform, 1e-2 / 5e-3)
-    noise_dist: str = "uniform"
-    noise_alpha: float = 1e-2
-    use_sm: bool = True
-    use_pm: bool = True
-    error_feedback: bool = False
-    # beyond-paper: one shared noise G(s_t) per ROUND (instead of per
-    # client).  Masks stay per-client, so the uplink is unchanged (1 bpp),
-    # but Σ_k G(s_k)⊙m_k = G(s_t) ⊙ Σ_k m_k — the server aggregation
-    # becomes an integer mask-count (popcount) scaled by one noise tensor,
-    # and at pod scale the mask all-gather can become a ⌈log2(K+1)⌉-bit
-    # integer all-reduce (a further ~3× cross-client traffic cut at K=16).
-    shared_noise: bool = False
-    # baselines
-    topk_frac: float = 0.03
-    sparsify_frac: float = 0.03    # fedsparsify keeps top 3% of weights
-    qsgd_bits: int = 2
-
-    def fedmrn_config(self) -> FedMRNConfig:
-        mode = "signed" if self.algorithm == "fedmrns" else "binary"
-        return FedMRNConfig(
-            mask_mode=mode,
-            noise=NoiseConfig(dist=self.noise_dist, alpha=self.noise_alpha),
-            use_sm=self.use_sm, use_pm=self.use_pm,
-            error_feedback=self.error_feedback, lr=self.lr)
-
-
-def _uplink_bits(cfg: FLConfig, params: Pytree) -> int:
-    P = tree_num_params(params)
-    L = len(jax.tree_util.tree_leaves(params))
-    if cfg.algorithm in ("fedmrn", "fedmrns"):
-        return fedmrn_record(P).uplink_bits
-    if cfg.algorithm == "fedavg":
-        return 32 * P
-    if cfg.algorithm == "fedpm":
-        return baseline_record("fedpm", P, L).uplink_bits
-    if cfg.algorithm == "fedsparsify":
-        return baseline_record("fedsparsify", P, L,
-                               topk_frac=cfg.sparsify_frac).uplink_bits
-    return baseline_record(cfg.algorithm, P, L, topk_frac=cfg.topk_frac,
-                           qsgd_bits=cfg.qsgd_bits).uplink_bits
-
-
-# ---------------------------------------------------------------------------
-# FedPM baseline: supermask on frozen noise as *weights* (paper §2.2)
-# ---------------------------------------------------------------------------
-
-def _fedpm_local(loss_fn, w_init, scores, batches, *, lr, key):
-    """Train sigmoid-scores; weights = w_init ⊙ Bern(sigmoid(s)) with STE."""
-
-    def masked_params(s, k):
-        leaves, treedef = jax.tree_util.tree_flatten(s)
-        w_leaves = jax.tree_util.tree_leaves(w_init)
-        out = []
-        for i, (sl, wl) in enumerate(zip(leaves, w_leaves)):
-            prob = jax.nn.sigmoid(sl)
-            m = jax.random.bernoulli(jax.random.fold_in(k, i), prob)
-            m = prob + jax.lax.stop_gradient(m.astype(prob.dtype) - prob)
-            out.append(wl * m)
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    def step(s, inp):
-        tau, batch = inp
-        k = jax.random.fold_in(key, tau)
-
-        def fwd(s_):
-            return loss_fn(masked_params(s_, k), batch)
-
-        loss, g = jax.value_and_grad(fwd)(s)
-        s = jax.tree_util.tree_map(lambda a, gi: a - lr * gi, s, g)
-        return s, loss
-
-    n = jax.tree_util.tree_leaves(batches)[0].shape[0]
-    s_final, losses = jax.lax.scan(step, scores,
-                                   (jnp.arange(n), batches))
-    # uplink: Bernoulli-sampled masks
-    masks = jax.tree_util.tree_map(
-        lambda sl: jax.random.bernoulli(key, jax.nn.sigmoid(sl)).astype(
-            jnp.float32), s_final)
-    return masks, losses
-
-
-def _fedsparsify_local(loss_fn, w, batches, *, lr, frac):
-    w_new, losses = sgd_local_update(loss_fn, w, batches, lr=lr)
-    w_new = jax.tree_util.tree_map(jnp.add, w, w_new)  # u → w_local
-
-    def prune(x):
-        flat = jnp.abs(x).reshape(-1)
-        k = max(1, int(np.ceil(frac * flat.shape[0])))
-        thresh = jax.lax.top_k(flat, k)[0][-1]
-        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
-
-    return jax.tree_util.tree_map(prune, w_new), losses
-
-
-# ---------------------------------------------------------------------------
-# the engine
-# ---------------------------------------------------------------------------
 
 def run_federated(
     loss_fn: Callable[[Pytree, Any], jax.Array],
@@ -157,110 +49,45 @@ def run_federated(
     *,
     eval_every: int = 1,
     client_weights: Optional[List[float]] = None,
+    engine: str = "batched",
 ) -> Dict[str, Any]:
+    if engine == "looped":
+        from .looped import run_federated_looped
+        return run_federated_looped(
+            loss_fn, init_params, client_batch_fn, eval_fn, cfg,
+            eval_every=eval_every, client_weights=client_weights)
+    if engine != "batched":
+        raise ValueError(f"unknown engine {engine!r}")
+
     rng = np.random.RandomState(cfg.seed)
     w = init_params
-    mrn_cfg = cfg.fedmrn_config()
     history: Dict[str, Any] = {
         "algorithm": cfg.algorithm, "acc": [], "round": [],
-        "local_loss": [], "uplink_bits_per_client": _uplink_bits(cfg, w),
+        "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
         "params": tree_num_params(w),
     }
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
 
-    # jitted workers (compiled once, reused by every client/round)
-    if cfg.algorithm in ("fedmrn", "fedmrns"):
-        local = jax.jit(partial(client_local_update, loss_fn, cfg=mrn_cfg,
-                                base_seed=cfg.seed))
-    elif cfg.algorithm == "fedpm":
-        local_pm = jax.jit(partial(_fedpm_local, loss_fn, lr=cfg.lr))
-        noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
-        w_frozen = gen_noise(jax.random.key(cfg.seed), w, noise_cfg)
-        scores_global = jax.tree_util.tree_map(jnp.zeros_like, w)
-    elif cfg.algorithm == "fedsparsify":
-        local_sp = jax.jit(partial(_fedsparsify_local, loss_fn, lr=cfg.lr,
-                                   frac=cfg.sparsify_frac))
-    else:
-        local_sgd = jax.jit(partial(sgd_local_update, loss_fn, lr=cfg.lr))
-        compressor = (None if cfg.algorithm == "fedavg" else
-                      make_compressor(cfg.algorithm,
-                                      topk_frac=cfg.topk_frac,
-                                      qsgd_bits=cfg.qsgd_bits,
-                                      noise=mrn_cfg.noise))
-        if compressor is not None:
-            comp_fn = jax.jit(compressor.roundtrip)
+    round_fn, state = make_round_engine(loss_fn, cfg, init_params)
 
-    residuals: Dict[int, Pytree] = {}
+    loss_buf: List[jax.Array] = []      # device scalars, read once at end
     t0 = time.time()
     for rnd in range(cfg.rounds):
         picked = rng.choice(cfg.num_clients, cfg.clients_per_round,
                             replace=False)
-        weights = [client_weights[c] for c in picked]
-        losses = []
-
-        if cfg.algorithm in ("fedmrn", "fedmrns"):
-            results = []
-            for cid in picked:
-                batches = client_batch_fn(rnd, int(cid))
-                noise_id = 0 if cfg.shared_noise else int(cid)
-                res = local(w, batches, round_idx=rnd, client_id=noise_id,
-                            train_key=jax.random.fold_in(
-                                jax.random.key(cfg.seed + 1),
-                                rnd * 1000 + int(cid)),
-                            init_residual=residuals.get(int(cid)))
-                if cfg.error_feedback:
-                    residuals[int(cid)] = res.residual
-                results.append(res)
-                losses.append(float(res.losses[-1]))
-            w = server_aggregate(w, results, weights, cfg=mrn_cfg)
-
-        elif cfg.algorithm == "fedpm":
-            mask_sum = jax.tree_util.tree_map(jnp.zeros_like, scores_global)
-            tot = 0.0
-            for cid in picked:
-                batches = client_batch_fn(rnd, int(cid))
-                masks, ls = local_pm(
-                    w_frozen, scores_global, batches,
-                    key=jax.random.fold_in(jax.random.key(cfg.seed + 2),
-                                           rnd * 1000 + int(cid)))
-                mask_sum = jax.tree_util.tree_map(jnp.add, mask_sum, masks)
-                tot += 1.0
-                losses.append(float(ls[-1]))
-            probs = jax.tree_util.tree_map(
-                lambda m: jnp.clip(m / tot, 1e-4, 1 - 1e-4), mask_sum)
-            scores_global = jax.tree_util.tree_map(
-                lambda p_: jnp.log(p_ / (1 - p_)), probs)   # sigmoid^-1
-            w = jax.tree_util.tree_map(
-                lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
-
-        elif cfg.algorithm == "fedsparsify":
-            ws = []
-            for cid in picked:
-                batches = client_batch_fn(rnd, int(cid))
-                w_local, ls = local_sp(w, batches)
-                ws.append(w_local)
-                losses.append(float(ls[-1]))
-            zero = jax.tree_util.tree_map(jnp.zeros_like, w)
-            w = server_aggregate_updates(zero, ws, weights)
-
-        else:  # fedavg + post-training compressors
-            updates = []
-            for cid in picked:
-                batches = client_batch_fn(rnd, int(cid))
-                u, ls = local_sgd(w, batches)
-                if compressor is not None:
-                    u = comp_fn(u, jax.random.fold_in(
-                        jax.random.key(cfg.seed + 3),
-                        rnd * 1000 + int(cid)))
-                updates.append(u)
-                losses.append(float(ls[-1]))
-            w = server_aggregate_updates(w, updates, weights)
-
-        history["local_loss"].append(float(np.mean(losses)))
+        batches = stack_client_batches(
+            [client_batch_fn(rnd, int(cid)) for cid in picked])
+        weights = jnp.asarray([client_weights[int(c)] for c in picked],
+                              jnp.float32)
+        w, state, losses = round_fn(
+            w, state, batches, jnp.asarray(picked, jnp.int32),
+            jnp.int32(rnd), weights)
+        loss_buf.append(jnp.mean(losses[:, -1]))
         if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
+    history["local_loss"] = [float(x) for x in np.asarray(jnp.stack(loss_buf))]
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     return history

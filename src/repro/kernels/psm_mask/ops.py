@@ -5,6 +5,7 @@ the jnp oracle — bitwise-identical by construction (same uniforms).
 """
 from __future__ import annotations
 
+import functools
 from typing import Any
 
 import jax
@@ -27,16 +28,18 @@ def _to_tiles(x: jax.Array):
     return flat.reshape(rows, cols), n
 
 
-def psm_apply(u: jax.Array, n: jax.Array, key: jax.Array, progress,
-              *, mode: str = "binary", use_pallas: bool = True,
-              interpret: bool = True):
-    """PSM on a tensor of any shape → (û, mask int8) with u's shape."""
-    shape = u.shape
+def _draw_uniforms(key: jax.Array, shape):
     k_sm, k_pm = jax.random.split(key)
     r_sm = jax.random.uniform(k_sm, shape, jnp.float32)
     r_pm = jax.random.uniform(k_pm, shape, jnp.float32)
+    return r_sm, r_pm
+
+
+def _psm_from_uniforms(u, n, r_sm, r_pm, progress, *, mode, use_pallas,
+                       interpret):
     if not use_pallas:
         return psm_ref(u, n, r_sm, r_pm, progress, mode=mode)
+    shape = u.shape
     ut, nelem = _to_tiles(u)
     nt, _ = _to_tiles(n)
     rs, _ = _to_tiles(r_sm)
@@ -45,6 +48,65 @@ def psm_apply(u: jax.Array, n: jax.Array, key: jax.Array, progress,
                            interpret=interpret)
     return (uhat.reshape(-1)[:nelem].reshape(shape),
             mask.reshape(-1)[:nelem].reshape(shape))
+
+
+def psm_apply(u: jax.Array, n: jax.Array, key: jax.Array, progress,
+              *, mode: str = "binary", use_pallas: bool = True,
+              interpret: bool = True):
+    """PSM on a tensor of any shape → (û, mask int8) with u's shape."""
+    r_sm, r_pm = _draw_uniforms(key, u.shape)
+    return _psm_from_uniforms(u, n, r_sm, r_pm, progress, mode=mode,
+                              use_pallas=use_pallas, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# STE-differentiable wrapper — what core.masking's backend dispatch calls.
+#
+# The fused kernel computes forward values only; local training
+# differentiates through PSM, so we attach the exact VJP of the reference
+# formula:
+#   out = where(gate, hat_sm, bar),  hat_sm = u + stop_grad(n·m − u) (∂ = 1)
+#   bar = clip(u, lo, hi)                               (∂ = clip's vjp)
+# making backend="pallas" gradient-identical to backend="ref".
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _psm_ste_core(u, n, r_sm, r_pm, progress, mode, interpret):
+    uhat, _ = _psm_from_uniforms(u, n, r_sm, r_pm, progress, mode=mode,
+                                 use_pallas=True, interpret=interpret)
+    return uhat
+
+
+def _psm_ste_fwd(u, n, r_sm, r_pm, progress, mode, interpret):
+    uhat = _psm_ste_core(u, n, r_sm, r_pm, progress, mode, interpret)
+    gate = r_pm < jnp.asarray(progress, jnp.float32)
+    return uhat, (u, n, gate)
+
+
+def _psm_ste_bwd(mode, interpret, res, g):
+    u, n, gate = res
+    if mode == "binary":
+        lo = jnp.minimum(n, 0.0)
+        hi = jnp.maximum(n, 0.0)
+    else:
+        hi = jnp.abs(n)
+        lo = -hi
+    _, clip_vjp = jax.vjp(lambda uu: jnp.clip(uu, lo, hi), u)
+    zero = jnp.zeros_like(g)
+    ct_u = jnp.where(gate, g, zero) + clip_vjp(jnp.where(gate, zero, g))[0]
+    return (ct_u, jnp.zeros_like(n), jnp.zeros_like(g), jnp.zeros_like(g),
+            jnp.zeros((), jnp.float32))
+
+
+_psm_ste_core.defvjp(_psm_ste_fwd, _psm_ste_bwd)
+
+
+def psm_ste(u: jax.Array, n: jax.Array, key: jax.Array, progress,
+            *, mode: str = "binary", interpret: bool = True) -> jax.Array:
+    """Differentiable PSM û via the fused kernel (STE gradients as ref)."""
+    r_sm, r_pm = _draw_uniforms(key, u.shape)
+    return _psm_ste_core(u, n, r_sm, r_pm,
+                         jnp.asarray(progress, jnp.float32), mode, interpret)
 
 
 def psm_apply_tree(u: Any, n: Any, key: jax.Array, progress,

@@ -19,6 +19,7 @@ from typing import Any, Dict, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from ..compat import optimization_barrier
 from ..configs.base import ModelConfig
 from ..sharding import hints
 from . import attention as attn_mod
@@ -156,7 +157,7 @@ def forward_hidden(p: Params, cfg: ModelConfig, batch, *,
     @functools.partial(jax.checkpoint,
                        policy=jax.checkpoint_policies.nothing_saveable)
     def body_fn(h, layer_p):
-        layer_p = jax.lax.optimization_barrier(layer_p)  # see decode_step
+        layer_p = optimization_barrier(layer_p)  # see decode_step
         h2, aux = layer_fwd(layer_p, h, cfg, positions=positions,
                             inference=inference)
         return h2, aux
@@ -168,7 +169,7 @@ def forward_hidden(p: Params, cfg: ModelConfig, batch, *,
         # The optimization_barrier pins the save to bf16: without it XLA
         # hoists the rmsnorm f32 upcast out of the loop and keeps a 2×-size
         # f32 copy of the whole stack.
-        h = jax.lax.optimization_barrier(
+        h = optimization_barrier(
             hints.hint_spec(h, {0: "batch", 2: "model"}))
         h2, aux = body_fn(h, layer_p)
         return (h2, aux_sum + aux), None
@@ -230,7 +231,7 @@ def decode_step(p: Params, cfg: ModelConfig, cache: DecodeCache,
         # barrier: XLA-CPU promotes bf16 dots to f32 and would otherwise
         # hoist the convert of the WHOLE stacked weight tensor out of the
         # layer loop (an f32 copy of all params — ~19 GB at 235b)
-        layer_p, layer_c = jax.lax.optimization_barrier((layer_p, layer_c))
+        layer_p, layer_c = optimization_barrier((layer_p, layer_c))
         x = rmsnorm(layer_p["ln1"], h, cfg.norm_eps)
         if kind == "attn":
             lc = attn_mod.KVCache(layer_c.k, layer_c.v, cache.step)

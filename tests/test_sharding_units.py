@@ -99,9 +99,8 @@ class TestShardingRules:
         """Every sharded dim divides the mesh axis for every arch."""
         from repro.models.registry import param_specs
         from repro.sharding.rules import param_shardings
-        mesh = jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
         for arch in list_archs():
             cfg = get_config(arch)
             specs = param_specs(cfg)
