@@ -1,7 +1,7 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast bench-engine bench quickstart
+.PHONY: test test-fast bench-engine bench-engine-smoke bench quickstart
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -10,11 +10,17 @@ test:
 # engine + core only (skips the slow per-arch smoke sweep)
 test-fast:
 	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
-	    tests/test_round_engine.py tests/test_fed_engine.py
+	    tests/test_round_engine.py tests/test_scan_engine.py \
+	    tests/test_fed_engine.py
 
-# looped-vs-batched round engine benchmark (ISSUE 1 acceptance)
+# looped/batched/scan round engine benchmark (ISSUE 1+2 acceptance);
+# writes machine-readable BENCH_engine.json at the repo root
 bench-engine:
 	$(PY) -m benchmarks.run --only engine
+
+# 1 tiny config — keeps the BENCH_engine.json emitter green in CI
+bench-engine-smoke:
+	$(PY) -m benchmarks.run --only engine --quick
 
 bench:
 	$(PY) -m benchmarks.run --quick

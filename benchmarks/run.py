@@ -4,6 +4,11 @@ Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the
 table-specific metric (accuracy for Tables/Figs, bits-per-param for the
 comm table, useful-compute ratio for the roofline).
 
+The ``engine`` section additionally writes machine-readable results
+(rounds/sec per engine + config + commit) to ``BENCH_engine.json`` at the
+repo root, so the bench trajectory is tracked across commits instead of
+living only in stdout.
+
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
 import argparse
@@ -37,10 +42,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     for name, fn in sections.items():
         try:
-            for row in fn():
+            rows = fn()
+            for row in rows:
                 print(f"{row['name']},{row['us_per_call']:.1f},"
                       f"{row['derived']}")
                 sys.stdout.flush()
+            if name == "engine":
+                path = engine_bench.write_bench_json(
+                    rows, n_rounds=10 if args.quick else 30)
+                print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}")
 

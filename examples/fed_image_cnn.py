@@ -3,6 +3,11 @@ the CPU-scale analogue of the paper's Table 1 (one dataset, one
 partition), with per-round accuracy curves and checkpointing.
 
 Run:  PYTHONPATH=src python examples/fed_image_cnn.py [--partition noniid2]
+
+``--engine scan`` (default) fuses the whole experiment into ⌈R/chunk⌉
+jitted dispatches with a device-resident dataset and on-device eval;
+``batched`` dispatches one program per round; ``looped`` is the seed's
+per-client reference loop.
 """
 import argparse
 import os
@@ -11,9 +16,10 @@ import jax
 import jax.numpy as jnp
 
 from repro import checkpoint
-from repro.data import make_image_task, make_partition, sample_local_batches
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition)
 from repro.fed import FLConfig, run_federated
-from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
+from repro.models.cnn import cnn_eval_program, cnn_init, cnn_loss
 
 ALGOS = ("fedavg", "fedmrn", "fedmrns", "signsgd", "terngrad", "topk",
          "drive", "eden", "fedpm", "fedsparsify")
@@ -24,22 +30,29 @@ def main():
     ap.add_argument("--partition", default="noniid2",
                     choices=["iid", "noniid1", "noniid2"])
     ap.add_argument("--rounds", type=int, default=20)
-    ap.add_argument("--engine", default="batched",
-                    choices=["batched", "looped"],
-                    help="batched = one XLA program per round (default); "
-                         "looped = legacy per-client reference loop")
+    ap.add_argument("--engine", default="scan",
+                    choices=["scan", "batched", "looped"],
+                    help="scan = whole experiment fused into chunked "
+                         "lax.scan programs (default); batched = one XLA "
+                         "program per round; looped = legacy per-client "
+                         "reference loop")
+    ap.add_argument("--chunk", type=int, default=None,
+                    help="rounds per scan dispatch (default: all)")
     ap.add_argument("--out", default="/tmp/fed_image_cnn")
     args = ap.parse_args()
 
     task = make_image_task(0, n=3000, hw=16, n_classes=8, noise=0.5)
     n_test = 600
     xtr, ytr = task.x[:-n_test], task.y[:-n_test]
-    xte, yte = jnp.asarray(task.x[-n_test:]), jnp.asarray(task.y[-n_test:])
     parts = make_partition(args.partition, 0, ytr, num_clients=10)
     params0 = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
+    ds = make_federated_dataset(xtr, ytr, parts, x_test=task.x[-n_test:],
+                                y_test=task.y[-n_test:], batch_seed=997)
+    eval_prog = cnn_eval_program(ds.x_test, ds.y_test)
     os.makedirs(args.out, exist_ok=True)
 
-    print(f"partition={args.partition} rounds={args.rounds}")
+    print(f"partition={args.partition} rounds={args.rounds} "
+          f"engine={args.engine}")
     header = f"{'algorithm':12s} {'acc':>6s} {'bpp':>7s} {'round-curve'}"
     print(header)
     for algo in ALGOS:
@@ -48,17 +61,10 @@ def main():
                        lr=0.1,
                        noise_alpha=0.025 if algo == "fedmrns" else 0.05)
 
-        def batch_fn(rnd, cid):
-            return sample_local_batches(rnd * 997 + cid, xtr, ytr,
-                                        parts[cid], steps=cfg.local_steps,
-                                        batch=cfg.batch_size)
-
-        def eval_fn(p):
-            return float(cnn_accuracy(p, xte, yte))
-
-        hist = run_federated(cnn_loss, params0, batch_fn, eval_fn, cfg,
+        hist = run_federated(cnn_loss, params0, ds, None, cfg,
+                             eval_program=eval_prog,
                              eval_every=max(1, args.rounds // 5),
-                             engine=args.engine)
+                             engine=args.engine, chunk=args.chunk)
         bpp = hist["uplink_bits_per_client"] / hist["params"]
         curve = " ".join(f"{a:.2f}" for a in hist["acc"])
         print(f"{algo:12s} {hist['final_acc']:6.3f} {bpp:7.2f} {curve}")

@@ -50,10 +50,6 @@ class ClientResult(NamedTuple):
     residual: Pytree         # u − û (zeros unless error_feedback)
 
 
-def _tree_add(a: Pytree, b: Pytree) -> Pytree:
-    return jax.tree_util.tree_map(jnp.add, a, b)
-
-
 def _tree_zeros_like(t: Pytree) -> Pytree:
     return jax.tree_util.tree_map(jnp.zeros_like, t)
 
@@ -244,7 +240,9 @@ def server_aggregate(
         u_hat = server_decode_update(res.packed_mask, res.seed_key,
                                      w_global, cfg=cfg)
         agg = jax.tree_util.tree_map(lambda a, b: a + wk * b, agg, u_hat)
-    return _tree_add(w_global, agg)
+    # mix_add (not plain add): preserves param dtype, so bf16 models don't
+    # drift to f32 round-over-round — same rule as the batched/scan engines
+    return jax.tree_util.tree_map(_mix_add, w_global, agg)
 
 
 def server_aggregate_updates(
@@ -258,4 +256,4 @@ def server_aggregate_updates(
     agg = _tree_zeros_like(w_global)
     for wk, u in zip(weights, updates):
         agg = jax.tree_util.tree_map(lambda a, b: a + wk * b, agg, u)
-    return _tree_add(w_global, agg)
+    return jax.tree_util.tree_map(_mix_add, w_global, agg)

@@ -1,6 +1,7 @@
-"""Synthetic data + federated partitioners."""
+"""Synthetic data + federated partitioners + device-resident datasets."""
 from .synthetic import (  # noqa: F401
     ImageTask, make_image_task, make_lm_task, make_partition,
     partition_dirichlet, partition_iid, partition_labels,
     sample_local_batches,
 )
+from .federated import FederatedDataset, make_federated_dataset  # noqa: F401

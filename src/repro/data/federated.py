@@ -1,0 +1,121 @@
+"""Device-resident federated dataset — the scan engine's data layer.
+
+The host-loop engines fed each round from Python callbacks
+(``client_batch_fn(rnd, cid)`` + ``stack_client_batches``): one numpy
+fancy-index, one host→device transfer, and one stack per round.  A
+multi-round ``lax.scan`` program cannot call back into Python, so the
+whole dataset moves onto the device ONCE:
+
+  - ``x, y``            stacked example arrays, (N, ...) device-resident;
+  - ``client_idx``      (C, Lmax) int32 partition matrix — row c lists
+                        client c's example indices, wrap-padded to the
+                        longest client so the matrix is rectangular;
+  - ``client_len``      (C,) int32 true partition sizes (sampling draws
+                        positions modulo the real length, so the padding
+                        is never sampled).
+
+``gather_batches(round_idx, picked)`` is the in-program replacement for
+the host batch path: a pure jax function ``(round_idx, picked) ->
+(K, S, B, ...)`` batches, traceable inside jit / scan.  Batch positions
+derive from ``fold_in(fold_in(key(batch_seed), round_idx), cid)``, so the
+same (round, client) always yields the same batch — on the host (legacy
+``batch_fn`` adapter, used by the looped/batched engines) and inside the
+scan program alike.  That shared derivation is what makes the three
+engines' trajectories bit-comparable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FederatedDataset:
+    """Stacked examples + partition index matrices, all device-resident."""
+
+    x: jax.Array                    # (N, ...) examples
+    y: jax.Array                    # (N,) labels / targets
+    client_idx: jax.Array           # (C, Lmax) int32, wrap-padded rows
+    client_len: jax.Array           # (C,) int32 true sizes
+    x_test: Optional[jax.Array]     # (Nt, ...) device-resident test set
+    y_test: Optional[jax.Array]     # (Nt,)
+    batch_seed: int = 0
+
+    @property
+    def num_clients(self) -> int:
+        return self.client_idx.shape[0]
+
+    # ---- in-program batch gather -------------------------------------
+
+    def _client_key(self, round_idx, cid) -> jax.Array:
+        key = jax.random.key(self.batch_seed)
+        key = jax.random.fold_in(key, round_idx)
+        return jax.random.fold_in(key, cid)
+
+    def client_batch(self, round_idx, cid, *, steps: int,
+                     batch: int) -> Tuple[jax.Array, jax.Array]:
+        """(S, B, ...) local batches for one client — pure, traceable."""
+        key = self._client_key(round_idx, cid)
+        pos = jax.random.randint(key, (steps, batch), 0,
+                                 self.client_len[cid])
+        take = self.client_idx[cid, pos]
+        return self.x[take], self.y[take]
+
+    def gather_batches(self, round_idx, picked, *, steps: int,
+                       batch: int) -> Tuple[jax.Array, jax.Array]:
+        """(K, S, B, ...) batches for the picked clients, in-program.
+
+        ``picked`` is a (K,) int32 array; ``round_idx`` may be traced
+        (it is the scan counter inside the experiment program).
+        """
+        return jax.vmap(lambda c: self.client_batch(
+            round_idx, c, steps=steps, batch=batch))(picked)
+
+    # ---- legacy host adapter -----------------------------------------
+
+    def batch_fn(self, *, steps: int, batch: int) -> Callable[[int, int], Any]:
+        """``client_batch_fn(rnd, cid)`` adapter for the host-loop engines.
+
+        Same key derivation ⇒ identical batch values to the in-program
+        gather; jitted so repeated host calls stay cheap.
+        """
+        fn = jax.jit(lambda r, c: self.client_batch(
+            r, c, steps=steps, batch=batch))
+        return lambda rnd, cid: fn(jnp.int32(rnd), jnp.int32(cid))
+
+
+def make_federated_dataset(
+    x: np.ndarray,
+    y: np.ndarray,
+    parts: Sequence[np.ndarray],
+    *,
+    x_test: Optional[np.ndarray] = None,
+    y_test: Optional[np.ndarray] = None,
+    batch_seed: int = 0,
+) -> FederatedDataset:
+    """Stack a partitioned task onto the device.
+
+    ``parts`` is the partitioner output (one index array per client, as
+    from :func:`repro.data.make_partition`).  Rows of the index matrix are
+    wrap-padded (cycled) to the longest client so a rectangular int32
+    matrix can live on device; sampling never reads the padding because
+    positions are drawn in ``[0, client_len)``.
+    """
+    lens = np.array([len(p) for p in parts], np.int32)
+    if (lens <= 0).any():
+        raise ValueError("every client needs at least one example")
+    lmax = int(lens.max())
+    idx = np.stack([np.resize(np.asarray(p, np.int64), lmax)
+                    for p in parts]).astype(np.int32)
+    return FederatedDataset(
+        x=jnp.asarray(x), y=jnp.asarray(y),
+        client_idx=jnp.asarray(idx), client_len=jnp.asarray(lens),
+        x_test=None if x_test is None else jnp.asarray(x_test),
+        y_test=None if y_test is None else jnp.asarray(y_test),
+        batch_seed=batch_seed)

@@ -1,3 +1,6 @@
 """Federated training engine (simulation + sharded pod modes)."""
-from .engine import make_round_engine, uplink_bits  # noqa: F401
-from .simulation import ALGORITHMS, FLConfig, run_federated  # noqa: F401
+from .engine import (  # noqa: F401
+    make_client_schedule, make_experiment_program, make_round_body,
+    make_round_engine, uplink_bits,
+)
+from .simulation import ALGORITHMS, ENGINES, FLConfig, run_federated  # noqa: F401

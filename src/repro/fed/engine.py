@@ -1,25 +1,37 @@
-"""Batched round engine — one jitted XLA program per FL round.
+"""Round + experiment programs — rounds as pure bodies, experiments as scans.
 
-The seed engine executed a round as a Python loop over clients with a
-blocking ``float(...)`` host sync per client.  Here the whole round is a
-single XLA program: the K selected clients run as a ``vmap`` over a
-stacked client axis — local PSM training, final mask sampling, bit-packing
-(the Pallas-backed uplink hot path), and server aggregation fused
-end-to-end.  The only values that ever leave the device during training
-are the evaluation reads; per-round losses stay in device buffers.
+Each algorithm *family* exposes ONE pure round body
 
-One round program exists per algorithm *family*:
+  round_body(w, state, batches, picked, round_idx, weights)
+      -> (new_w, new_state, losses)            # losses: (K, S) device array
+
+in which the K selected clients run as a ``vmap`` over a stacked client
+axis — local PSM training, final mask sampling, bit-packing (the
+Pallas-backed uplink hot path), and server aggregation fused end-to-end.
+Families:
 
   fedmrn / fedmrns   PSM local training → masks → packed uplink → Eq.(5)
   fedavg + post-training compressors (signsgd … post_sm)
   fedpm              supermask-as-weights baseline
   fedsparsify        magnitude-pruned weight upload baseline
 
-``make_round_engine`` returns ``(round_fn, state0)``; ``round_fn`` is
-jitted once and reused for every round:
+The SAME body is reused by three drivers:
 
-  round_fn(w, state, batches, picked, round_idx, weights)
-      -> (new_w, new_state, losses)            # losses: (K, S) device array
+  1. ``make_round_engine``       → ``jit(round_body)``: one XLA program
+     per round, fed host-stacked batches (the PR-1 batched engine);
+  2. ``make_experiment_program`` → ``lax.scan`` of the body over ``chunk``
+     rounds per dispatch: client selection, batch gathering (from a
+     device-resident :class:`~repro.data.federated.FederatedDataset`),
+     on-device eval every ``eval_every`` rounds, and per-round metric
+     buffers all live inside the program — zero host transfers inside a
+     chunk;
+  3. ``fed/looped.py``           → the seed's per-client reference loop
+     (parity + benchmark baseline).
+
+Client selection is NOT sampled inside the program: every driver consumes
+the same seed-stable ``(R, K)`` schedule from :func:`make_client_schedule`
+(the scan program indexes a device copy of it), so looped / batched /
+scan trajectories are exactly comparable at fixed seed.
 
 ``state`` carries cross-round algorithm state (error-feedback residuals
 stacked over ALL clients, fedpm global scores); ``{}`` when stateless.
@@ -336,20 +348,126 @@ def _make_fedsparsify_round(loss_fn, cfg: FLConfig, params: Pytree):
     return round_fn, {}
 
 
+def make_round_body(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+) -> Tuple[Callable, Dict[str, Pytree]]:
+    """Build the PURE (un-jitted) round body + initial state for a family.
+
+    The body is the unit every driver composes: jitted directly by
+    :func:`make_round_engine`, scanned by :func:`make_experiment_program`.
+    """
+    if cfg.algorithm in ("fedmrn", "fedmrns"):
+        return _make_fedmrn_round(loss_fn, cfg, params)
+    if cfg.algorithm == "fedpm":
+        return _make_fedpm_round(loss_fn, cfg, params)
+    if cfg.algorithm == "fedsparsify":
+        return _make_fedsparsify_round(loss_fn, cfg, params)
+    if cfg.algorithm == "fedavg" or cfg.algorithm in COMPRESSOR_REGISTRY:
+        return _make_fedavg_round(loss_fn, cfg, params)
+    raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
+
+
 def make_round_engine(
     loss_fn: Callable[[Pytree, Any], jax.Array],
     cfg: FLConfig,
     params: Pytree,
 ) -> Tuple[Callable, Dict[str, Pytree]]:
     """Build (jitted round_fn, initial state) for ``cfg.algorithm``."""
-    if cfg.algorithm in ("fedmrn", "fedmrns"):
-        round_fn, state0 = _make_fedmrn_round(loss_fn, cfg, params)
-    elif cfg.algorithm == "fedpm":
-        round_fn, state0 = _make_fedpm_round(loss_fn, cfg, params)
-    elif cfg.algorithm == "fedsparsify":
-        round_fn, state0 = _make_fedsparsify_round(loss_fn, cfg, params)
-    elif cfg.algorithm == "fedavg" or cfg.algorithm in COMPRESSOR_REGISTRY:
-        round_fn, state0 = _make_fedavg_round(loss_fn, cfg, params)
-    else:
-        raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
-    return jax.jit(round_fn), state0
+    round_body, state0 = make_round_body(loss_fn, cfg, params)
+    return jax.jit(round_body), state0
+
+
+# ---------------------------------------------------------------------------
+# experiment-level: client schedule, metric buffers, multi-round scan program
+# ---------------------------------------------------------------------------
+
+def make_client_schedule(cfg: FLConfig) -> np.ndarray:
+    """Seed-stable ``(R, K)`` int32 client-selection schedule.
+
+    Reproduces the legacy per-round ``rng.choice`` sequence exactly (same
+    RandomState, same call order), but precomputed up front so no engine
+    interleaves host RNG with device dispatches.  ALL engines — looped,
+    batched, scan — consume this one schedule; the scan program indexes a
+    device copy of it.
+    """
+    rng = np.random.RandomState(cfg.seed)
+    return np.stack([
+        rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
+        for _ in range(cfg.rounds)]).astype(np.int32)
+
+
+def init_metric_buffers(cfg: FLConfig) -> Dict[str, jax.Array]:
+    """Preallocated per-round ``(R,)`` device buffers the scan writes into.
+
+    ``acc`` starts at NaN — rounds the program does not evaluate stay NaN,
+    so the driver can slice out the eval rounds without guessing.
+    """
+    R = cfg.rounds
+    return {
+        "loss": jnp.zeros((R,), jnp.float32),
+        "acc": jnp.full((R,), jnp.nan, jnp.float32),
+        # per-round TOTAL uplink (K clients); f32 holds >2^31 bit counts
+        "uplink_bits": jnp.zeros((R,), jnp.float32),
+    }
+
+
+def make_experiment_program(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+    data,                                   # FederatedDataset
+    *,
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    eval_every: int = 1,
+    client_weights: Optional[Any] = None,
+) -> Tuple[Callable, Dict[str, Pytree], Dict[str, jax.Array]]:
+    """Fuse a whole experiment chunk into ONE jitted program.
+
+    Returns ``(run_chunk, state0, metrics0)`` where
+
+      run_chunk(w, state, metrics, r0, schedule_chunk, n_rounds=n)
+          -> (new_w, new_state, new_metrics)
+
+    ``lax.scan``s the family's round body over ``n`` consecutive rounds
+    starting at round ``r0``: per-round client selection comes from the
+    ``(n, K)`` ``schedule_chunk`` slice, batches are gathered in-program
+    from the device-resident ``data``, eval runs on-device every
+    ``eval_every`` rounds (plus the final round), and per-round
+    loss/accuracy/uplink-bits land in the preallocated ``(R,)`` buffers
+    carried through ``metrics``.  Nothing crosses the host boundary
+    inside a chunk; ``n_rounds`` is static, so a trailing partial chunk
+    costs exactly one extra compile.
+    """
+    round_body, state0 = make_round_body(loss_fn, cfg, params)
+    bits_round = float(cfg.clients_per_round * uplink_bits(cfg, params))
+    weights_all = jnp.asarray(
+        [1.0] * cfg.num_clients if client_weights is None
+        else list(client_weights), jnp.float32)
+
+    def body(carry, inp):
+        w, state, metrics = carry
+        r, picked = inp
+        batches = data.gather_batches(r, picked, steps=cfg.local_steps,
+                                      batch=cfg.batch_size)
+        weights = weights_all[picked]
+        w, state, losses = round_body(w, state, batches, picked, r, weights)
+        metrics = dict(metrics)
+        metrics["loss"] = metrics["loss"].at[r].set(jnp.mean(losses[:, -1]))
+        metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(bits_round)
+        if eval_program is not None:
+            do_eval = (r % eval_every == 0) | (r == cfg.rounds - 1)
+            acc = jax.lax.cond(do_eval, eval_program,
+                               lambda _w: jnp.float32(jnp.nan), w)
+            metrics["acc"] = metrics["acc"].at[r].set(acc)
+        return (w, state, metrics), None
+
+    @partial(jax.jit, static_argnames=("n_rounds",))
+    def run_chunk(w, state, metrics, r0, schedule_chunk, *, n_rounds: int):
+        rs = r0 + jnp.arange(n_rounds, dtype=jnp.int32)
+        (w, state, metrics), _ = jax.lax.scan(
+            body, (w, state, metrics), (rs, schedule_chunk))
+        return w, state, metrics
+
+    return run_chunk, state0, init_metric_buffers(cfg)

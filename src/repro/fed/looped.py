@@ -27,7 +27,8 @@ from ..core import (NoiseConfig, client_local_update, gen_noise,
                     make_compressor, server_aggregate,
                     server_aggregate_updates, sgd_local_update,
                     tree_num_params)
-from .engine import FLConfig, fedpm_local, fedsparsify_local, uplink_bits
+from .engine import (FLConfig, fedpm_local, fedsparsify_local,
+                     make_client_schedule, uplink_bits)
 
 Pytree = Any
 
@@ -41,14 +42,17 @@ def run_federated_looped(
     *,
     eval_every: int = 1,
     client_weights: Optional[List[float]] = None,
+    schedule: Optional[np.ndarray] = None,
 ) -> Dict[str, Any]:
-    rng = np.random.RandomState(cfg.seed)
+    # the same precomputed seed-stable (R, K) selection every engine uses
+    if schedule is None:
+        schedule = make_client_schedule(cfg)
     w = init_params
     mrn_cfg = cfg.fedmrn_config()
     history: Dict[str, Any] = {
         "algorithm": cfg.algorithm, "acc": [], "round": [],
         "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
-        "params": tree_num_params(w),
+        "params": tree_num_params(w), "schedule": schedule,
     }
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
@@ -78,8 +82,7 @@ def run_federated_looped(
     residuals: Dict[int, Pytree] = {}
     t0 = time.time()
     for rnd in range(cfg.rounds):
-        picked = rng.choice(cfg.num_clients, cfg.clients_per_round,
-                            replace=False)
+        picked = schedule[rnd]
         weights = [client_weights[c] for c in picked]
         losses = []
 

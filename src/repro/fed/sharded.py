@@ -24,7 +24,10 @@ hardcoded hyper-parameters; only the collective choreography (last-dim
 packing, client-axis all-gather, per-shard noise regen) is pod-specific.
 
 ``mode='fedavg'`` lowers the float-aggregation baseline for the roofline
-comparison.
+comparison.  ``PodRoundSpec(rounds=R)`` lowers an R-round ``lax.scan``
+over the round body — the pod-path mirror of the simulation engine's
+multi-round experiment program — with per-round seed/noise keys, for
+probing multi-round HLO and collective totals.
 """
 from __future__ import annotations
 
@@ -58,6 +61,11 @@ class PodRoundSpec:
     mask_mode: str = "binary"
     base_seed: int = 0
     backend: str | None = None     # masking/packing kernel backend
+    # rounds fused per dispatch: >1 lowers a multi-round ``lax.scan`` over
+    # the round body (same fusion the simulation scan engine uses), with
+    # per-round seed/noise keys — for probing multi-round HLO/collectives;
+    # the batch stream is reused across rounds (dry-run semantics)
+    rounds: int = 1
 
     def fedmrn_config(self) -> FedMRNConfig:
         return FedMRNConfig(mask_mode=self.mask_mode, noise=self.noise,
@@ -116,12 +124,13 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
     fb_shard = {k: NamedSharding(mesh, P(client_axis, None, None))
                 for k in fb_specs}
 
-    def one_client_update(u_c, batch_c, client_id, w):
+    def one_client_update(u_c, batch_c, client_id, w, round_idx):
         """S local steps of SGD on u with PSM — the shared Alg. 1 body."""
-        seed_key = client_round_key(spec.base_seed, 0, client_id)
+        seed_key = client_round_key(spec.base_seed, round_idx, client_id)
         noise = gen_noise(seed_key, w, mrn.noise)
         train_key = jax.random.fold_in(
-            jax.random.key(spec.base_seed + 1), client_id)
+            jax.random.fold_in(jax.random.key(spec.base_seed + 1),
+                               round_idx), client_id)
 
         if mode == "fedmrn":
             u_c, losses = psm_local_train(model.loss_fn, w, batch_c, noise,
@@ -144,10 +153,11 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
         u_c, losses = jax.lax.scan(local_step, u_c, batch_c)
         return u_c, losses.mean(), noise
 
-    def step(w, u, batch):
+    def one_round(w, u, batch, round_idx):
         client_ids = jnp.arange(C)
         out, losses, _ = jax.vmap(
-            lambda u_c, b_c, cid: one_client_update(u_c, b_c, cid, w)
+            lambda u_c, b_c, cid: one_client_update(u_c, b_c, cid, w,
+                                                    round_idx)
         )(u, batch, client_ids)
 
         if mode == "fedmrn":
@@ -161,7 +171,7 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
 
             # ---- server: regen noise per client, Eq. (5) --------------------
             def srv_body(acc, cid):
-                key = client_round_key(spec.base_seed, 0, cid)
+                key = client_round_key(spec.base_seed, round_idx, cid)
                 noise_c = gen_noise(key, w, mrn.noise)
                 u_hat = jax.tree_util.tree_map(
                     lambda words, wl, nl: nl * unpack_lastdim(
@@ -182,6 +192,21 @@ def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
         new_w = jax.tree_util.tree_map(
             lambda p, a: mix_add(p, a / C), w, agg)
         return new_w, losses.mean()
+
+    def step(w, u, batch):
+        if spec.rounds == 1:
+            return one_round(w, u, batch, jnp.int32(0))
+
+        # multi-round program: scan the round body, fresh u (=input copy,
+        # normally zeros) and per-round keys each round; the same batch
+        # stream feeds every round (cost/sharding probe, not training)
+        def body(w_c, round_idx):
+            w_c, loss = one_round(w_c, u, batch, round_idx)
+            return w_c, loss
+
+        w_final, losses = jax.lax.scan(
+            body, w, jnp.arange(spec.rounds, dtype=jnp.int32))
+        return w_final, losses.mean()
 
     args = (p_specs, u_specs, fb_specs)
     in_shardings = (p_shard, u_shard, fb_shard)

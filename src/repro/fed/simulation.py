@@ -1,4 +1,4 @@
-"""Federated simulation engine — the paper's experimental harness.
+"""Federated simulation driver — the paper's experimental harness.
 
 Runs R rounds of K-client FL with any of:
   fedavg            float updates (Eq. 3)
@@ -9,63 +9,135 @@ Runs R rounds of K-client FL with any of:
   fedpm             supermask-as-weights baseline (masks on frozen noise)
   fedsparsify       magnitude-pruned weight upload baseline
 
-Execution model (``fed/engine.py``): each round is ONE jitted XLA program —
-all K selected clients run as a vmap over a stacked client axis, with
-local training, mask sampling, Pallas-backed bit-packing, and server
-aggregation fused end-to-end.  This host loop only samples client ids,
-stacks their batches, and reads metrics; per-round losses stay on device
-and the only host syncs are the eval reads.
+This module is a THIN host driver over the three execution engines built
+from the same pure round bodies (``fed/engine.py``):
 
-``engine="looped"`` dispatches to the legacy per-client reference loop
-(``fed/looped.py``) — kept for parity tests and the engine benchmark.
+  engine="scan"      a whole experiment chunk is ONE jitted program:
+                     ``lax.scan`` over ``chunk`` rounds with in-program
+                     client selection, device-resident batch gathering
+                     (requires a :class:`~repro.data.FederatedDataset`),
+                     on-device eval, and ``(R,)`` metric buffers — the
+                     host dispatches ⌈R/chunk⌉ programs and reads the
+                     buffers once at the end.
+  engine="batched"   one jitted program per round (PR-1 model): the host
+                     stacks batches, dispatches, and reads eval per round.
+  engine="looped"    the seed's per-client reference loop
+                     (``fed/looped.py``) — parity tests + benchmark.
 
-The engine records per-round global accuracy, local losses, and exact
-uplink bits, so every paper table/figure can be emitted from one
-``history`` dict.
+All engines consume the same precomputed seed-stable ``(R, K)``
+client-selection schedule (``make_client_schedule``) and materialise the
+same ``history`` dict (per-round accuracy at eval rounds, local losses,
+exact uplink bits), so every paper table/figure can be emitted from any
+engine interchangeably.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..core import tree_num_params
-from .engine import (ALGORITHMS, FLConfig, make_round_engine,  # noqa: F401
+from ..data.federated import FederatedDataset
+from .engine import (ALGORITHMS, FLConfig, make_client_schedule,  # noqa: F401
+                     make_experiment_program, make_round_engine,
                      stack_client_batches, uplink_bits)
 
 Pytree = Any
+
+ENGINES = ("scan", "batched", "looped")
+
+
+def _base_history(cfg: FLConfig, params: Pytree,
+                  schedule: np.ndarray) -> Dict[str, Any]:
+    return {
+        "algorithm": cfg.algorithm, "acc": [], "round": [],
+        "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, params),
+        "params": tree_num_params(params),
+        "schedule": schedule,
+    }
+
+
+def _eval_rounds(cfg: FLConfig, eval_every: int) -> List[int]:
+    return [r for r in range(cfg.rounds)
+            if r % eval_every == 0 or r == cfg.rounds - 1]
 
 
 def run_federated(
     loss_fn: Callable[[Pytree, Any], jax.Array],
     init_params: Pytree,
-    client_batch_fn: Callable[[int, int], Any],
-    # (round, client_id) -> stacked (steps, batch, ...) local batches
-    eval_fn: Callable[[Pytree], float],
+    data: Union[FederatedDataset, Callable[[int, int], Any]],
+    # FederatedDataset (device-resident; required for engine="scan") or the
+    # legacy (round, client_id) -> stacked (steps, batch, ...) callback
+    eval_fn: Optional[Callable[[Pytree], float]],
     cfg: FLConfig,
     *,
     eval_every: int = 1,
     client_weights: Optional[List[float]] = None,
     engine: str = "batched",
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    # pure on-device eval (params -> accuracy); required for engine="scan",
+    # and substituted for a missing eval_fn on the host-loop engines
+    chunk: Optional[int] = None,
+    # rounds fused per scan dispatch (engine="scan"); default: all R rounds
+    # in one dispatch — scan trip count is free at compile time, so chunking
+    # only matters when you want intermediate host visibility
+
 ) -> Dict[str, Any]:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
+
+    schedule = make_client_schedule(cfg)
+
+    if engine == "scan":
+        if not isinstance(data, FederatedDataset):
+            raise ValueError(
+                "engine='scan' gathers batches in-program and needs a "
+                "device-resident FederatedDataset, not a host callback "
+                "(see repro.data.make_federated_dataset)")
+        if eval_program is None:
+            raise ValueError(
+                "engine='scan' folds eval into the program and needs a "
+                "pure eval_program (params -> accuracy); build one with "
+                "repro.core.make_eval_program")
+        return _run_scan(loss_fn, init_params, data, eval_program, cfg,
+                         schedule, eval_every=eval_every,
+                         client_weights=client_weights, chunk=chunk)
+
+    # host-loop engines: adapt a FederatedDataset to the callback contract
+    # (same key derivation as the in-program gather → identical batches)
+    if isinstance(data, FederatedDataset):
+        client_batch_fn = data.batch_fn(steps=cfg.local_steps,
+                                        batch=cfg.batch_size)
+    else:
+        client_batch_fn = data
+    if eval_fn is None:
+        if eval_program is None:
+            raise ValueError("need eval_fn or eval_program")
+        jitted_eval = jax.jit(eval_program)
+        eval_fn = lambda p: float(jitted_eval(p))  # noqa: E731
+
     if engine == "looped":
         from .looped import run_federated_looped
         return run_federated_looped(
             loss_fn, init_params, client_batch_fn, eval_fn, cfg,
-            eval_every=eval_every, client_weights=client_weights)
-    if engine != "batched":
-        raise ValueError(f"unknown engine {engine!r}")
+            eval_every=eval_every, client_weights=client_weights,
+            schedule=schedule)
+    return _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
+                        schedule, eval_every=eval_every,
+                        client_weights=client_weights)
 
-    rng = np.random.RandomState(cfg.seed)
+
+# ---------------------------------------------------------------------------
+# engine="batched": one program per round, host-stacked batches
+# ---------------------------------------------------------------------------
+
+def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
+                 schedule, *, eval_every, client_weights):
     w = init_params
-    history: Dict[str, Any] = {
-        "algorithm": cfg.algorithm, "acc": [], "round": [],
-        "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
-        "params": tree_num_params(w),
-    }
+    history = _base_history(cfg, w, schedule)
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
 
@@ -74,8 +146,7 @@ def run_federated(
     loss_buf: List[jax.Array] = []      # device scalars, read once at end
     t0 = time.time()
     for rnd in range(cfg.rounds):
-        picked = rng.choice(cfg.num_clients, cfg.clients_per_round,
-                            replace=False)
+        picked = schedule[rnd]
         batches = stack_client_batches(
             [client_batch_fn(rnd, int(cid)) for cid in picked])
         weights = jnp.asarray([client_weights[int(c)] for c in picked],
@@ -88,6 +159,49 @@ def run_federated(
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
     history["local_loss"] = [float(x) for x in np.asarray(jnp.stack(loss_buf))]
+    history["wall_s"] = time.time() - t0
+    history["final_acc"] = history["acc"][-1]
+    return history
+
+
+# ---------------------------------------------------------------------------
+# engine="scan": ⌈R/chunk⌉ dispatches, metrics read once at the end
+# ---------------------------------------------------------------------------
+
+def _run_scan(loss_fn, init_params, data: FederatedDataset, eval_program,
+              cfg, schedule, *, eval_every, client_weights, chunk):
+    if data.num_clients != cfg.num_clients:
+        raise ValueError(
+            f"dataset has {data.num_clients} clients, cfg expects "
+            f"{cfg.num_clients}")
+    chunk = cfg.rounds if chunk is None else max(1, int(chunk))
+    chunk = min(chunk, cfg.rounds)
+
+    run_chunk, state, metrics = make_experiment_program(
+        loss_fn, cfg, init_params, data, eval_program=eval_program,
+        eval_every=eval_every, client_weights=client_weights)
+
+    w = init_params
+    history = _base_history(cfg, w, schedule)
+    sched_dev = jnp.asarray(schedule, jnp.int32)
+    t0 = time.time()
+    dispatches = 0
+    for r0 in range(0, cfg.rounds, chunk):
+        n = min(chunk, cfg.rounds - r0)
+        w, state, metrics = run_chunk(
+            w, state, metrics, jnp.int32(r0), sched_dev[r0:r0 + n],
+            n_rounds=n)
+        dispatches += 1
+
+    # the ONLY device→host reads of the whole experiment
+    loss = np.asarray(metrics["loss"])
+    acc = np.asarray(metrics["acc"])
+    bits = np.asarray(metrics["uplink_bits"])
+    history["round"] = _eval_rounds(cfg, eval_every)
+    history["acc"] = [float(acc[r]) for r in history["round"]]
+    history["local_loss"] = [float(x) for x in loss]
+    history["uplink_bits_round"] = [float(b) for b in bits]
+    history["num_dispatches"] = dispatches
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     return history

@@ -73,7 +73,7 @@ def _momentum_specs(params):
 
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               dtype=jnp.bfloat16, fedmrn: bool = False,
-              fed_mode: str = "fedmrn"):
+              fed_mode: str = "fedmrn", fed_rounds: int = 1):
     """Lower+compile one combination; returns the result record dict."""
     cfg = get_config(arch)
     cfg = cfg.__class__(**{**cfg.__dict__, "dtype": dtype})
@@ -105,10 +105,11 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     b_shard = batch_shardings(specs["batch"], mesh)
 
     if fedmrn:
-        from ..fed.sharded import make_fedmrn_pod_step
+        from ..fed.sharded import PodRoundSpec, make_fedmrn_pod_step
         step, args, in_shardings = make_fedmrn_pod_step(
             model, mesh, p_specs, p_shard, specs["batch"], b_shard,
-            mode=fed_mode)
+            mode=fed_mode, spec=PodRoundSpec(rounds=fed_rounds))
+        rec["fed_rounds"] = fed_rounds
     elif shape.kind == "train":
         hp = TrainHParams(microbatches=MICROBATCHES.get(arch, 1))
         step = step_for_kind(model, "train", hp)
@@ -181,13 +182,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 
 def run_and_save(arch, shape_name, *, multi_pod, fedmrn=False,
-                 fed_mode="fedmrn", out_dir=OUT_DIR):
+                 fed_mode="fedmrn", fed_rounds=1, out_dir=OUT_DIR):
     tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
     if fedmrn:
         tag += f"__{fed_mode}"
+        if fed_rounds > 1:
+            tag += f"__r{fed_rounds}"
     try:
         rec = lower_one(arch, shape_name, multi_pod=multi_pod,
-                        fedmrn=fedmrn, fed_mode=fed_mode)
+                        fedmrn=fedmrn, fed_mode=fed_mode,
+                        fed_rounds=fed_rounds)
     except Exception as e:  # noqa: BLE001 — record the failure, keep going
         rec = {"arch": arch, "shape": shape_name,
                "mesh": "2x16x16" if multi_pod else "16x16",
@@ -216,6 +220,9 @@ def main():
     ap.add_argument("--fed-mode", default="fedmrn",
                     choices=["fedmrn", "fedavg"],
                     help="pod-round aggregation (fedavg = float baseline)")
+    ap.add_argument("--fed-rounds", type=int, default=1,
+                    help="rounds fused per dispatch (lax.scan over the "
+                         "pod round body when > 1)")
     args = ap.parse_args()
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
@@ -226,7 +233,8 @@ def main():
         for shape in shapes:
             for mp in meshes:
                 run_and_save(arch, shape, multi_pod=mp, fedmrn=args.fedmrn,
-                             fed_mode=args.fed_mode)
+                             fed_mode=args.fed_mode,
+                             fed_rounds=args.fed_rounds)
 
 
 if __name__ == "__main__":

@@ -81,6 +81,12 @@ def cnn_accuracy(p: Params, x: jax.Array, y: jax.Array) -> jax.Array:
     return jnp.mean((jnp.argmax(cnn_apply(p, x), -1) == y).astype(jnp.float32))
 
 
+def cnn_eval_program(x: jax.Array, y: jax.Array, *, batch_size: int = 256):
+    """Batched device-resident ``params -> accuracy`` (scan-engine eval)."""
+    from ..core.evaluation import make_eval_program
+    return make_eval_program(cnn_apply, x, y, batch_size=batch_size)
+
+
 # --- tiny MLP for the fastest unit tests -----------------------------------
 
 def mlp_init(key, *, d_in: int, d_hidden: int, n_classes: int,
@@ -107,3 +113,9 @@ def mlp_loss(p: Params, batch) -> jax.Array:
 
 def mlp_accuracy(p: Params, x, y) -> jax.Array:
     return jnp.mean((jnp.argmax(mlp_apply(p, x), -1) == y).astype(jnp.float32))
+
+
+def mlp_eval_program(x: jax.Array, y: jax.Array, *, batch_size: int = 256):
+    """Batched device-resident ``params -> accuracy`` (scan-engine eval)."""
+    from ..core.evaluation import make_eval_program
+    return make_eval_program(mlp_apply, x, y, batch_size=batch_size)

@@ -1,0 +1,229 @@
+"""Scan experiment engine (ISSUE 2): three-engine trajectory parity,
+seed-stable client schedules, edge cases, and dispatch/transfer counts."""
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import make_eval_program
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition)
+from repro.fed import FLConfig, make_client_schedule, run_federated
+from repro.fed.engine import make_experiment_program
+from repro.models.cnn import (mlp_accuracy, mlp_apply, mlp_eval_program,
+                              mlp_init, mlp_loss)
+
+KEY = jax.random.key(0)
+
+
+def _setup(algorithm, rounds=4, **cfg_kw):
+    task = make_image_task(0, n=800, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+    params = mlp_init(KEY, d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm=algorithm, num_clients=8, clients_per_round=4,
+                   rounds=rounds, local_steps=4, batch_size=16, lr=0.1,
+                   noise_alpha=3e-2, **cfg_kw)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7)
+    eval_prog = mlp_eval_program(jnp.asarray(task.x), jnp.asarray(task.y))
+    return mlp_loss, params, ds, eval_prog, cfg, task
+
+
+def _run(engine, loss_fn, params, ds, eval_prog, cfg, **kw):
+    return run_federated(loss_fn, params, ds, None, cfg,
+                         eval_program=eval_prog, engine=engine, **kw)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: scan ≡ batched ≡ looped at fixed seed,
+# for every algorithm family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm", [
+    "fedmrn", "fedmrns", "fedavg", "signsgd", "fedpm", "fedsparsify"])
+def test_three_engine_trajectory_parity(algorithm):
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup(algorithm)
+    hs = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=2)
+    hb = _run("batched", loss_fn, params, ds, eval_prog, cfg)
+    hl = _run("looped", loss_fn, params, ds, eval_prog, cfg)
+    # satellite: the seed-stable (R, K) schedule is shared by all engines
+    np.testing.assert_array_equal(hs["schedule"], hb["schedule"])
+    np.testing.assert_array_equal(hs["schedule"], hl["schedule"])
+    for other in (hb, hl):
+        np.testing.assert_allclose(hs["acc"], other["acc"], atol=1e-6)
+        np.testing.assert_allclose(hs["local_loss"], other["local_loss"],
+                                   atol=1e-5)
+        assert hs["round"] == other["round"]
+        assert (hs["uplink_bits_per_client"]
+                == other["uplink_bits_per_client"])
+
+
+def test_scan_error_feedback_parity():
+    """Cross-round EF residual state flows through the scan carry exactly
+    as through the batched engine's per-round state."""
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup(
+        "fedmrn", rounds=5, error_feedback=True)
+    hs = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=2)
+    hb = _run("batched", loss_fn, params, ds, eval_prog, cfg)
+    np.testing.assert_allclose(hs["acc"], hb["acc"], atol=1e-6)
+    np.testing.assert_allclose(hs["local_loss"], hb["local_loss"],
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# client-selection schedule (satellite)
+# ---------------------------------------------------------------------------
+
+def test_schedule_matches_legacy_rng_sequence():
+    """The precomputed (R, K) schedule reproduces the legacy per-round
+    interleaved ``rng.choice`` draws exactly."""
+    cfg = FLConfig(num_clients=10, clients_per_round=4, rounds=7, seed=3)
+    sched = make_client_schedule(cfg)
+    assert sched.shape == (7, 4) and sched.dtype == np.int32
+    rng = np.random.RandomState(3)
+    for r in range(cfg.rounds):
+        np.testing.assert_array_equal(
+            sched[r], rng.choice(10, 4, replace=False))
+    # seed-stability
+    np.testing.assert_array_equal(sched, make_client_schedule(cfg))
+    # rows are valid selections without replacement
+    assert all(len(np.unique(row)) == 4 for row in sched)
+
+
+# ---------------------------------------------------------------------------
+# edge cases
+# ---------------------------------------------------------------------------
+
+def test_scan_partial_trailing_chunk():
+    """rounds % chunk != 0: trailing chunk is smaller, trajectory unchanged."""
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=5)
+    h3 = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=3)
+    h1 = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=None)
+    assert h3["num_dispatches"] == 2          # 3 + 2
+    assert h1["num_dispatches"] == 1
+    np.testing.assert_allclose(h3["acc"], h1["acc"], atol=1e-7)
+    np.testing.assert_allclose(h3["local_loss"], h1["local_loss"],
+                               atol=1e-7)
+
+
+def test_scan_eval_every_exceeds_rounds():
+    """eval_every > rounds: only round 0 and the final round evaluate."""
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=3)
+    hs = _run("scan", loss_fn, params, ds, eval_prog, cfg, eval_every=10)
+    hb = _run("batched", loss_fn, params, ds, eval_prog, cfg, eval_every=10)
+    assert hs["round"] == [0, 2] == hb["round"]
+    np.testing.assert_allclose(hs["acc"], hb["acc"], atol=1e-6)
+    assert np.isfinite(hs["final_acc"])
+
+
+def test_scan_full_participation():
+    """clients_per_round == num_clients: schedule rows are permutations."""
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=3)
+    cfg = dataclasses.replace(cfg, clients_per_round=cfg.num_clients)
+    hs = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=2)
+    hb = _run("batched", loss_fn, params, ds, eval_prog, cfg)
+    assert all(len(np.unique(r)) == cfg.num_clients
+               for r in hs["schedule"])
+    np.testing.assert_allclose(hs["acc"], hb["acc"], atol=1e-6)
+
+
+def test_scan_rejects_host_callback_data():
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=2)
+    with pytest.raises(ValueError, match="FederatedDataset"):
+        run_federated(loss_fn, params, lambda r, c: None, None, cfg,
+                      eval_program=eval_prog, engine="scan")
+
+
+def test_scan_requires_eval_program():
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=2)
+    with pytest.raises(ValueError, match="eval_program"):
+        run_federated(loss_fn, params, ds, lambda p: 0.0, cfg,
+                      engine="scan")
+
+
+# ---------------------------------------------------------------------------
+# zero host transfers inside a chunk (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_chunk_is_one_program_no_host_transfers():
+    """A chunk is ONE jitted dispatch: the loss_fn traces a constant number
+    of times regardless of R, the driver dispatches ⌈R/chunk⌉ programs, and
+    no device→host transfer happens while chunks execute."""
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=6)
+    traces = []
+
+    def counting_loss(p, b):
+        traces.append(1)
+        return loss_fn(p, b)
+
+    run_chunk, state, metrics = make_experiment_program(
+        counting_loss, cfg, params, ds, eval_program=eval_prog,
+        eval_every=2)
+    schedule = jnp.asarray(make_client_schedule(cfg), jnp.int32)
+    w = params
+    with jax.transfer_guard_device_to_host("disallow"):
+        for r0 in range(0, cfg.rounds, 3):
+            w, state, metrics = run_chunk(
+                w, state, metrics, jnp.int32(r0), schedule[r0:r0 + 3],
+                n_rounds=3)
+        jax.block_until_ready(metrics)
+    # one trace per compiled chunk shape (fwd+bwd), NOT one per round
+    assert len(traces) <= 4, f"loss_fn traced {len(traces)} times"
+    acc = np.asarray(metrics["acc"])
+    assert np.isfinite(acc[[0, 2, 4, 5]]).all()   # eval_every=2 + final
+    assert np.isnan(acc[[1, 3]]).all()            # non-eval rounds stay NaN
+    loss = np.asarray(metrics["loss"])
+    assert np.isfinite(loss).all()
+    bits = np.asarray(metrics["uplink_bits"])
+    assert (bits > 0).all()
+
+
+def test_history_num_dispatches_counts_chunks():
+    loss_fn, params, ds, eval_prog, cfg, _ = _setup("fedmrn", rounds=7)
+    hs = _run("scan", loss_fn, params, ds, eval_prog, cfg, chunk=3)
+    assert hs["num_dispatches"] == math.ceil(7 / 3)
+
+
+# ---------------------------------------------------------------------------
+# the data + eval layers in isolation
+# ---------------------------------------------------------------------------
+
+def test_gather_matches_host_batch_fn():
+    """In-program (vmapped, traced round) gather == host adapter batches."""
+    _, _, ds, _, cfg, _ = _setup("fedmrn")
+    batch_fn = ds.batch_fn(steps=3, batch=5)
+    picked = jnp.asarray([1, 4, 6], jnp.int32)
+    gathered = jax.jit(lambda r, p: ds.gather_batches(
+        r, p, steps=3, batch=5))(jnp.int32(2), picked)
+    for k, cid in enumerate([1, 4, 6]):
+        xh, yh = batch_fn(2, cid)
+        np.testing.assert_array_equal(np.asarray(gathered[0][k]),
+                                      np.asarray(xh))
+        np.testing.assert_array_equal(np.asarray(gathered[1][k]),
+                                      np.asarray(yh))
+
+
+def test_gather_respects_partition_membership():
+    """Sampled examples always come from the picked client's partition."""
+    task = make_image_task(1, n=300, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("noniid2", 1, task.y, 6, labels_per_client=2)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=5)
+    for cid in range(6):
+        xb, yb = ds.client_batch(jnp.int32(0), jnp.int32(cid),
+                                 steps=4, batch=8)
+        labels = np.unique(np.asarray(yb))
+        allowed = np.unique(task.y[parts[cid]])
+        assert set(labels) <= set(allowed)
+
+
+def test_eval_program_matches_full_batch_accuracy():
+    """Batched eval (with a wrap-padded remainder) == full-batch accuracy."""
+    task = make_image_task(0, n=700, hw=8, n_classes=4, noise=0.5)
+    params = mlp_init(KEY, d_in=64, d_hidden=32, n_classes=4)
+    x, y = jnp.asarray(task.x), jnp.asarray(task.y)
+    full = float(mlp_accuracy(params, x, y))
+    for bs in (64, 256, 700, 1000):   # 700 % 64 != 0 exercises the padding
+        prog = make_eval_program(mlp_apply, x, y, batch_size=bs)
+        assert float(jax.jit(prog)(params)) == pytest.approx(full, abs=1e-7)
