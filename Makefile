@@ -1,7 +1,8 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast bench-engine bench-engine-smoke bench quickstart
+.PHONY: test test-fast bench-engine bench-engine-smoke bench quickstart \
+    examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -11,7 +12,7 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
 	    tests/test_round_engine.py tests/test_scan_engine.py \
-	    tests/test_fed_engine.py
+	    tests/test_fed_engine.py tests/test_experiment_api.py
 
 # looped/batched/scan round engine benchmark (ISSUE 1+2 acceptance);
 # writes machine-readable BENCH_engine.json at the repo root
@@ -27,3 +28,8 @@ bench:
 
 quickstart:
 	$(PY) examples/quickstart.py
+
+# tiny-round example runs — keeps the Experiment-API examples green in CI
+examples-smoke:
+	$(PY) examples/quickstart.py --rounds 4
+	$(PY) examples/fed_image_cnn.py --rounds 3 --seeds 2

@@ -24,6 +24,13 @@ Rows (derived = rounds/sec, except ratio rows):
   engine/<algo>/scan_vs_batched                 scan vs batched_driver —
                                                 the PR-2 acceptance ratio
 
+Multi-seed sweep rows (derived = seeds/sec, except the ratio):
+  engine/sweep/vmapped           Experiment.sweep: S seeds as ONE vmapped
+                                 scan program (one dispatch per chunk)
+  engine/sweep/host_loop         the fallback: S sequential dispatches of
+                                 one seed-polymorphic compiled program
+  engine/sweep/vmapped_vs_loop   the PR-3 acceptance ratio (>= 2x)
+
 ``write_bench_json`` emits the machine-readable ``BENCH_engine.json``
 (rounds/sec per engine + config + commit) next to the repo root.
 """
@@ -196,8 +203,52 @@ def engine_rows(n_rounds: int = 30) -> List[Dict]:
     return rows
 
 
+def sweep_rows(n_rounds: int = 10, n_seeds: int = 32) -> List[Dict]:
+    """Vmapped vs host-looped multi-seed sweep seeds/sec (same scan body).
+
+    Both paths run the SAME per-seed computation (n_rounds scan rounds of
+    the fedmrn body, per-seed client schedules) through cached compiled
+    programs; the vmapped path fuses the S seeds into one program with a
+    leading seed axis, the host loop dispatches one seed-polymorphic
+    program S times.  Trajectory equality is asserted by
+    tests/test_experiment_api.py, not here.
+    """
+    from repro.fed import Experiment, ExperimentSpec
+    from repro.models.cnn import cnn_apply
+
+    task = make_image_task(0, n=2000, hw=8, n_classes=8, noise=0.5)
+    parts = make_partition("iid", 0, task.y, num_clients=NUM_CLIENTS)
+    params = cnn_init(jax.random.key(0), n_classes=8, channels=(4, 4), hw=8)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=131,
+                                x_test=task.x[:256], y_test=task.y[:256])
+    cfg = dataclasses.replace(_cfg("fedmrn"), rounds=n_rounds)
+    exp = Experiment(ExperimentSpec(
+        loss_fn=cnn_loss, params=params, data=ds, config=cfg,
+        eval_apply=cnn_apply, eval_every=n_rounds))
+
+    def timed(fn, repeats=3):
+        fn()                    # compile/warmup (programs cached on exp)
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.time()
+            fn()
+            best = min(best, time.time() - t0)
+        return best
+
+    t_vm = timed(lambda: exp.sweep(seeds=n_seeds))
+    t_host = timed(lambda: exp.sweep(seeds=n_seeds, vmapped=False))
+    return [
+        dict(name="engine/sweep/vmapped", us_per_call=t_vm * 1e6,
+             derived=round(n_seeds / t_vm, 2)),
+        dict(name="engine/sweep/host_loop", us_per_call=t_host * 1e6,
+             derived=round(n_seeds / t_host, 2)),
+        dict(name="engine/sweep/vmapped_vs_loop", us_per_call=0.0,
+             derived=round(t_host / t_vm, 2)),
+    ]
+
+
 def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
-                     n_rounds: int = 30) -> str:
+                     n_rounds: int = 30, n_sweep_seeds: int = 32) -> str:
     """Emit machine-readable engine results (satellite: bench trajectory).
 
     ``n_rounds`` is recorded in the config so a --quick (10-round) run is
@@ -220,9 +271,10 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
         "commit": commit,
         "config": {"clients_per_round": K, "num_clients": NUM_CLIENTS,
                    "local_steps": STEPS, "batch_size": BATCH,
-                   "n_rounds": n_rounds,
+                   "n_rounds": n_rounds, "n_sweep_seeds": n_sweep_seeds,
                    "model": "cnn(4,4)/hw8", "unit": "rounds_per_sec "
-                   "(speedup/scan_vs_batched rows are ratios)"},
+                   "(sweep rows are seeds_per_sec; speedup/"
+                   "scan_vs_batched/vmapped_vs_loop rows are ratios)"},
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "results": results,
     }
@@ -234,7 +286,7 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    all_rows = engine_rows()
+    all_rows = engine_rows() + sweep_rows()
     for row in all_rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"# wrote {write_bench_json(all_rows, n_rounds=30)}")

@@ -12,11 +12,11 @@ from typing import Dict, List
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.data import make_image_task, make_partition, sample_local_batches
-from repro.fed import FLConfig, run_federated
-from repro.models.cnn import cnn_accuracy, cnn_init, cnn_loss
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition, sample_local_batches)
+from repro.fed import Experiment, ExperimentSpec, FLConfig, get_algorithm
+from repro.models.cnn import cnn_apply, cnn_init, cnn_loss
 
 
 def _setup(partition: str, seed: int = 0):
@@ -31,26 +31,22 @@ def _setup(partition: str, seed: int = 0):
 
 
 def _run(algo: str, partition: str, rounds: int = 15, seed: int = 0,
-         engine: str = "batched", **cfg_kw) -> Dict:
+         engine: str = "scan", **cfg_kw) -> Dict:
+    get_algorithm(algo)          # fail fast on names not in the registry
     xtr, ytr, xte, yte, parts, params = _setup(partition, seed)
     cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
                    rounds=rounds, local_steps=10, batch_size=32, lr=0.1,
                    seed=seed,
                    **{"noise_alpha": 0.025 if algo == "fedmrns" else 0.05,
                       **cfg_kw})
-
-    def batch_fn(rnd, cid):
-        return sample_local_batches(seed * 131 + rnd * 997 + cid, xtr, ytr,
-                                    parts[cid], steps=cfg.local_steps,
-                                    batch=cfg.batch_size)
-
-    def eval_fn(p):
-        return float(cnn_accuracy(p, xte, yte))
-
-    # every table/figure runs on the batched round engine (one XLA program
-    # per round); engine="looped" reproduces the seed's reference loop
-    return run_federated(cnn_loss, params, batch_fn, eval_fn, cfg,
-                         eval_every=max(1, rounds // 4), engine=engine)
+    ds = make_federated_dataset(xtr, ytr, parts, x_test=xte, y_test=yte,
+                                batch_seed=seed * 131 + 1)
+    spec = ExperimentSpec(loss_fn=cnn_loss, params=params, data=ds,
+                          config=cfg, eval_apply=cnn_apply,
+                          eval_every=max(1, rounds // 4))
+    # every table/figure runs as one fused scan program by default;
+    # engine="batched"/"looped" reproduce the per-round / per-client models
+    return Experiment(spec).run(engine=engine).to_history()
 
 
 def table1_accuracy(partitions=("iid", "noniid2"), rounds=15):

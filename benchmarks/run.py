@@ -32,8 +32,10 @@ def main() -> None:
         "fig5": lambda: fl_suite.fig5_noise(rounds=max(4, rounds - 3)),
         "fig6": fl_suite.fig6_complexity,
         "comm": fl_suite.comm_table,
-        "engine": lambda: engine_bench.engine_rows(
-            n_rounds=10 if args.quick else 30),
+        "engine": lambda: (
+            engine_bench.engine_rows(n_rounds=10 if args.quick else 30)
+            + engine_bench.sweep_rows(n_rounds=5 if args.quick else 10,
+                                      n_seeds=8 if args.quick else 32)),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:
@@ -49,7 +51,8 @@ def main() -> None:
                 sys.stdout.flush()
             if name == "engine":
                 path = engine_bench.write_bench_json(
-                    rows, n_rounds=10 if args.quick else 30)
+                    rows, n_rounds=10 if args.quick else 30,
+                    n_sweep_seeds=8 if args.quick else 32)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}")

@@ -1,13 +1,17 @@
 """End-to-end driver: full baseline sweep on the synthetic image task —
 the CPU-scale analogue of the paper's Table 1 (one dataset, one
-partition), with per-round accuracy curves and checkpointing.
+partition), with per-round accuracy curves, multi-seed error bars, and
+checkpointing.
 
 Run:  PYTHONPATH=src python examples/fed_image_cnn.py [--partition noniid2]
 
-``--engine scan`` (default) fuses the whole experiment into ⌈R/chunk⌉
-jitted dispatches with a device-resident dataset and on-device eval;
-``batched`` dispatches one program per round; ``looped`` is the seed's
-per-client reference loop.
+One ``ExperimentSpec`` per algorithm; ``--algos all`` enumerates every
+algorithm in the plugin registry (``repro.fed.list_algorithms``) instead
+of the curated paper zoo.  ``--seeds N`` (N > 1) runs each algorithm as a
+vmapped multi-seed sweep — N seeds resident in ONE compiled program — and
+reports mean±std.  ``--engine`` picks the execution model (scan fuses the
+whole experiment into ⌈R/chunk⌉ jitted dispatches; batched dispatches one
+program per round; looped is the seed's per-client reference loop).
 """
 import argparse
 import os
@@ -18,11 +22,11 @@ import jax.numpy as jnp
 from repro import checkpoint
 from repro.data import (make_federated_dataset, make_image_task,
                         make_partition)
-from repro.fed import FLConfig, run_federated
-from repro.models.cnn import cnn_eval_program, cnn_init, cnn_loss
+from repro.fed import Experiment, ExperimentSpec, FLConfig, list_algorithms
+from repro.models.cnn import cnn_apply, cnn_init, cnn_loss
 
-ALGOS = ("fedavg", "fedmrn", "fedmrns", "signsgd", "terngrad", "topk",
-         "drive", "eden", "fedpm", "fedsparsify")
+PAPER_ALGOS = ("fedavg", "fedmrn", "fedmrns", "signsgd", "terngrad", "topk",
+               "drive", "eden", "fedpm", "fedsparsify")
 
 
 def main():
@@ -30,6 +34,12 @@ def main():
     ap.add_argument("--partition", default="noniid2",
                     choices=["iid", "noniid1", "noniid2"])
     ap.add_argument("--rounds", type=int, default=20)
+    ap.add_argument("--algos", default="paper", choices=["paper", "all"],
+                    help="paper = the Table-1 zoo; all = every registered "
+                         "algorithm (repro.fed.list_algorithms)")
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="N > 1 runs a vmapped N-seed sweep per algorithm "
+                         "and reports mean±std")
     ap.add_argument("--engine", default="scan",
                     choices=["scan", "batched", "looped"],
                     help="scan = whole experiment fused into chunked "
@@ -40,6 +50,9 @@ def main():
                     help="rounds per scan dispatch (default: all)")
     ap.add_argument("--out", default="/tmp/fed_image_cnn")
     args = ap.parse_args()
+    if args.seeds > 1 and args.engine != "scan":
+        ap.error("--seeds > 1 runs the vmapped scan sweep; "
+                 "drop --engine or use --engine scan")
 
     task = make_image_task(0, n=3000, hw=16, n_classes=8, noise=0.5)
     n_test = 600
@@ -48,28 +61,39 @@ def main():
     params0 = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
     ds = make_federated_dataset(xtr, ytr, parts, x_test=task.x[-n_test:],
                                 y_test=task.y[-n_test:], batch_seed=997)
-    eval_prog = cnn_eval_program(ds.x_test, ds.y_test)
     os.makedirs(args.out, exist_ok=True)
+    algos = PAPER_ALGOS if args.algos == "paper" else list_algorithms()
 
     print(f"partition={args.partition} rounds={args.rounds} "
-          f"engine={args.engine}")
-    header = f"{'algorithm':12s} {'acc':>6s} {'bpp':>7s} {'round-curve'}"
-    print(header)
-    for algo in ALGOS:
+          f"engine={args.engine} seeds={args.seeds}")
+    print(f"{'algorithm':12s} {'acc':>6s} {'bpp':>7s} {'round-curve'}")
+    for algo in algos:
         cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
                        rounds=args.rounds, local_steps=10, batch_size=32,
                        lr=0.1,
                        noise_alpha=0.025 if algo == "fedmrns" else 0.05)
+        exp = Experiment(ExperimentSpec(
+            loss_fn=cnn_loss, params=params0, data=ds, config=cfg,
+            eval_apply=cnn_apply,               # eval auto-wired from split
+            eval_every=max(1, args.rounds // 5)))
 
-        hist = run_federated(cnn_loss, params0, ds, None, cfg,
-                             eval_program=eval_prog,
-                             eval_every=max(1, args.rounds // 5),
-                             engine=args.engine, chunk=args.chunk)
-        bpp = hist["uplink_bits_per_client"] / hist["params"]
-        curve = " ".join(f"{a:.2f}" for a in hist["acc"])
-        print(f"{algo:12s} {hist['final_acc']:6.3f} {bpp:7.2f} {curve}")
+        if args.seeds > 1:
+            sweep = exp.sweep(seeds=args.seeds, chunk=args.chunk)
+            mean, std = sweep.point.mean_std()
+            res = sweep.runs[0]
+            acc_str = f"{mean:.3f}±{std:.3f}"
+            curve = " ".join(f"{a:.2f}"
+                             for a in sweep.acc.mean(axis=0))
+            acc_save = jnp.asarray(sweep.acc)
+        else:
+            res = exp.run(engine=args.engine, chunk=args.chunk)
+            acc_str = f"{res.final_acc:6.3f}"
+            curve = " ".join(f"{a:.2f}" for a in res.acc)
+            acc_save = jnp.asarray(res.acc)
+        bpp = res.uplink_bits_per_client / res.num_params
+        print(f"{algo:12s} {acc_str:>6s} {bpp:7.2f} {curve}")
         checkpoint.save(os.path.join(args.out, f"{algo}.npz"),
-                        {"acc": jnp.asarray(hist["acc"])})
+                        {"acc": acc_save})
 
 
 if __name__ == "__main__":

@@ -5,17 +5,23 @@ Any of the 10 assigned archs can be selected; the reduced variant of the
 same family is trained on the synthetic modular language, federated across
 clients, with FedMRN masks carrying the updates.
 
+The token corpus lives on device as a :class:`FederatedDataset`
+(``x`` = inputs, ``y`` = shifted targets) and the whole fine-tune runs as
+one scan-engine program via the Experiment API; eval is negative loss on
+a held-out batch (``make_negloss_eval_program``) folded into the program.
+``--seeds N`` demonstrates the vmapped multi-seed sweep on an LM workload.
+
 Run:  PYTHONPATH=src python examples/fed_llm_finetune.py --arch llama3.2-1b
 """
 import argparse
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import get_config, list_archs
-from repro.data import make_lm_task, partition_iid
-from repro.fed import FLConfig, run_federated
+from repro.core import make_negloss_eval_program
+from repro.data import make_federated_dataset, make_lm_task, partition_iid
+from repro.fed import Experiment, ExperimentSpec, FLConfig
 from repro.models.registry import build_model
 
 
@@ -24,6 +30,8 @@ def main():
     ap.add_argument("--arch", default="llama3.2-1b", choices=list_archs())
     ap.add_argument("--algorithm", default="fedmrn")
     ap.add_argument("--rounds", type=int, default=8)
+    ap.add_argument("--seeds", type=int, default=1,
+                    help="N > 1: vmapped multi-seed sweep, mean±std negloss")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced(layers=2, d_model=128, vocab=64)
@@ -32,48 +40,59 @@ def main():
     parts = partition_iid(0, len(toks), 4)
     params = model.init(jax.random.key(0))
 
-    def wrap_batch(t):
-        batch = {"tokens": t[:, :-1], "labels": t[:, 1:]}
+    def wrap_batch(tokens, labels):
+        batch = {"tokens": tokens, "labels": labels}
         if cfg.arch_type == "vlm":
-            B, S = t[:, :-1].shape
+            B, S = tokens.shape
             P = cfg.frontend_tokens
             batch["frontend_embeds"] = jnp.zeros((B, P, cfg.d_model),
                                                  cfg.dtype)
             batch["positions3"] = jnp.broadcast_to(
                 jnp.arange(S + P)[None, None], (3, B, S + P))
         elif cfg.arch_type == "audio":
-            B, S = t[:, :-1].shape
+            B, S = tokens.shape
             batch["frontend_embeds"] = jnp.zeros((B, S, cfg.d_model),
                                                  cfg.dtype)
         return batch
 
-    def loss_fn(p, stacked):
-        return model.loss_fn(p, stacked)
+    def loss_fn(p, batch):
+        tokens, labels = batch
+        return model.loss_fn(p, wrap_batch(tokens, labels))
+
+    # device-resident LM corpus: x = inputs, y = next-token targets
+    ds = make_federated_dataset(toks[:, :-1], toks[:, 1:], parts,
+                                batch_seed=7)
+    eval_prog = make_negloss_eval_program(
+        loss_fn, (toks[:64, :-1], toks[:64, 1:]))
 
     flcfg = FLConfig(algorithm=args.algorithm, num_clients=4,
                      clients_per_round=2, rounds=args.rounds,
                      local_steps=6, batch_size=16, lr=0.3,
                      noise_alpha=2e-2)
+    exp = Experiment(ExperimentSpec(
+        loss_fn=loss_fn, params=params, data=ds, config=flcfg,
+        eval_program=eval_prog, eval_every=2))
 
-    rng = np.random.RandomState(0)
-
-    def batch_fn(rnd, cid):
-        take = rng.choice(parts[cid], size=(flcfg.local_steps,
-                                            flcfg.batch_size))
-        stacked = jnp.asarray(toks[take])        # (steps, batch, seq)
-        batches = [wrap_batch(stacked[i]) for i in range(stacked.shape[0])]
-        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *batches)
-
-    def eval_fn(p):
-        return -float(loss_fn(p, wrap_batch(jnp.asarray(toks[:64]))))
-
-    hist = run_federated(loss_fn, params, batch_fn, eval_fn, flcfg,
-                         eval_every=2)
-    print(f"arch={args.arch} algo={args.algorithm} "
-          f"params={hist['params']:,} "
-          f"uplink={hist['uplink_bits_per_client']/8e3:.1f} KB/round")
-    for r, a in zip(hist["round"], hist["acc"]):
-        print(f"  round {r:3d}  negloss {a:.4f}")
+    if args.seeds > 1:
+        sweep = exp.sweep(seeds=args.seeds)
+        res = sweep.runs[0]
+        mean, std = sweep.point.mean_std()
+        print(f"arch={args.arch} algo={args.algorithm} "
+              f"params={res.num_params:,} "
+              f"uplink={res.uplink_bits_per_client/8e3:.1f} KB/round "
+              f"seeds={args.seeds}")
+        for i, r in enumerate(res.eval_rounds):
+            col = sweep.acc[:, i]
+            print(f"  round {r:3d}  negloss {col.mean():.4f}"
+                  f" ± {col.std():.4f}")
+        print(f"final negloss {mean:.4f} ± {std:.4f}")
+    else:
+        res = exp.run()
+        print(f"arch={args.arch} algo={args.algorithm} "
+              f"params={res.num_params:,} "
+              f"uplink={res.uplink_bits_per_client/8e3:.1f} KB/round")
+        for r, a in zip(res.eval_rounds, res.acc):
+            print(f"  round {r:3d}  negloss {a:.4f}")
 
 
 if __name__ == "__main__":

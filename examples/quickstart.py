@@ -1,47 +1,58 @@
 """Quickstart: FedMRN vs FedAvg on a synthetic federated image task.
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--rounds 15]
 
 Demonstrates the paper's headline claim in ~2 min on CPU: FedMRN matches
 FedAvg accuracy while sending 1 bit per parameter uplink (~32x compression).
 
-The whole experiment runs as ONE jitted XLA program (engine="scan"): the
-dataset lives on device (``make_federated_dataset``), and a multi-round
-``lax.scan`` fuses client selection, batch gathering, local PSM training,
-aggregation, and eval — the host dispatches once and reads the metric
-buffers at the end.  Pass ``engine="batched"`` for one program per round,
-or ``engine="looped"`` for the legacy per-client loop.
+The experiment is DECLARED once (``ExperimentSpec``: algorithm + config +
+device-resident dataset + model refs — the eval program is auto-wired from
+the test split) and run through the ``Experiment`` facade: the whole
+experiment executes as ONE jitted XLA program (scan engine), and the
+typed ``RunResult`` carries the acc/loss/uplink trajectories.  Pass
+``engine="batched"`` or ``"looped"`` to ``run()`` for the per-round /
+per-client execution models.
 """
+import argparse
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 
 from repro.data import make_federated_dataset, make_image_task, make_partition
-from repro.fed import FLConfig, run_federated
-from repro.models.cnn import cnn_eval_program, cnn_init, cnn_loss
+from repro.fed import Experiment, ExperimentSpec, FLConfig
+from repro.models.cnn import cnn_apply, cnn_init, cnn_loss
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=15)
+    args = ap.parse_args()
+
     task = make_image_task(0, n=2000, hw=16, n_classes=8, noise=0.5)
     parts = make_partition("noniid2", 0, task.y, num_clients=10,
                            labels_per_client=3)
     params = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
-    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=997)
-    eval_prog = cnn_eval_program(jnp.asarray(task.x), jnp.asarray(task.y))
+    ds = make_federated_dataset(task.x, task.y, parts,
+                                x_test=task.x, y_test=task.y, batch_seed=997)
 
+    cfg = FLConfig(num_clients=10, clients_per_round=5, rounds=args.rounds,
+                   local_steps=10, batch_size=32, lr=0.1)
     for algo in ("fedavg", "fedmrn", "fedmrns", "signsgd"):
         # noise magnitude must match the local-update scale (paper Fig. 5);
         # FedMRNS needs about half of FedMRN's noise (paper §5.5)
-        cfg = FLConfig(algorithm=algo, num_clients=10, clients_per_round=5,
-                       rounds=15, local_steps=10, batch_size=32, lr=0.1,
-                       noise_alpha=0.025 if algo == "fedmrns" else 0.05)
-        hist = run_federated(cnn_loss, params, ds, None, cfg,
-                             eval_program=eval_prog, eval_every=5,
-                             engine="scan")
-        bpp = hist["uplink_bits_per_client"] / hist["params"]
-        print(f"{algo:10s} acc={hist['final_acc']:.3f} "
+        spec = ExperimentSpec(
+            loss_fn=cnn_loss, params=params, data=ds,
+            config=dataclasses.replace(
+                cfg, algorithm=algo,
+                noise_alpha=0.025 if algo == "fedmrns" else 0.05),
+            eval_apply=cnn_apply,           # auto-wires the eval program
+            eval_every=5)
+        res = Experiment(spec).run()        # scan engine: ONE program
+        bpp = res.uplink_bits_per_client / res.num_params
+        print(f"{algo:10s} acc={res.final_acc:.3f} "
               f"uplink={bpp:6.2f} bit/param "
-              f"(x{32/bpp:.1f} compression) wall={hist['wall_s']:.1f}s "
-              f"dispatches={hist['num_dispatches']}")
+              f"(x{32/bpp:.1f} compression) wall={res.wall_s:.1f}s "
+              f"dispatches={res.num_dispatches}")
 
 
 if __name__ == "__main__":

@@ -51,4 +51,7 @@ from .fedmrn import (  # noqa: F401
     sgd_local_update,
 )
 from .comm import CommRecord, baseline_record, fedmrn_record  # noqa: F401
-from .evaluation import make_eval_program  # noqa: F401
+from .evaluation import (  # noqa: F401
+    make_eval_program,
+    make_negloss_eval_program,
+)

@@ -60,3 +60,22 @@ def make_eval_program(
         return correct / n
 
     return program
+
+
+def make_negloss_eval_program(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    batch: Any,
+) -> Callable[[Pytree], jax.Array]:
+    """Build ``params -> -loss(params, batch)`` over a fixed eval batch.
+
+    The generative-task counterpart of :func:`make_eval_program`: when
+    there is no argmax accuracy to report (LM fine-tuning), the scan
+    engine's eval slot takes negative loss on a held-out device-resident
+    batch — pure, jit/scan/cond-safe, higher-is-better like accuracy.
+    """
+    batch = jax.tree_util.tree_map(jnp.asarray, batch)
+
+    def program(params: Pytree) -> jax.Array:
+        return -jnp.float32(loss_fn(params, batch))
+
+    return program

@@ -1,6 +1,19 @@
-"""Federated training engine (simulation + sharded pod modes)."""
+"""Federated training engine (declarative API + simulation + pod modes).
+
+Start with :class:`ExperimentSpec` + :class:`Experiment` (``fed/api.py``);
+algorithms plug in through the :data:`ALGORITHMS` registry
+(``fed/algorithms.py``); the execution drivers live in ``fed/engine.py``.
+"""
+from .algorithms import (  # noqa: F401
+    ALGORITHMS, Algorithm, FLConfig, get_algorithm, list_algorithms,
+    register_algorithm, uplink_bits,
+)
 from .engine import (  # noqa: F401
     make_client_schedule, make_experiment_program, make_round_body,
-    make_round_engine, uplink_bits,
+    make_round_engine, make_seeded_experiment_program, make_sweep_program,
 )
-from .simulation import ALGORITHMS, ENGINES, FLConfig, run_federated  # noqa: F401
+from .api import (  # noqa: F401
+    ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,
+    SweepPoint, SweepResult,
+)
+from .simulation import run_federated  # noqa: F401

@@ -1,0 +1,504 @@
+"""Algorithm plugin registry — every FL family behind one interface.
+
+An :class:`Algorithm` packages everything the execution engines need to
+know about one federated-learning family:
+
+  init_state(cfg, params)       cross-round state pytree ({} if stateless)
+  make_round_body(loss_fn, cfg, params)
+                                -> seeded_round_body(seed, w, state,
+                                       batches, picked, round_idx, weights)
+                                   -> (new_w, new_state, losses)
+  uplink_record(cfg, params)    exact per-client uplink bits of one round
+  validate(cfg)                 raise ValueError on a nonsense config
+
+The round body is PURE and takes the experiment ``seed`` as a *traced*
+int32 scalar (not a closure constant): that is what lets a multi-seed
+sweep ``vmap`` the whole experiment program over a seed axis with one
+compile (``fed.engine.make_sweep_program``).  The drivers in
+``fed/engine.py`` bind ``seed = cfg.seed`` for ordinary single-seed runs,
+so trajectories are unchanged.
+
+Built-in families (extracted from the seed-era ``if/elif`` branches):
+
+  fedmrn / fedmrns   PSM local training → masks → packed uplink → Eq.(5)
+  fedavg             float updates, plus one registered algorithm per
+                     post-training compressor (signsgd … post_sm)
+  fedpm              supermask-as-weights baseline (Isik et al.)
+  fedsparsify        magnitude-pruned weight upload baseline
+
+Third-party algorithms register WITHOUT touching engine internals::
+
+    from repro.fed import Algorithm, register_algorithm
+
+    register_algorithm(Algorithm(
+        name="my_algo",
+        make_round_body=my_builder,      # (loss_fn, cfg, params) -> body
+        init_state=lambda cfg, p: {},
+        uplink_record=lambda cfg, p: 32 * tree_num_params(p),
+    ))
+
+and every engine (scan / batched / looped drivers), the Experiment API,
+examples, and benchmarks pick it up by name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (FedMRNConfig, NoiseConfig, baseline_record,
+                    client_round_key, fedmrn_record, final_mask_key,
+                    gen_noise, make_compressor, mix_add, psm_local_train,
+                    sample_final_mask, sgd_local_update, tree_masked_noise,
+                    tree_num_params, tree_pack_stacked, tree_unpack_stacked)
+from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
+
+Pytree = Any
+RoundBody = Callable[..., Tuple[Pytree, Pytree, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    algorithm: str = "fedmrn"
+    num_clients: int = 20
+    clients_per_round: int = 5
+    rounds: int = 30
+    local_steps: int = 20
+    batch_size: int = 32
+    lr: float = 0.1
+    seed: int = 0
+    # fedmrn specifics (paper defaults: uniform, 1e-2 / 5e-3)
+    noise_dist: str = "uniform"
+    noise_alpha: float = 1e-2
+    use_sm: bool = True
+    use_pm: bool = True
+    error_feedback: bool = False
+    # beyond-paper: one shared noise G(s_t) per ROUND (instead of per
+    # client).  Masks stay per-client, so the uplink is unchanged (1 bpp),
+    # but Σ_k G(s_k)⊙m_k = G(s_t) ⊙ Σ_k m_k — the server aggregation
+    # becomes an integer mask-count (popcount) scaled by one noise tensor,
+    # and at pod scale the mask all-gather can become a ⌈log2(K+1)⌉-bit
+    # integer all-reduce (a further ~3× cross-client traffic cut at K=16).
+    shared_noise: bool = False
+    # baselines
+    topk_frac: float = 0.03
+    sparsify_frac: float = 0.03    # fedsparsify keeps top 3% of weights
+    qsgd_bits: int = 2
+    # kernel backend for masking/packing: "ref" | "pallas" | None (auto)
+    backend: Optional[str] = None
+
+    def fedmrn_config(self) -> FedMRNConfig:
+        mode = "signed" if self.algorithm == "fedmrns" else "binary"
+        return FedMRNConfig(
+            mask_mode=mode,
+            noise=NoiseConfig(dist=self.noise_dist, alpha=self.noise_alpha),
+            use_sm=self.use_sm, use_pm=self.use_pm,
+            error_feedback=self.error_feedback, lr=self.lr,
+            backend=self.backend)
+
+    def validate(self) -> None:
+        """Generic sanity checks shared by every algorithm."""
+        if self.rounds <= 0:
+            raise ValueError(f"rounds must be positive, got {self.rounds}")
+        if self.local_steps <= 0:
+            raise ValueError(
+                f"local_steps must be positive, got {self.local_steps}")
+        if self.batch_size <= 0:
+            raise ValueError(
+                f"batch_size must be positive, got {self.batch_size}")
+        if not 0 < self.clients_per_round <= self.num_clients:
+            raise ValueError(
+                f"clients_per_round={self.clients_per_round} must be in "
+                f"[1, num_clients={self.num_clients}]")
+
+
+# ---------------------------------------------------------------------------
+# the plugin interface + registry
+# ---------------------------------------------------------------------------
+
+def _no_state(cfg: FLConfig, params: Pytree) -> Dict[str, Pytree]:
+    return {}
+
+
+def _no_validate(cfg: FLConfig) -> None:
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """One pluggable FL family: round body + state + uplink accounting.
+
+    ``make_round_body(loss_fn, cfg, params)`` must return a PURE function
+
+        body(seed, w, state, batches, picked, round_idx, weights)
+            -> (new_w, new_state, losses)     # losses: (K, S) device array
+
+    where ``seed`` is a (possibly traced) int32 scalar — derive every PRNG
+    key from it (``jax.random.key(seed + c)`` / ``client_round_key``), not
+    from ``cfg.seed``, or multi-seed sweeps silently reuse one stream.
+    """
+
+    name: str
+    make_round_body: Callable[[Callable, FLConfig, Pytree], RoundBody]
+    uplink_record: Callable[[FLConfig, Pytree], int]
+    init_state: Callable[[FLConfig, Pytree], Pytree] = _no_state
+    validate: Callable[[FLConfig], None] = _no_validate
+
+
+ALGORITHMS: Dict[str, Algorithm] = {}
+
+
+def register_algorithm(algo: Algorithm, *, overwrite: bool = False) -> Algorithm:
+    """Add ``algo`` to the registry (raises on duplicate names)."""
+    if not algo.name:
+        raise ValueError("algorithm needs a non-empty name")
+    if algo.name in ALGORITHMS and not overwrite:
+        raise ValueError(
+            f"algorithm {algo.name!r} already registered "
+            "(pass overwrite=True to replace)")
+    ALGORITHMS[algo.name] = algo
+    return algo
+
+
+def get_algorithm(name: str) -> Algorithm:
+    try:
+        return ALGORITHMS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown algorithm {name!r} "
+            f"(registered: {', '.join(sorted(ALGORITHMS))})") from None
+
+
+def list_algorithms() -> Tuple[str, ...]:
+    return tuple(sorted(ALGORITHMS))
+
+
+def uplink_bits(cfg: FLConfig, params: Pytree) -> int:
+    """Exact per-client uplink cost of one round (for history accounting)."""
+    return get_algorithm(cfg.algorithm).uplink_record(cfg, params)
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def _tree_zeros_like(t: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+def _weighted_sum(weights: jax.Array, stacked: Pytree) -> Pytree:
+    """Σ_k w_k · leaf[k] over the leading client axis of every leaf."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(weights, x.astype(jnp.float32), axes=1),
+        stacked)
+
+
+# ---------------------------------------------------------------------------
+# per-client local updates for the baselines (shared with the looped engine)
+# ---------------------------------------------------------------------------
+
+def fedpm_local(loss_fn, w_init, scores, batches, *, lr, key):
+    """Train sigmoid-scores; weights = w_init ⊙ Bern(sigmoid(s)) with STE."""
+
+    def masked_params(s, k):
+        leaves, treedef = jax.tree_util.tree_flatten(s)
+        w_leaves = jax.tree_util.tree_leaves(w_init)
+        out = []
+        for i, (sl, wl) in enumerate(zip(leaves, w_leaves)):
+            prob = jax.nn.sigmoid(sl)
+            m = jax.random.bernoulli(jax.random.fold_in(k, i), prob)
+            m = prob + jax.lax.stop_gradient(m.astype(prob.dtype) - prob)
+            out.append(wl * m)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def step(s, inp):
+        tau, batch = inp
+        k = jax.random.fold_in(key, tau)
+
+        def fwd(s_):
+            return loss_fn(masked_params(s_, k), batch)
+
+        loss, g = jax.value_and_grad(fwd)(s)
+        s = jax.tree_util.tree_map(lambda a, gi: a - lr * gi, s, g)
+        return s, loss
+
+    n = jax.tree_util.tree_leaves(batches)[0].shape[0]
+    s_final, losses = jax.lax.scan(step, scores,
+                                   (jnp.arange(n), batches))
+    # uplink: Bernoulli-sampled masks, one independent draw per leaf
+    # (folding the leaf index keeps same-shaped leaves decorrelated)
+    leaves, treedef = jax.tree_util.tree_flatten(s_final)
+    mask_key = jax.random.fold_in(key, n + 1)
+    masks = jax.tree_util.tree_unflatten(treedef, [
+        jax.random.bernoulli(jax.random.fold_in(mask_key, i),
+                             jax.nn.sigmoid(sl)).astype(jnp.float32)
+        for i, sl in enumerate(leaves)])
+    return masks, losses
+
+
+def fedsparsify_local(loss_fn, w, batches, *, lr, frac):
+    w_new, losses = sgd_local_update(loss_fn, w, batches, lr=lr)
+    w_new = jax.tree_util.tree_map(jnp.add, w, w_new)  # u → w_local
+
+    def prune(x):
+        flat = jnp.abs(x).reshape(-1)
+        k = max(1, int(np.ceil(frac * flat.shape[0])))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+    return jax.tree_util.tree_map(prune, w_new), losses
+
+
+# ---------------------------------------------------------------------------
+# built-in round bodies, one per algorithm family
+# ---------------------------------------------------------------------------
+
+def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
+    mrn = cfg.fedmrn_config()
+    ef = cfg.error_feedback
+
+    def round_fn(seed, w, state, batches, picked, round_idx, weights):
+        train_base = jax.random.key(seed + 1)
+
+        def per_client(b, cid, r0):
+            noise_id = jnp.int32(0) if cfg.shared_noise else cid
+            seed_key = client_round_key(seed, round_idx, noise_id)
+            noise = gen_noise(seed_key, w, mrn.noise)
+            train_key = jax.random.fold_in(train_base,
+                                           round_idx * 1000 + cid)
+            u, losses = psm_local_train(loss_fn, w, b, noise, train_key,
+                                        cfg=mrn, u0=r0 if ef else None)
+            # step count from the batches, NOT cfg.local_steps — the mask
+            # key must track the real S or parity with the looped
+            # reference breaks when a caller varies steps per round
+            num_steps = jax.tree_util.tree_leaves(b)[0].shape[0]
+            m = sample_final_mask(
+                u, noise, final_mask_key(train_key, num_steps), cfg=mrn)
+            residual = (jax.tree_util.tree_map(
+                jnp.subtract, u, tree_masked_noise(noise, m))
+                if ef else None)
+            return m, losses, residual
+
+        r0 = (jax.tree_util.tree_map(lambda r: r[picked],
+                                     state["residuals"])
+              if ef else jnp.zeros((picked.shape[0],)))
+        masks, losses, residuals = jax.vmap(per_client)(batches, picked, r0)
+
+        # ---- uplink: the wire payload, packed in one kernel launch ------
+        payload = tree_pack_stacked(masks, mode=mrn.mask_mode,
+                                    backend=cfg.backend)
+
+        # ---- server: unpack, regen noise from seeds, Eq. (5) ------------
+        m_rec = tree_unpack_stacked(payload, w, mode=mrn.mask_mode,
+                                    backend=cfg.backend)
+        wn = weights / jnp.sum(weights)
+        if cfg.shared_noise:
+            # Σ_k p'_k G(s_t)⊙m_k = G(s_t) ⊙ Σ_k p'_k m_k: one noise
+            # tensor scales an (integer-valued) mask average
+            noise = gen_noise(client_round_key(seed, round_idx, 0),
+                              w, mrn.noise)
+            m_avg = _weighted_sum(wn, m_rec)
+            agg = jax.tree_util.tree_map(
+                lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
+        else:
+            def decode(cid, m_c):
+                noise = gen_noise(client_round_key(seed, round_idx, cid),
+                                  w, mrn.noise)
+                return jax.tree_util.tree_map(
+                    lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_c)
+
+            u_hats = jax.vmap(decode)(picked, m_rec)
+            agg = _weighted_sum(wn, u_hats)
+        new_w = jax.tree_util.tree_map(mix_add, w, agg)
+
+        new_state = state
+        if ef:
+            new_state = {"residuals": jax.tree_util.tree_map(
+                lambda r, nr: r.at[picked].set(nr),
+                state["residuals"], residuals)}
+        return new_w, new_state, losses
+
+    return round_fn
+
+
+def _fedmrn_state(cfg: FLConfig, params: Pytree) -> Dict[str, Pytree]:
+    if not cfg.error_feedback:
+        return {}
+    # Device-resident residual stack: num_clients × model size.  Keeps
+    # the gather/scatter inside the round program (no host sync), at
+    # the cost of a dense buffer — fine for simulation-scale client
+    # counts; a cross-silo run with thousands of clients should shard
+    # this stack or carry residuals host-side instead.
+    return {"residuals": jax.tree_util.tree_map(
+        lambda p: jnp.zeros((cfg.num_clients,) + p.shape, p.dtype),
+        params)}
+
+
+def _fedmrn_validate(cfg: FLConfig) -> None:
+    if cfg.noise_alpha <= 0:
+        raise ValueError(
+            f"noise_alpha must be positive, got {cfg.noise_alpha}")
+    NoiseConfig(dist=cfg.noise_dist, alpha=cfg.noise_alpha)  # checks dist
+
+
+def _fedavg_family_body(compressor_name: Optional[str]):
+    """Round-body builder for fedavg and every post-training compressor."""
+
+    def build(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
+        mrn = cfg.fedmrn_config()
+        compressor = (None if compressor_name is None else
+                      make_compressor(compressor_name,
+                                      topk_frac=cfg.topk_frac,
+                                      qsgd_bits=cfg.qsgd_bits,
+                                      noise=mrn.noise))
+
+        def round_fn(seed, w, state, batches, picked, round_idx, weights):
+            comp_base = jax.random.key(seed + 3)
+
+            def per_client(b, cid):
+                u, losses = sgd_local_update(loss_fn, w, b, lr=cfg.lr)
+                if compressor is not None:
+                    u = compressor.roundtrip(
+                        u, jax.random.fold_in(comp_base,
+                                              round_idx * 1000 + cid))
+                return u, losses
+
+            updates, losses = jax.vmap(per_client)(batches, picked)
+            wn = weights / jnp.sum(weights)
+            agg = _weighted_sum(wn, updates)
+            new_w = jax.tree_util.tree_map(mix_add, w, agg)
+            return new_w, state, losses
+
+        return round_fn
+
+    return build
+
+
+def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
+    noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
+
+    def round_fn(seed, w, state, batches, picked, round_idx, weights):
+        # frozen random init, regenerated from the traced seed: keeps the
+        # body pure in `seed` so sweeps can vmap over it.  The expression
+        # is loop-invariant inside the experiment scan (seed is a chunk
+        # argument), and one RNG pass over the params is small next to a
+        # round's K×S training steps either way.
+        w_frozen = gen_noise(jax.random.key(seed), params, noise_cfg)
+        key_base = jax.random.key(seed + 2)
+        scores = state["scores"]
+
+        def per_client(b, cid):
+            return fedpm_local(
+                loss_fn, w_frozen, scores, b, lr=cfg.lr,
+                key=jax.random.fold_in(key_base, round_idx * 1000 + cid))
+
+        masks, losses = jax.vmap(per_client)(batches, picked)
+        K = picked.shape[0]
+        # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
+        # accumulated in f32 regardless of param dtype.  The raw K-client
+        # mean hits exactly 0/1 whenever all clients agree, and logit of
+        # the clipped value (±9.2) saturates next round's sigmoid scores —
+        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(K+1).
+        probs = jax.tree_util.tree_map(
+            lambda m: (jnp.sum(m.astype(jnp.float32), axis=0) + 1.0)
+            / (K + 2.0), masks)
+        new_scores = jax.tree_util.tree_map(
+            lambda p_: jnp.log(p_ / (1 - p_)), probs)      # sigmoid^-1
+        new_w = jax.tree_util.tree_map(
+            lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
+        return new_w, {"scores": new_scores}, losses
+
+    return round_fn
+
+
+def _fedsparsify_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
+    def round_fn(seed, w, state, batches, picked, round_idx, weights):
+        def per_client(b, cid):
+            return fedsparsify_local(loss_fn, w, b, lr=cfg.lr,
+                                     frac=cfg.sparsify_frac)
+
+        w_locals, losses = jax.vmap(per_client)(batches, picked)
+        wn = weights / jnp.sum(weights)
+        new_w = _weighted_sum(wn, w_locals)
+        new_w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
+                                       w, new_w)
+        return new_w, state, losses
+
+    return round_fn
+
+
+# ---------------------------------------------------------------------------
+# uplink accounting + built-in registration
+# ---------------------------------------------------------------------------
+
+def _fedmrn_bits(cfg, params):
+    return fedmrn_record(tree_num_params(params)).uplink_bits
+
+
+def _fedavg_bits(cfg, params):
+    return 32 * tree_num_params(params)
+
+
+def _baseline_bits(name, **rec_kw):
+    def bits(cfg, params):
+        P = tree_num_params(params)
+        L = len(jax.tree_util.tree_leaves(params))
+        kw = {k: getattr(cfg, v) for k, v in rec_kw.items()}
+        return baseline_record(name, P, L, **kw).uplink_bits
+    return bits
+
+
+def _frac_validate(field):
+    def validate(cfg):
+        v = getattr(cfg, field)
+        if not 0 < v <= 1:
+            raise ValueError(f"{field} must be in (0, 1], got {v}")
+    return validate
+
+
+def _qsgd_validate(cfg):
+    if cfg.qsgd_bits < 1:
+        raise ValueError(f"qsgd_bits must be >= 1, got {cfg.qsgd_bits}")
+
+
+def _compressor_bits(name):
+    if name == "topk":
+        return _baseline_bits(name, topk_frac="topk_frac")
+    if name == "qsgd":
+        return _baseline_bits(name, qsgd_bits="qsgd_bits")
+    return _baseline_bits(name)
+
+
+def _register_builtins() -> None:
+    for name in ("fedmrn", "fedmrns"):
+        register_algorithm(Algorithm(
+            name=name, make_round_body=_fedmrn_body,
+            uplink_record=_fedmrn_bits, init_state=_fedmrn_state,
+            validate=_fedmrn_validate))
+    register_algorithm(Algorithm(
+        name="fedavg", make_round_body=_fedavg_family_body(None),
+        uplink_record=_fedavg_bits))
+    register_algorithm(Algorithm(
+        name="fedpm", make_round_body=_fedpm_body,
+        uplink_record=_baseline_bits("fedpm"),
+        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)}))
+    register_algorithm(Algorithm(
+        name="fedsparsify", make_round_body=_fedsparsify_body,
+        uplink_record=_baseline_bits("fedsparsify",
+                                     topk_frac="sparsify_frac"),
+        validate=_frac_validate("sparsify_frac")))
+    for comp in COMPRESSOR_REGISTRY:
+        if comp == "none":
+            continue
+        register_algorithm(Algorithm(
+            name=comp, make_round_body=_fedavg_family_body(comp),
+            uplink_record=_compressor_bits(comp),
+            validate=(_frac_validate("topk_frac") if comp == "topk"
+                      else _qsgd_validate if comp == "qsgd"
+                      else _no_validate)))
+
+
+_register_builtins()

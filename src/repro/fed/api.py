@@ -1,0 +1,540 @@
+"""Declarative Experiment API — specs in, typed results out.
+
+The user-facing surface of the federated engine stack:
+
+  :class:`ExperimentSpec`   what to run — algorithm (registry name or
+                            :class:`~repro.fed.algorithms.Algorithm`
+                            plugin), :class:`FLConfig`, a device-resident
+                            :class:`~repro.data.FederatedDataset`, and
+                            model refs (``loss_fn`` + optional
+                            ``eval_apply`` from which the on-device eval
+                            program is auto-wired over the test split).
+  :class:`Experiment`       the facade: ``run()`` executes the spec on
+                            any engine (scan by default — one jitted
+                            program per chunk) and returns a frozen
+                            :class:`RunResult`; ``sweep()`` runs a
+                            multi-seed axis as ONE vmapped program
+                            (S seeds resident per dispatch, one compile)
+                            with a host-loop fallback, optionally crossed
+                            with a config ``grid``, returning a
+                            :class:`SweepResult`.
+  :class:`RunResult`        typed per-run trajectories (acc / loss /
+                            uplink bits / schedule / wall time) with an
+                            engine-independent ``to_history()`` dict whose
+                            key schema (:data:`HISTORY_KEYS`) is identical
+                            across scan / batched / looped.
+
+Example::
+
+    spec = ExperimentSpec(loss_fn=cnn_loss, params=params, data=ds,
+                          config=FLConfig(algorithm="fedmrn", rounds=30),
+                          eval_apply=cnn_apply, eval_every=5)
+    exp = Experiment(spec)
+    result = exp.run()                        # RunResult, scan engine
+    sweep = exp.sweep(seeds=8)                # one vmapped program
+    mean, std = sweep.point.mean_std()
+
+Compiled scan/sweep programs are cached on the :class:`Experiment`
+(keyed by config with the seed normalised out — the seed is a *traced*
+argument), so repeated scan ``run()``/``sweep()`` calls and host-loop
+sweep fallbacks never pay a second compile.  The batched/looped
+reference engines rebuild their per-round programs each ``run()`` call
+(they exist for parity and benchmarks, not repeated driving).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple, Union)
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import tree_num_params
+from ..core.evaluation import make_eval_program
+from ..data.federated import FederatedDataset
+from .algorithms import (ALGORITHMS, Algorithm, FLConfig, get_algorithm,
+                         register_algorithm, uplink_bits)
+from .engine import (eval_round_indices, make_client_schedule,
+                     make_seeded_experiment_program, make_sweep_program)
+
+Pytree = Any
+
+ENGINES = ("scan", "batched", "looped")
+
+# The engine-independent history schema: every engine's to_history() dict
+# has EXACTLY these keys (golden-tested in tests/test_experiment_api.py).
+HISTORY_KEYS = frozenset({
+    "algorithm", "engine", "acc", "round", "local_loss",
+    "uplink_bits_per_client", "uplink_bits_round", "params", "schedule",
+    "num_dispatches", "wall_s", "final_acc",
+})
+
+
+# ---------------------------------------------------------------------------
+# typed results
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RunResult:
+    """One experiment's trajectories — frozen, engine-independent.
+
+    ``num_dispatches`` counts the jitted round/chunk programs the driver
+    dispatched: ⌈R/chunk⌉ for scan, R for batched, R·K for looped.
+    """
+
+    algorithm: str
+    engine: str
+    config: FLConfig
+    seed: int
+    eval_rounds: Tuple[int, ...]
+    acc: Tuple[float, ...]                 # one entry per eval round
+    local_loss: Tuple[float, ...]          # one entry per round
+    uplink_bits_round: Tuple[float, ...]   # K-client total bits per round
+    uplink_bits_per_client: int
+    num_params: int
+    schedule: np.ndarray                   # (R, K) int32 client selection
+    num_dispatches: int
+    wall_s: float
+
+    @property
+    def final_acc(self) -> float:
+        return self.acc[-1]
+
+    @property
+    def total_uplink_bits(self) -> float:
+        return float(sum(self.uplink_bits_round))
+
+    def to_history(self) -> Dict[str, Any]:
+        """The legacy ``run_federated`` history dict (unified schema)."""
+        return {
+            "algorithm": self.algorithm,
+            "engine": self.engine,
+            "acc": list(self.acc),
+            "round": list(self.eval_rounds),
+            "local_loss": list(self.local_loss),
+            "uplink_bits_per_client": self.uplink_bits_per_client,
+            "uplink_bits_round": list(self.uplink_bits_round),
+            "params": self.num_params,
+            "schedule": self.schedule,
+            "num_dispatches": self.num_dispatches,
+            "wall_s": self.wall_s,
+            "final_acc": self.final_acc,
+        }
+
+    @classmethod
+    def from_history(cls, cfg: FLConfig, engine: str,
+                     hist: Mapping[str, Any]) -> "RunResult":
+        return cls(
+            algorithm=hist["algorithm"], engine=engine, config=cfg,
+            seed=cfg.seed,
+            eval_rounds=tuple(int(r) for r in hist["round"]),
+            acc=tuple(float(a) for a in hist["acc"]),
+            local_loss=tuple(float(x) for x in hist["local_loss"]),
+            uplink_bits_round=tuple(float(b)
+                                    for b in hist["uplink_bits_round"]),
+            uplink_bits_per_client=int(hist["uplink_bits_per_client"]),
+            num_params=int(hist["params"]),
+            schedule=np.asarray(hist["schedule"]),
+            num_dispatches=int(hist["num_dispatches"]),
+            wall_s=float(hist["wall_s"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """All seeds of one grid point: per-seed runs + aggregate views."""
+
+    overrides: Tuple[Tuple[str, Any], ...]   # config fields this point sets
+    seeds: Tuple[int, ...]
+    runs: Tuple[RunResult, ...]              # one per seed, same order
+
+    @property
+    def eval_rounds(self) -> Tuple[int, ...]:
+        return self.runs[0].eval_rounds
+
+    @property
+    def acc(self) -> np.ndarray:             # (S, n_eval)
+        return np.stack([np.asarray(r.acc) for r in self.runs])
+
+    @property
+    def local_loss(self) -> np.ndarray:      # (S, R)
+        return np.stack([np.asarray(r.local_loss) for r in self.runs])
+
+    @property
+    def final_acc(self) -> np.ndarray:       # (S,)
+        return np.asarray([r.final_acc for r in self.runs])
+
+    def mean_std(self) -> Tuple[float, float]:
+        fa = self.final_acc
+        return float(fa.mean()), float(fa.std())
+
+    def summary_row(self) -> Dict[str, Any]:
+        mean, std = self.mean_std()
+        return {**dict(self.overrides), "seeds": len(self.seeds),
+                "final_acc_mean": round(mean, 4),
+                "final_acc_std": round(std, 4)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """A (grid ×) multi-seed sweep: per-seed trajectories + mean±std."""
+
+    points: Tuple[SweepPoint, ...]
+    seeds: Tuple[int, ...]
+    vmapped: bool          # True: seeds ran as ONE vmapped program/point
+    wall_s: float
+
+    def summary(self) -> List[Dict[str, Any]]:
+        return [p.summary_row() for p in self.points]
+
+    # ---- single-point conveniences (the seeds-only sweep) -------------
+
+    @property
+    def point(self) -> SweepPoint:
+        if len(self.points) != 1:
+            raise ValueError(
+                f"sweep has {len(self.points)} grid points; index "
+                ".points explicitly")
+        return self.points[0]
+
+    @property
+    def runs(self) -> Tuple[RunResult, ...]:
+        return self.point.runs
+
+    @property
+    def acc(self) -> np.ndarray:
+        return self.point.acc
+
+    @property
+    def final_acc(self) -> np.ndarray:
+        return self.point.final_acc
+
+
+# ---------------------------------------------------------------------------
+# the declarative spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    """Everything an experiment needs, declared up front.
+
+    ``algorithm`` defaults to ``config.algorithm``; pass a registry name
+    to override it, or an :class:`Algorithm` instance to run a plugin
+    (auto-registered if its name is free).  Eval wiring, in precedence
+    order: an explicit pure ``eval_program`` (params -> scalar metric);
+    else ``eval_apply`` (params, x) -> logits, auto-wired into a batched
+    on-device eval program over the dataset's test split; else — for the
+    host-loop engines only — a Python ``eval_fn``.
+    """
+
+    loss_fn: Callable[[Pytree, Any], jax.Array]
+    params: Pytree
+    data: FederatedDataset
+    config: FLConfig
+    algorithm: Optional[Union[str, Algorithm]] = None
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None
+    eval_apply: Optional[Callable[[Pytree, jax.Array], jax.Array]] = None
+    eval_fn: Optional[Callable[[Pytree], float]] = None
+    eval_batch_size: int = 256
+    eval_every: int = 1
+    client_weights: Optional[Tuple[float, ...]] = None
+
+    def __post_init__(self):
+        if self.client_weights is not None:
+            object.__setattr__(self, "client_weights",
+                               tuple(float(w) for w in self.client_weights))
+
+    def resolved_config(self) -> FLConfig:
+        """The config with any spec-level algorithm override applied."""
+        cfg = self.config
+        if self.algorithm is None:
+            return cfg
+        name = (self.algorithm.name if isinstance(self.algorithm, Algorithm)
+                else self.algorithm)
+        return dataclasses.replace(cfg, algorithm=name)
+
+
+# ---------------------------------------------------------------------------
+# the facade
+# ---------------------------------------------------------------------------
+
+class Experiment:
+    """Run / sweep an :class:`ExperimentSpec` on any engine."""
+
+    def __init__(self, spec: ExperimentSpec):
+        if not isinstance(spec.data, FederatedDataset):
+            raise ValueError(
+                "ExperimentSpec.data must be a device-resident "
+                "FederatedDataset (see repro.data.make_federated_dataset); "
+                "legacy host batch callbacks only work through the "
+                "deprecated run_federated shim")
+        self.spec = spec
+        self.cfg = spec.resolved_config()
+        if isinstance(spec.algorithm, Algorithm):
+            existing = ALGORITHMS.get(spec.algorithm.name)
+            if existing is None:
+                register_algorithm(spec.algorithm)
+            elif existing is not spec.algorithm:
+                raise ValueError(
+                    f"algorithm name {spec.algorithm.name!r} is already "
+                    "registered by a different plugin")
+        self.algorithm = get_algorithm(self.cfg.algorithm)
+        self.cfg.validate()
+        self.algorithm.validate(self.cfg)
+        if spec.data.num_clients != self.cfg.num_clients:
+            raise ValueError(
+                f"dataset has {spec.data.num_clients} clients, cfg expects "
+                f"{self.cfg.num_clients}")
+        if (spec.client_weights is not None
+                and len(spec.client_weights) != self.cfg.num_clients):
+            raise ValueError(
+                f"client_weights has {len(spec.client_weights)} entries, "
+                f"cfg expects {self.cfg.num_clients}")
+        self._programs: Dict[Any, Tuple[Callable, Pytree, Pytree]] = {}
+        self._eval_prog: Optional[Callable] = None
+
+    # ---- eval wiring --------------------------------------------------
+
+    def eval_program(self) -> Optional[Callable[[Pytree], jax.Array]]:
+        """The pure on-device eval program (auto-wired from the dataset).
+
+        Built once and cached — auto-wiring wrap-pads a device copy of
+        the whole test split, which should not be paid per run/grid point.
+        """
+        spec = self.spec
+        if spec.eval_program is not None:
+            return spec.eval_program
+        if spec.eval_apply is not None:
+            if self._eval_prog is None:
+                if spec.data.x_test is None:
+                    raise ValueError(
+                        "eval_apply given but the dataset has no test "
+                        "split; pass x_test/y_test to "
+                        "make_federated_dataset or an explicit "
+                        "eval_program")
+                self._eval_prog = make_eval_program(
+                    spec.eval_apply, spec.data.x_test, spec.data.y_test,
+                    batch_size=spec.eval_batch_size)
+            return self._eval_prog
+        return None
+
+    def _host_eval_fn(self) -> Callable[[Pytree], float]:
+        if self.spec.eval_fn is not None:
+            return self.spec.eval_fn
+        prog = self.eval_program()
+        if prog is None:
+            raise ValueError("need eval_fn or eval_program")
+        jitted = jax.jit(prog)
+        return lambda p: float(jitted(p))
+
+    # ---- program cache ------------------------------------------------
+
+    def _program(self, kind: str, cfg: FLConfig):
+        """Build-or-fetch the (seed-polymorphic) chunk/sweep program.
+
+        The cache key normalises the seed out: seeds are traced arguments,
+        so one compiled program serves every seed of a sweep AND every
+        ``run(seed=...)`` override.
+        """
+        key = (kind, dataclasses.replace(cfg, seed=0),
+               self.spec.eval_every, self.spec.client_weights)
+        if key not in self._programs:
+            maker = (make_sweep_program if kind == "sweep"
+                     else make_seeded_experiment_program)
+            prog = self.eval_program()
+            if prog is None:
+                raise ValueError(
+                    "engine='scan' folds eval into the program and needs a "
+                    "pure eval_program (params -> metric); pass "
+                    "eval_program or eval_apply to ExperimentSpec (build "
+                    "one with repro.core.make_eval_program)")
+            self._programs[key] = maker(
+                self.spec.loss_fn, cfg, self.spec.params, self.spec.data,
+                eval_program=prog, eval_every=self.spec.eval_every,
+                client_weights=self.spec.client_weights)
+        return self._programs[key]
+
+    # ---- run ----------------------------------------------------------
+
+    def run(self, *, engine: str = "scan", seed: Optional[int] = None,
+            chunk: Optional[int] = None) -> RunResult:
+        """Execute the spec once; returns a frozen :class:`RunResult`.
+
+        ``engine="scan"`` (default) fuses the whole experiment into
+        ⌈R/chunk⌉ jitted dispatches; ``"batched"`` dispatches one program
+        per round; ``"looped"`` is the per-client reference loop.
+        ``seed`` overrides ``config.seed`` without rebuilding programs.
+        """
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
+        cfg = self.cfg if seed is None else dataclasses.replace(
+            self.cfg, seed=int(seed))
+        if engine == "scan":
+            return self._run_scan(cfg, chunk)
+        return self._run_host_loop(cfg, engine)
+
+    def _run_scan(self, cfg: FLConfig, chunk: Optional[int]) -> RunResult:
+        run_chunk, state0, metrics0 = self._program("seeded", cfg)
+        chunk = cfg.rounds if chunk is None else max(1, int(chunk))
+        chunk = min(chunk, cfg.rounds)
+        schedule = make_client_schedule(cfg)
+        sched_dev = jnp.asarray(schedule, jnp.int32)
+        seed_dev = jnp.int32(cfg.seed)
+        w, state, metrics = self.spec.params, state0, metrics0
+        t0 = time.time()
+        dispatches = 0
+        for r0 in range(0, cfg.rounds, chunk):
+            n = min(chunk, cfg.rounds - r0)
+            w, state, metrics = run_chunk(
+                seed_dev, w, state, metrics, jnp.int32(r0),
+                sched_dev[r0:r0 + n], n_rounds=n)
+            dispatches += 1
+        # the ONLY device→host reads of the whole experiment
+        result = self._result_from_metrics(
+            cfg, "scan", metrics, schedule, dispatches, time.time() - t0)
+        return result
+
+    def _result_from_metrics(self, cfg, engine, metrics, schedule,
+                             dispatches, wall_s) -> RunResult:
+        loss = np.asarray(metrics["loss"])
+        acc = np.asarray(metrics["acc"])
+        bits = np.asarray(metrics["uplink_bits"])
+        rounds = eval_round_indices(cfg, self.spec.eval_every)
+        return RunResult(
+            algorithm=cfg.algorithm, engine=engine, config=cfg,
+            seed=cfg.seed, eval_rounds=tuple(rounds),
+            acc=tuple(float(acc[r]) for r in rounds),
+            local_loss=tuple(float(x) for x in loss),
+            uplink_bits_round=tuple(float(b) for b in bits),
+            uplink_bits_per_client=uplink_bits(cfg, self.spec.params),
+            num_params=tree_num_params(self.spec.params),
+            schedule=schedule, num_dispatches=dispatches, wall_s=wall_s)
+
+    def _run_host_loop(self, cfg: FLConfig, engine: str) -> RunResult:
+        from .simulation import _run_batched          # no import cycle:
+        from .looped import run_federated_looped      # lazy, one-way
+        schedule = make_client_schedule(cfg)
+        batch_fn = self.spec.data.batch_fn(steps=cfg.local_steps,
+                                           batch=cfg.batch_size)
+        eval_fn = self._host_eval_fn()
+        cw = (list(self.spec.client_weights)
+              if self.spec.client_weights is not None else None)
+        runner = (run_federated_looped if engine == "looped"
+                  else _run_batched)
+        hist = runner(self.spec.loss_fn, self.spec.params, batch_fn,
+                      eval_fn, cfg, schedule=schedule,
+                      eval_every=self.spec.eval_every, client_weights=cw)
+        return RunResult.from_history(cfg, engine, hist)
+
+    # ---- sweep --------------------------------------------------------
+
+    def sweep(self, seeds: Union[int, Sequence[int]] = 4, *,
+              grid: Optional[Mapping[str, Sequence[Any]]] = None,
+              vmapped: bool = True,
+              chunk: Optional[int] = None) -> SweepResult:
+        """Run a multi-seed (× config-grid) sweep.
+
+        ``seeds`` is either a count (seeds ``cfg.seed .. cfg.seed+S-1``)
+        or an explicit sequence.  With ``vmapped=True`` (default) the S
+        seeds of each grid point run as ONE vmapped scan program — one
+        compile, S experiments resident per dispatch; ``vmapped=False``
+        host-loops a single seed-polymorphic compiled program (the
+        fallback, and the baseline the sweep benchmark compares against).
+        ``grid`` maps FLConfig field names to value lists; the grid cross
+        product is host-looped (axes like batch size change shapes, and
+        closure constants like lr live outside the traced argument set),
+        with seeds vmapped *within* each point.
+        """
+        if isinstance(seeds, (int, np.integer)):
+            if seeds <= 0:
+                raise ValueError(f"need at least one seed, got {seeds}")
+            seed_list = tuple(self.cfg.seed + i for i in range(int(seeds)))
+        else:
+            seed_list = tuple(int(s) for s in seeds)
+            if not seed_list:
+                raise ValueError("need at least one seed")
+        grid = dict(grid or {})
+        for field in grid:
+            if field not in {f.name for f in dataclasses.fields(FLConfig)}:
+                raise ValueError(f"unknown FLConfig field {field!r} in grid")
+        if "seed" in grid:
+            raise ValueError(
+                "the seed axis is not a grid field — pass seeds=[...] "
+                "(a 'seed' grid would be silently shadowed by it)")
+        points = [dict(zip(grid, vals))
+                  for vals in itertools.product(*grid.values())] or [{}]
+
+        t0 = time.time()
+        out = []
+        for overrides in points:
+            cfg = dataclasses.replace(self.cfg, **overrides)
+            cfg.validate()
+            get_algorithm(cfg.algorithm).validate(cfg)
+            if cfg.num_clients != self.spec.data.num_clients:
+                # must fail here: in-program client_idx[cid] gathers would
+                # silently CLAMP out-of-range client ids, not raise
+                raise ValueError(
+                    f"grid point {overrides} sets num_clients="
+                    f"{cfg.num_clients} but the dataset has "
+                    f"{self.spec.data.num_clients} clients")
+            runs = (self._sweep_point_vmapped(cfg, seed_list, chunk)
+                    if vmapped else
+                    self._sweep_point_host(cfg, seed_list, chunk))
+            out.append(SweepPoint(
+                overrides=tuple(sorted(overrides.items())),
+                seeds=seed_list, runs=tuple(runs)))
+        return SweepResult(points=tuple(out), seeds=seed_list,
+                           vmapped=vmapped, wall_s=time.time() - t0)
+
+    def _sweep_point_vmapped(self, cfg: FLConfig, seeds: Tuple[int, ...],
+                             chunk: Optional[int]) -> List[RunResult]:
+        S = len(seeds)
+        run_sweep, state0, metrics0 = self._program("sweep", cfg)
+        schedules = np.stack(
+            [make_client_schedule(cfg, s) for s in seeds])      # (S, R, K)
+        sched_dev = jnp.asarray(schedules, jnp.int32)
+        seeds_dev = jnp.asarray(seeds, jnp.int32)
+
+        def bcast(t):
+            return jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(
+                    jnp.asarray(x)[None], (S,) + jnp.shape(x)), t)
+
+        w, state, metrics = (bcast(self.spec.params), bcast(state0),
+                             bcast(metrics0))
+        n_chunk = cfg.rounds if chunk is None else max(1, int(chunk))
+        n_chunk = min(n_chunk, cfg.rounds)
+        t0 = time.time()
+        dispatches = 0
+        for r0 in range(0, cfg.rounds, n_chunk):
+            n = min(n_chunk, cfg.rounds - r0)
+            w, state, metrics = run_sweep(
+                seeds_dev, w, state, metrics, jnp.int32(r0),
+                sched_dev[:, r0:r0 + n], n_rounds=n)
+            dispatches += 1
+        wall = time.time() - t0
+        loss = np.asarray(metrics["loss"])                      # (S, R)
+        acc = np.asarray(metrics["acc"])
+        bits = np.asarray(metrics["uplink_bits"])
+        rounds = eval_round_indices(cfg, self.spec.eval_every)
+        bpc = uplink_bits(cfg, self.spec.params)
+        n_params = tree_num_params(self.spec.params)
+        return [RunResult(
+            algorithm=cfg.algorithm, engine="scan",
+            config=dataclasses.replace(cfg, seed=s), seed=s,
+            eval_rounds=tuple(rounds),
+            acc=tuple(float(acc[i, r]) for r in rounds),
+            local_loss=tuple(float(x) for x in loss[i]),
+            uplink_bits_round=tuple(float(b) for b in bits[i]),
+            uplink_bits_per_client=bpc, num_params=n_params,
+            schedule=schedules[i], num_dispatches=dispatches,
+            wall_s=wall / S) for i, s in enumerate(seeds)]
+
+    def _sweep_point_host(self, cfg: FLConfig, seeds: Tuple[int, ...],
+                          chunk: Optional[int]) -> List[RunResult]:
+        """Fallback: S sequential dispatches of ONE seeded program."""
+        return [self._run_scan(dataclasses.replace(cfg, seed=s), chunk)
+                for s in seeds]

@@ -1,21 +1,18 @@
-"""Round + experiment programs — rounds as pure bodies, experiments as scans.
+"""Execution drivers — rounds as pure bodies, experiments as scans.
 
-Each algorithm *family* exposes ONE pure round body
+Algorithm families live in the plugin registry (``fed/algorithms.py``):
+each one exposes a PURE seeded round body
 
-  round_body(w, state, batches, picked, round_idx, weights)
+  body(seed, w, state, batches, picked, round_idx, weights)
       -> (new_w, new_state, losses)            # losses: (K, S) device array
 
 in which the K selected clients run as a ``vmap`` over a stacked client
-axis — local PSM training, final mask sampling, bit-packing (the
-Pallas-backed uplink hot path), and server aggregation fused end-to-end.
-Families:
+axis — local PSM training, mask sampling, bit-packing (the Pallas-backed
+uplink hot path), and server aggregation fused end-to-end.  ``seed`` is a
+traced int32 scalar, which is what lets :func:`make_sweep_program` vmap a
+whole experiment over a seed axis with ONE compile.
 
-  fedmrn / fedmrns   PSM local training → masks → packed uplink → Eq.(5)
-  fedavg + post-training compressors (signsgd … post_sm)
-  fedpm              supermask-as-weights baseline
-  fedsparsify        magnitude-pruned weight upload baseline
-
-The SAME body is reused by three drivers:
+This module composes those bodies into the execution drivers:
 
   1. ``make_round_engine``       → ``jit(round_body)``: one XLA program
      per round, fed host-stacked batches (the PR-1 batched engine);
@@ -25,20 +22,22 @@ The SAME body is reused by three drivers:
      on-device eval every ``eval_every`` rounds, and per-round metric
      buffers all live inside the program — zero host transfers inside a
      chunk;
-  3. ``fed/looped.py``           → the seed's per-client reference loop
+  3. ``make_sweep_program``      → ``vmap`` of the same chunk program over
+     a ``(S,)`` seed axis: S seeds resident per dispatch, one compile
+     (the multi-seed sweep engine behind ``Experiment.sweep``);
+  4. ``fed/looped.py``           → the seed's per-client reference loop
      (parity + benchmark baseline).
 
 Client selection is NOT sampled inside the program: every driver consumes
 the same seed-stable ``(R, K)`` schedule from :func:`make_client_schedule`
 (the scan program indexes a device copy of it), so looped / batched /
-scan trajectories are exactly comparable at fixed seed.
+scan / sweep trajectories are exactly comparable at fixed seed.
 
 ``state`` carries cross-round algorithm state (error-feedback residuals
 stacked over ALL clients, fedpm global scores); ``{}`` when stateless.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -46,78 +45,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import (FedMRNConfig, NoiseConfig, baseline_record,
-                    client_round_key, fedmrn_record, final_mask_key,
-                    gen_noise, make_compressor, mix_add, psm_local_train,
-                    sample_final_mask, sgd_local_update, tree_masked_noise,
-                    tree_num_params, tree_pack_stacked, tree_unpack_stacked)
-from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
+from .algorithms import (  # noqa: F401  (re-exported: legacy import site)
+    ALGORITHMS, Algorithm, FLConfig, fedpm_local, fedsparsify_local,
+    get_algorithm, list_algorithms, register_algorithm, uplink_bits,
+)
 
 Pytree = Any
-
-ALGORITHMS = (("fedavg", "fedmrn", "fedmrns", "fedpm", "fedsparsify")
-              + tuple(c for c in COMPRESSOR_REGISTRY if c != "none"))
-
-
-@dataclasses.dataclass(frozen=True)
-class FLConfig:
-    algorithm: str = "fedmrn"
-    num_clients: int = 20
-    clients_per_round: int = 5
-    rounds: int = 30
-    local_steps: int = 20
-    batch_size: int = 32
-    lr: float = 0.1
-    seed: int = 0
-    # fedmrn specifics (paper defaults: uniform, 1e-2 / 5e-3)
-    noise_dist: str = "uniform"
-    noise_alpha: float = 1e-2
-    use_sm: bool = True
-    use_pm: bool = True
-    error_feedback: bool = False
-    # beyond-paper: one shared noise G(s_t) per ROUND (instead of per
-    # client).  Masks stay per-client, so the uplink is unchanged (1 bpp),
-    # but Σ_k G(s_k)⊙m_k = G(s_t) ⊙ Σ_k m_k — the server aggregation
-    # becomes an integer mask-count (popcount) scaled by one noise tensor,
-    # and at pod scale the mask all-gather can become a ⌈log2(K+1)⌉-bit
-    # integer all-reduce (a further ~3× cross-client traffic cut at K=16).
-    shared_noise: bool = False
-    # baselines
-    topk_frac: float = 0.03
-    sparsify_frac: float = 0.03    # fedsparsify keeps top 3% of weights
-    qsgd_bits: int = 2
-    # kernel backend for masking/packing: "ref" | "pallas" | None (auto)
-    backend: Optional[str] = None
-
-    def fedmrn_config(self) -> FedMRNConfig:
-        mode = "signed" if self.algorithm == "fedmrns" else "binary"
-        return FedMRNConfig(
-            mask_mode=mode,
-            noise=NoiseConfig(dist=self.noise_dist, alpha=self.noise_alpha),
-            use_sm=self.use_sm, use_pm=self.use_pm,
-            error_feedback=self.error_feedback, lr=self.lr,
-            backend=self.backend)
-
-
-def uplink_bits(cfg: FLConfig, params: Pytree) -> int:
-    """Exact per-client uplink cost of one round (for history accounting)."""
-    P = tree_num_params(params)
-    L = len(jax.tree_util.tree_leaves(params))
-    if cfg.algorithm in ("fedmrn", "fedmrns"):
-        return fedmrn_record(P).uplink_bits
-    if cfg.algorithm == "fedavg":
-        return 32 * P
-    if cfg.algorithm == "fedpm":
-        return baseline_record("fedpm", P, L).uplink_bits
-    if cfg.algorithm == "fedsparsify":
-        return baseline_record("fedsparsify", P, L,
-                               topk_frac=cfg.sparsify_frac).uplink_bits
-    return baseline_record(cfg.algorithm, P, L, topk_frac=cfg.topk_frac,
-                           qsgd_bits=cfg.qsgd_bits).uplink_bits
-
-
-def _tree_zeros_like(t: Pytree) -> Pytree:
-    return jax.tree_util.tree_map(jnp.zeros_like, t)
 
 
 def stack_client_batches(batches: list) -> Pytree:
@@ -129,225 +62,6 @@ def stack_client_batches(batches: list) -> Pytree:
         lambda *xs: jnp.stack([jnp.asarray(x) for x in xs]), *batches)
 
 
-def _weighted_sum(weights: jax.Array, stacked: Pytree) -> Pytree:
-    """Σ_k w_k · leaf[k] over the leading client axis of every leaf."""
-    return jax.tree_util.tree_map(
-        lambda x: jnp.tensordot(weights, x.astype(jnp.float32), axes=1),
-        stacked)
-
-
-# ---------------------------------------------------------------------------
-# per-client local updates for the baselines (shared with the looped engine)
-# ---------------------------------------------------------------------------
-
-def fedpm_local(loss_fn, w_init, scores, batches, *, lr, key):
-    """Train sigmoid-scores; weights = w_init ⊙ Bern(sigmoid(s)) with STE."""
-
-    def masked_params(s, k):
-        leaves, treedef = jax.tree_util.tree_flatten(s)
-        w_leaves = jax.tree_util.tree_leaves(w_init)
-        out = []
-        for i, (sl, wl) in enumerate(zip(leaves, w_leaves)):
-            prob = jax.nn.sigmoid(sl)
-            m = jax.random.bernoulli(jax.random.fold_in(k, i), prob)
-            m = prob + jax.lax.stop_gradient(m.astype(prob.dtype) - prob)
-            out.append(wl * m)
-        return jax.tree_util.tree_unflatten(treedef, out)
-
-    def step(s, inp):
-        tau, batch = inp
-        k = jax.random.fold_in(key, tau)
-
-        def fwd(s_):
-            return loss_fn(masked_params(s_, k), batch)
-
-        loss, g = jax.value_and_grad(fwd)(s)
-        s = jax.tree_util.tree_map(lambda a, gi: a - lr * gi, s, g)
-        return s, loss
-
-    n = jax.tree_util.tree_leaves(batches)[0].shape[0]
-    s_final, losses = jax.lax.scan(step, scores,
-                                   (jnp.arange(n), batches))
-    # uplink: Bernoulli-sampled masks, one independent draw per leaf
-    # (folding the leaf index keeps same-shaped leaves decorrelated)
-    leaves, treedef = jax.tree_util.tree_flatten(s_final)
-    mask_key = jax.random.fold_in(key, n + 1)
-    masks = jax.tree_util.tree_unflatten(treedef, [
-        jax.random.bernoulli(jax.random.fold_in(mask_key, i),
-                             jax.nn.sigmoid(sl)).astype(jnp.float32)
-        for i, sl in enumerate(leaves)])
-    return masks, losses
-
-
-def fedsparsify_local(loss_fn, w, batches, *, lr, frac):
-    w_new, losses = sgd_local_update(loss_fn, w, batches, lr=lr)
-    w_new = jax.tree_util.tree_map(jnp.add, w, w_new)  # u → w_local
-
-    def prune(x):
-        flat = jnp.abs(x).reshape(-1)
-        k = max(1, int(np.ceil(frac * flat.shape[0])))
-        thresh = jax.lax.top_k(flat, k)[0][-1]
-        return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
-
-    return jax.tree_util.tree_map(prune, w_new), losses
-
-
-# ---------------------------------------------------------------------------
-# round programs, one per algorithm family
-# ---------------------------------------------------------------------------
-
-def _make_fedmrn_round(loss_fn, cfg: FLConfig, params: Pytree):
-    mrn = cfg.fedmrn_config()
-    ef = cfg.error_feedback
-
-    def round_fn(w, state, batches, picked, round_idx, weights):
-        train_base = jax.random.key(cfg.seed + 1)
-
-        def per_client(b, cid, r0):
-            noise_id = jnp.int32(0) if cfg.shared_noise else cid
-            seed_key = client_round_key(cfg.seed, round_idx, noise_id)
-            noise = gen_noise(seed_key, w, mrn.noise)
-            train_key = jax.random.fold_in(train_base,
-                                           round_idx * 1000 + cid)
-            u, losses = psm_local_train(loss_fn, w, b, noise, train_key,
-                                        cfg=mrn, u0=r0 if ef else None)
-            # step count from the batches, NOT cfg.local_steps — the mask
-            # key must track the real S or parity with the looped
-            # reference breaks when a caller varies steps per round
-            num_steps = jax.tree_util.tree_leaves(b)[0].shape[0]
-            m = sample_final_mask(
-                u, noise, final_mask_key(train_key, num_steps), cfg=mrn)
-            residual = (jax.tree_util.tree_map(
-                jnp.subtract, u, tree_masked_noise(noise, m))
-                if ef else None)
-            return m, losses, residual
-
-        r0 = (jax.tree_util.tree_map(lambda r: r[picked],
-                                     state["residuals"])
-              if ef else jnp.zeros((picked.shape[0],)))
-        masks, losses, residuals = jax.vmap(per_client)(batches, picked, r0)
-
-        # ---- uplink: the wire payload, packed in one kernel launch ------
-        payload = tree_pack_stacked(masks, mode=mrn.mask_mode,
-                                    backend=cfg.backend)
-
-        # ---- server: unpack, regen noise from seeds, Eq. (5) ------------
-        m_rec = tree_unpack_stacked(payload, w, mode=mrn.mask_mode,
-                                    backend=cfg.backend)
-        wn = weights / jnp.sum(weights)
-        if cfg.shared_noise:
-            # Σ_k p'_k G(s_t)⊙m_k = G(s_t) ⊙ Σ_k p'_k m_k: one noise
-            # tensor scales an (integer-valued) mask average
-            noise = gen_noise(client_round_key(cfg.seed, round_idx, 0),
-                              w, mrn.noise)
-            m_avg = _weighted_sum(wn, m_rec)
-            agg = jax.tree_util.tree_map(
-                lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
-        else:
-            def decode(cid, m_c):
-                noise = gen_noise(client_round_key(cfg.seed, round_idx, cid),
-                                  w, mrn.noise)
-                return jax.tree_util.tree_map(
-                    lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_c)
-
-            u_hats = jax.vmap(decode)(picked, m_rec)
-            agg = _weighted_sum(wn, u_hats)
-        new_w = jax.tree_util.tree_map(mix_add, w, agg)
-
-        new_state = state
-        if ef:
-            new_state = {"residuals": jax.tree_util.tree_map(
-                lambda r, nr: r.at[picked].set(nr),
-                state["residuals"], residuals)}
-        return new_w, new_state, losses
-
-    state0 = {}
-    if ef:
-        # Device-resident residual stack: num_clients × model size.  Keeps
-        # the gather/scatter inside the round program (no host sync), at
-        # the cost of a dense buffer — fine for simulation-scale client
-        # counts; a cross-silo run with thousands of clients should shard
-        # this stack or carry residuals host-side instead.
-        state0 = {"residuals": jax.tree_util.tree_map(
-            lambda p: jnp.zeros((cfg.num_clients,) + p.shape, p.dtype),
-            params)}
-    return round_fn, state0
-
-
-def _make_fedavg_round(loss_fn, cfg: FLConfig, params: Pytree):
-    mrn = cfg.fedmrn_config()
-    compressor = (None if cfg.algorithm == "fedavg" else
-                  make_compressor(cfg.algorithm, topk_frac=cfg.topk_frac,
-                                  qsgd_bits=cfg.qsgd_bits, noise=mrn.noise))
-
-    def round_fn(w, state, batches, picked, round_idx, weights):
-        comp_base = jax.random.key(cfg.seed + 3)
-
-        def per_client(b, cid):
-            u, losses = sgd_local_update(loss_fn, w, b, lr=cfg.lr)
-            if compressor is not None:
-                u = compressor.roundtrip(
-                    u, jax.random.fold_in(comp_base, round_idx * 1000 + cid))
-            return u, losses
-
-        updates, losses = jax.vmap(per_client)(batches, picked)
-        wn = weights / jnp.sum(weights)
-        agg = _weighted_sum(wn, updates)
-        new_w = jax.tree_util.tree_map(mix_add, w, agg)
-        return new_w, state, losses
-
-    return round_fn, {}
-
-
-def _make_fedpm_round(loss_fn, cfg: FLConfig, params: Pytree):
-    noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
-    w_frozen = gen_noise(jax.random.key(cfg.seed), params, noise_cfg)
-
-    def round_fn(w, state, batches, picked, round_idx, weights):
-        key_base = jax.random.key(cfg.seed + 2)
-        scores = state["scores"]
-
-        def per_client(b, cid):
-            return fedpm_local(
-                loss_fn, w_frozen, scores, b, lr=cfg.lr,
-                key=jax.random.fold_in(key_base, round_idx * 1000 + cid))
-
-        masks, losses = jax.vmap(per_client)(batches, picked)
-        K = picked.shape[0]
-        # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
-        # accumulated in f32 regardless of param dtype.  The raw K-client
-        # mean hits exactly 0/1 whenever all clients agree, and logit of
-        # the clipped value (±9.2) saturates next round's sigmoid scores —
-        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(K+1).
-        probs = jax.tree_util.tree_map(
-            lambda m: (jnp.sum(m.astype(jnp.float32), axis=0) + 1.0)
-            / (K + 2.0), masks)
-        new_scores = jax.tree_util.tree_map(
-            lambda p_: jnp.log(p_ / (1 - p_)), probs)      # sigmoid^-1
-        new_w = jax.tree_util.tree_map(
-            lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
-        return new_w, {"scores": new_scores}, losses
-
-    state0 = {"scores": _tree_zeros_like(params)}
-    return round_fn, state0
-
-
-def _make_fedsparsify_round(loss_fn, cfg: FLConfig, params: Pytree):
-    def round_fn(w, state, batches, picked, round_idx, weights):
-        def per_client(b, cid):
-            return fedsparsify_local(loss_fn, w, b, lr=cfg.lr,
-                                     frac=cfg.sparsify_frac)
-
-        w_locals, losses = jax.vmap(per_client)(batches, picked)
-        wn = weights / jnp.sum(weights)
-        new_w = _weighted_sum(wn, w_locals)
-        new_w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
-                                       w, new_w)
-        return new_w, state, losses
-
-    return round_fn, {}
-
-
 def make_round_body(
     loss_fn: Callable[[Pytree, Any], jax.Array],
     cfg: FLConfig,
@@ -357,16 +71,13 @@ def make_round_body(
 
     The body is the unit every driver composes: jitted directly by
     :func:`make_round_engine`, scanned by :func:`make_experiment_program`.
+    The registry body's ``seed`` argument is bound to ``cfg.seed`` here —
+    use :func:`make_sweep_program` when seeds must stay a traced axis.
     """
-    if cfg.algorithm in ("fedmrn", "fedmrns"):
-        return _make_fedmrn_round(loss_fn, cfg, params)
-    if cfg.algorithm == "fedpm":
-        return _make_fedpm_round(loss_fn, cfg, params)
-    if cfg.algorithm == "fedsparsify":
-        return _make_fedsparsify_round(loss_fn, cfg, params)
-    if cfg.algorithm == "fedavg" or cfg.algorithm in COMPRESSOR_REGISTRY:
-        return _make_fedavg_round(loss_fn, cfg, params)
-    raise ValueError(f"unknown algorithm {cfg.algorithm!r}")
+    algo = get_algorithm(cfg.algorithm)
+    seeded = algo.make_round_body(loss_fn, cfg, params)
+    round_fn = partial(seeded, jnp.int32(cfg.seed))
+    return round_fn, algo.init_state(cfg, params)
 
 
 def make_round_engine(
@@ -383,19 +94,26 @@ def make_round_engine(
 # experiment-level: client schedule, metric buffers, multi-round scan program
 # ---------------------------------------------------------------------------
 
-def make_client_schedule(cfg: FLConfig) -> np.ndarray:
+def make_client_schedule(cfg: FLConfig,
+                         seed: Optional[int] = None) -> np.ndarray:
     """Seed-stable ``(R, K)`` int32 client-selection schedule.
 
     Reproduces the legacy per-round ``rng.choice`` sequence exactly (same
     RandomState, same call order), but precomputed up front so no engine
     interleaves host RNG with device dispatches.  ALL engines — looped,
     batched, scan — consume this one schedule; the scan program indexes a
-    device copy of it.
+    device copy of it.  ``seed`` overrides ``cfg.seed`` (sweep axes).
     """
-    rng = np.random.RandomState(cfg.seed)
+    rng = np.random.RandomState(cfg.seed if seed is None else seed)
     return np.stack([
         rng.choice(cfg.num_clients, cfg.clients_per_round, replace=False)
         for _ in range(cfg.rounds)]).astype(np.int32)
+
+
+def eval_round_indices(cfg: FLConfig, eval_every: int) -> list:
+    """The rounds the program evaluates: every ``eval_every`` + the last."""
+    return [r for r in range(cfg.rounds)
+            if r % eval_every == 0 or r == cfg.rounds - 1]
 
 
 def init_metric_buffers(cfg: FLConfig) -> Dict[str, jax.Array]:
@@ -411,6 +129,59 @@ def init_metric_buffers(cfg: FLConfig) -> Dict[str, jax.Array]:
         # per-round TOTAL uplink (K clients); f32 holds >2^31 bit counts
         "uplink_bits": jnp.zeros((R,), jnp.float32),
     }
+
+
+def _make_chunk_body(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+    data,                                   # FederatedDataset
+    *,
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    eval_every: int = 1,
+    client_weights: Optional[Any] = None,
+) -> Tuple[Callable, Dict[str, Pytree], Dict[str, jax.Array]]:
+    """The un-jitted seeded chunk runner shared by every scan driver."""
+    algo = get_algorithm(cfg.algorithm)
+    round_body = algo.make_round_body(loss_fn, cfg, params)
+    state0 = algo.init_state(cfg, params)
+    bits_round = float(cfg.clients_per_round * uplink_bits(cfg, params))
+    cw = None if client_weights is None else list(client_weights)
+    if cw is not None and len(cw) != cfg.num_clients:
+        # must fail here: inside jit, weights_all[picked] would silently
+        # CLAMP out-of-range client ids instead of raising
+        raise ValueError(
+            f"client_weights has {len(cw)} entries, "
+            f"cfg expects {cfg.num_clients}")
+    weights_all = jnp.asarray([1.0] * cfg.num_clients if cw is None else cw,
+                              jnp.float32)
+
+    def body(seed, carry, inp):
+        w, state, metrics = carry
+        r, picked = inp
+        batches = data.gather_batches(r, picked, steps=cfg.local_steps,
+                                      batch=cfg.batch_size)
+        weights = weights_all[picked]
+        w, state, losses = round_body(seed, w, state, batches, picked, r,
+                                      weights)
+        metrics = dict(metrics)
+        metrics["loss"] = metrics["loss"].at[r].set(jnp.mean(losses[:, -1]))
+        metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(bits_round)
+        if eval_program is not None:
+            do_eval = (r % eval_every == 0) | (r == cfg.rounds - 1)
+            acc = jax.lax.cond(do_eval, eval_program,
+                               lambda _w: jnp.float32(jnp.nan), w)
+            metrics["acc"] = metrics["acc"].at[r].set(acc)
+        return (w, state, metrics), None
+
+    def run_chunk(seed, w, state, metrics, r0, schedule_chunk,
+                  n_rounds: int):
+        rs = r0 + jnp.arange(n_rounds, dtype=jnp.int32)
+        (w, state, metrics), _ = jax.lax.scan(
+            partial(body, seed), (w, state, metrics), (rs, schedule_chunk))
+        return w, state, metrics
+
+    return run_chunk, state0, init_metric_buffers(cfg)
 
 
 def make_experiment_program(
@@ -440,34 +211,80 @@ def make_experiment_program(
     inside a chunk; ``n_rounds`` is static, so a trailing partial chunk
     costs exactly one extra compile.
     """
-    round_body, state0 = make_round_body(loss_fn, cfg, params)
-    bits_round = float(cfg.clients_per_round * uplink_bits(cfg, params))
-    weights_all = jnp.asarray(
-        [1.0] * cfg.num_clients if client_weights is None
-        else list(client_weights), jnp.float32)
-
-    def body(carry, inp):
-        w, state, metrics = carry
-        r, picked = inp
-        batches = data.gather_batches(r, picked, steps=cfg.local_steps,
-                                      batch=cfg.batch_size)
-        weights = weights_all[picked]
-        w, state, losses = round_body(w, state, batches, picked, r, weights)
-        metrics = dict(metrics)
-        metrics["loss"] = metrics["loss"].at[r].set(jnp.mean(losses[:, -1]))
-        metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(bits_round)
-        if eval_program is not None:
-            do_eval = (r % eval_every == 0) | (r == cfg.rounds - 1)
-            acc = jax.lax.cond(do_eval, eval_program,
-                               lambda _w: jnp.float32(jnp.nan), w)
-            metrics["acc"] = metrics["acc"].at[r].set(acc)
-        return (w, state, metrics), None
+    chunk, state0, metrics0 = _make_chunk_body(
+        loss_fn, cfg, params, data, eval_program=eval_program,
+        eval_every=eval_every, client_weights=client_weights)
 
     @partial(jax.jit, static_argnames=("n_rounds",))
     def run_chunk(w, state, metrics, r0, schedule_chunk, *, n_rounds: int):
-        rs = r0 + jnp.arange(n_rounds, dtype=jnp.int32)
-        (w, state, metrics), _ = jax.lax.scan(
-            body, (w, state, metrics), (rs, schedule_chunk))
-        return w, state, metrics
+        return chunk(jnp.int32(cfg.seed), w, state, metrics, r0,
+                     schedule_chunk, n_rounds)
 
-    return run_chunk, state0, init_metric_buffers(cfg)
+    return run_chunk, state0, metrics0
+
+
+def make_seeded_experiment_program(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+    data,                                   # FederatedDataset
+    *,
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    eval_every: int = 1,
+    client_weights: Optional[Any] = None,
+) -> Tuple[Callable, Dict[str, Pytree], Dict[str, jax.Array]]:
+    """:func:`make_experiment_program` with ``seed`` as a traced argument.
+
+      run_chunk(seed, w, state, metrics, r0, schedule_chunk, n_rounds=n)
+
+    One compiled program serves EVERY seed (the host-loop sweep fallback
+    dispatches it per seed without recompiling).
+    """
+    chunk, state0, metrics0 = _make_chunk_body(
+        loss_fn, cfg, params, data, eval_program=eval_program,
+        eval_every=eval_every, client_weights=client_weights)
+
+    @partial(jax.jit, static_argnames=("n_rounds",))
+    def run_chunk(seed, w, state, metrics, r0, schedule_chunk,
+                  *, n_rounds: int):
+        return chunk(seed, w, state, metrics, r0, schedule_chunk, n_rounds)
+
+    return run_chunk, state0, metrics0
+
+
+def make_sweep_program(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+    data,                                   # FederatedDataset
+    *,
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    eval_every: int = 1,
+    client_weights: Optional[Any] = None,
+) -> Tuple[Callable, Dict[str, Pytree], Dict[str, jax.Array]]:
+    """Vmap the experiment chunk over a ``(S,)`` seed axis — ONE compile.
+
+    Returns ``(run_sweep, state0, metrics0)`` where ``state0``/``metrics0``
+    are per-seed templates (broadcast them to a leading S axis) and
+
+      run_sweep(seeds, w, state, metrics, r0, schedule_chunks, n_rounds=n)
+          -> (new_w, new_state, new_metrics)     # all with leading S axis
+
+    ``seeds`` is ``(S,)`` int32, ``schedule_chunks`` is ``(S, n, K)`` (each
+    seed keeps its own seed-stable client schedule), and every carry leaf
+    gains a leading S dim.  The dataset and eval program are shared across
+    the seed axis — S experiments resident per dispatch.
+    """
+    chunk, state0, metrics0 = _make_chunk_body(
+        loss_fn, cfg, params, data, eval_program=eval_program,
+        eval_every=eval_every, client_weights=client_weights)
+
+    @partial(jax.jit, static_argnames=("n_rounds",))
+    def run_sweep(seeds, w, state, metrics, r0, schedule_chunks,
+                  *, n_rounds: int):
+        return jax.vmap(
+            lambda s, wi, sti, mi, sch: chunk(s, wi, sti, mi, r0, sch,
+                                              n_rounds)
+        )(seeds, w, state, metrics, schedule_chunks)
+
+    return run_sweep, state0, metrics0

@@ -44,13 +44,22 @@ def run_federated_looped(
     client_weights: Optional[List[float]] = None,
     schedule: Optional[np.ndarray] = None,
 ) -> Dict[str, Any]:
+    from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
+    builtin = ({"fedmrn", "fedmrns", "fedpm", "fedsparsify", "fedavg"}
+               | set(COMPRESSOR_REGISTRY))
+    if cfg.algorithm not in builtin:
+        raise ValueError(
+            f"engine='looped' is the seed-era reference loop and only "
+            f"supports the built-in families; run registered plugin "
+            f"algorithm {cfg.algorithm!r} on engine='scan' or 'batched'")
     # the same precomputed seed-stable (R, K) selection every engine uses
     if schedule is None:
         schedule = make_client_schedule(cfg)
     w = init_params
     mrn_cfg = cfg.fedmrn_config()
     history: Dict[str, Any] = {
-        "algorithm": cfg.algorithm, "acc": [], "round": [],
+        "algorithm": cfg.algorithm, "engine": "looped",
+        "acc": [], "round": [],
         "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
         "params": tree_num_params(w), "schedule": schedule,
     }
@@ -150,6 +159,12 @@ def run_federated_looped(
         if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
+    history["uplink_bits_round"] = (
+        [float(cfg.clients_per_round * history["uplink_bits_per_client"])]
+        * cfg.rounds)
+    # one jitted local-update dispatch per (round, client) — the engine
+    # overhead the batched/scan drivers collapse
+    history["num_dispatches"] = cfg.rounds * cfg.clients_per_round
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     return history

@@ -1,38 +1,31 @@
-"""Federated simulation driver — the paper's experimental harness.
+"""Legacy ``run_federated`` shim + the host-loop engine runners.
 
-Runs R rounds of K-client FL with any of:
-  fedavg            float updates (Eq. 3)
-  fedmrn / fedmrns  masked random noise updates, PSM local training (Alg. 1)
-  <compressor>      FedAvg local training + post-training compression of u
-                    (signsgd, stochsign, terngrad, topk, qsgd, drive, eden,
-                     post_sm — the paper's baseline zoo)
-  fedpm             supermask-as-weights baseline (masks on frozen noise)
-  fedsparsify       magnitude-pruned weight upload baseline
+The user-facing experiment surface is the declarative API in
+``fed/api.py`` (:class:`~repro.fed.ExperimentSpec` +
+:class:`~repro.fed.Experiment` → typed :class:`~repro.fed.RunResult`).
+This module keeps two things:
 
-This module is a THIN host driver over the three execution engines built
-from the same pure round bodies (``fed/engine.py``):
-
-  engine="scan"      a whole experiment chunk is ONE jitted program:
-                     ``lax.scan`` over ``chunk`` rounds with in-program
-                     client selection, device-resident batch gathering
-                     (requires a :class:`~repro.data.FederatedDataset`),
-                     on-device eval, and ``(R,)`` metric buffers — the
-                     host dispatches ⌈R/chunk⌉ programs and reads the
-                     buffers once at the end.
-  engine="batched"   one jitted program per round (PR-1 model): the host
-                     stacks batches, dispatches, and reads eval per round.
-  engine="looped"    the seed's per-client reference loop
-                     (``fed/looped.py``) — parity tests + benchmark.
+  1. :func:`run_federated` — the seed-era kwarg entry point, now a THIN
+     deprecated shim over ``Experiment``: with a device-resident
+     :class:`~repro.data.FederatedDataset` it builds a spec, runs the
+     requested engine, and returns ``RunResult.to_history()`` (identical
+     trajectories, unified key schema).  Legacy host batch callbacks
+     (``(round, client_id) -> stacked batches``) still work on the
+     batched/looped engines only.
+  2. the host-loop runners (``_run_batched`` here, ``fed/looped.py``'s
+     reference loop) that ``Experiment.run(engine="batched"|"looped")``
+     drives; both now record the SAME history keys as the scan engine
+     (``repro.fed.api.HISTORY_KEYS``), including ``uplink_bits_round``
+     and ``num_dispatches``.
 
 All engines consume the same precomputed seed-stable ``(R, K)``
-client-selection schedule (``make_client_schedule``) and materialise the
-same ``history`` dict (per-round accuracy at eval rounds, local losses,
-exact uplink bits), so every paper table/figure can be emitted from any
-engine interchangeably.
+client-selection schedule (``make_client_schedule``), so every paper
+table/figure can be emitted from any engine interchangeably.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Union
 
 import jax
@@ -41,28 +34,23 @@ import numpy as np
 
 from ..core import tree_num_params
 from ..data.federated import FederatedDataset
+from .api import ENGINES  # noqa: F401  (one engine list for shim + API)
 from .engine import (ALGORITHMS, FLConfig, make_client_schedule,  # noqa: F401
                      make_experiment_program, make_round_engine,
                      stack_client_batches, uplink_bits)
 
 Pytree = Any
 
-ENGINES = ("scan", "batched", "looped")
 
-
-def _base_history(cfg: FLConfig, params: Pytree,
-                  schedule: np.ndarray) -> Dict[str, Any]:
+def _base_history(cfg: FLConfig, params: Pytree, schedule: np.ndarray,
+                  engine: str) -> Dict[str, Any]:
     return {
-        "algorithm": cfg.algorithm, "acc": [], "round": [],
-        "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, params),
+        "algorithm": cfg.algorithm, "engine": engine,
+        "acc": [], "round": [], "local_loss": [],
+        "uplink_bits_per_client": uplink_bits(cfg, params),
         "params": tree_num_params(params),
         "schedule": schedule,
     }
-
-
-def _eval_rounds(cfg: FLConfig, eval_every: int) -> List[int]:
-    return [r for r in range(cfg.rounds)
-            if r % eval_every == 0 or r == cfg.rounds - 1]
 
 
 def run_federated(
@@ -78,55 +66,53 @@ def run_federated(
     client_weights: Optional[List[float]] = None,
     engine: str = "batched",
     eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
-    # pure on-device eval (params -> accuracy); required for engine="scan",
-    # and substituted for a missing eval_fn on the host-loop engines
     chunk: Optional[int] = None,
-    # rounds fused per scan dispatch (engine="scan"); default: all R rounds
-    # in one dispatch — scan trip count is free at compile time, so chunking
-    # only matters when you want intermediate host visibility
-
 ) -> Dict[str, Any]:
+    """DEPRECATED: use :class:`repro.fed.Experiment` instead.
+
+    Kept as a compatibility shim — with a :class:`FederatedDataset` it
+    delegates to ``Experiment(...).run(engine=...).to_history()`` and
+    reproduces the exact same trajectories at a fixed seed.
+    """
+    warnings.warn(
+        "run_federated is deprecated; build an ExperimentSpec and call "
+        "Experiment(spec).run() (repro.fed.api) instead",
+        DeprecationWarning, stacklevel=2)
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
 
-    schedule = make_client_schedule(cfg)
-
-    if engine == "scan":
-        if not isinstance(data, FederatedDataset):
-            raise ValueError(
-                "engine='scan' gathers batches in-program and needs a "
-                "device-resident FederatedDataset, not a host callback "
-                "(see repro.data.make_federated_dataset)")
-        if eval_program is None:
-            raise ValueError(
-                "engine='scan' folds eval into the program and needs a "
-                "pure eval_program (params -> accuracy); build one with "
-                "repro.core.make_eval_program")
-        return _run_scan(loss_fn, init_params, data, eval_program, cfg,
-                         schedule, eval_every=eval_every,
-                         client_weights=client_weights, chunk=chunk)
-
-    # host-loop engines: adapt a FederatedDataset to the callback contract
-    # (same key derivation as the in-program gather → identical batches)
     if isinstance(data, FederatedDataset):
-        client_batch_fn = data.batch_fn(steps=cfg.local_steps,
-                                        batch=cfg.batch_size)
-    else:
-        client_batch_fn = data
+        from .api import Experiment, ExperimentSpec
+        spec = ExperimentSpec(
+            loss_fn=loss_fn, params=init_params, data=data, config=cfg,
+            eval_program=eval_program, eval_fn=eval_fn,
+            eval_every=eval_every,
+            client_weights=(tuple(client_weights)
+                            if client_weights is not None else None))
+        return Experiment(spec).run(engine=engine,
+                                    chunk=chunk).to_history()
+
+    # legacy host-callback data: batched/looped only
+    if engine == "scan":
+        raise ValueError(
+            "engine='scan' gathers batches in-program and needs a "
+            "device-resident FederatedDataset, not a host callback "
+            "(see repro.data.make_federated_dataset)")
     if eval_fn is None:
         if eval_program is None:
             raise ValueError("need eval_fn or eval_program")
         jitted_eval = jax.jit(eval_program)
         eval_fn = lambda p: float(jitted_eval(p))  # noqa: E731
 
+    schedule = make_client_schedule(cfg)
     if engine == "looped":
         from .looped import run_federated_looped
         return run_federated_looped(
-            loss_fn, init_params, client_batch_fn, eval_fn, cfg,
+            loss_fn, init_params, data, eval_fn, cfg,
             eval_every=eval_every, client_weights=client_weights,
             schedule=schedule)
-    return _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
-                        schedule, eval_every=eval_every,
+    return _run_batched(loss_fn, init_params, data, eval_fn, cfg,
+                        schedule=schedule, eval_every=eval_every,
                         client_weights=client_weights)
 
 
@@ -135,13 +121,15 @@ def run_federated(
 # ---------------------------------------------------------------------------
 
 def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
-                 schedule, *, eval_every, client_weights):
+                 *, schedule, eval_every, client_weights):
     w = init_params
-    history = _base_history(cfg, w, schedule)
+    history = _base_history(cfg, w, schedule, "batched")
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
 
     round_fn, state = make_round_engine(loss_fn, cfg, init_params)
+    bits_round = float(cfg.clients_per_round
+                       * history["uplink_bits_per_client"])
 
     loss_buf: List[jax.Array] = []      # device scalars, read once at end
     t0 = time.time()
@@ -159,49 +147,8 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
     history["local_loss"] = [float(x) for x in np.asarray(jnp.stack(loss_buf))]
-    history["wall_s"] = time.time() - t0
-    history["final_acc"] = history["acc"][-1]
-    return history
-
-
-# ---------------------------------------------------------------------------
-# engine="scan": ⌈R/chunk⌉ dispatches, metrics read once at the end
-# ---------------------------------------------------------------------------
-
-def _run_scan(loss_fn, init_params, data: FederatedDataset, eval_program,
-              cfg, schedule, *, eval_every, client_weights, chunk):
-    if data.num_clients != cfg.num_clients:
-        raise ValueError(
-            f"dataset has {data.num_clients} clients, cfg expects "
-            f"{cfg.num_clients}")
-    chunk = cfg.rounds if chunk is None else max(1, int(chunk))
-    chunk = min(chunk, cfg.rounds)
-
-    run_chunk, state, metrics = make_experiment_program(
-        loss_fn, cfg, init_params, data, eval_program=eval_program,
-        eval_every=eval_every, client_weights=client_weights)
-
-    w = init_params
-    history = _base_history(cfg, w, schedule)
-    sched_dev = jnp.asarray(schedule, jnp.int32)
-    t0 = time.time()
-    dispatches = 0
-    for r0 in range(0, cfg.rounds, chunk):
-        n = min(chunk, cfg.rounds - r0)
-        w, state, metrics = run_chunk(
-            w, state, metrics, jnp.int32(r0), sched_dev[r0:r0 + n],
-            n_rounds=n)
-        dispatches += 1
-
-    # the ONLY device→host reads of the whole experiment
-    loss = np.asarray(metrics["loss"])
-    acc = np.asarray(metrics["acc"])
-    bits = np.asarray(metrics["uplink_bits"])
-    history["round"] = _eval_rounds(cfg, eval_every)
-    history["acc"] = [float(acc[r]) for r in history["round"]]
-    history["local_loss"] = [float(x) for x in loss]
-    history["uplink_bits_round"] = [float(b) for b in bits]
-    history["num_dispatches"] = dispatches
+    history["uplink_bits_round"] = [bits_round] * cfg.rounds
+    history["num_dispatches"] = cfg.rounds      # one round program per round
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     return history

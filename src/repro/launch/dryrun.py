@@ -217,6 +217,10 @@ def main():
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--fedmrn", action="store_true",
                     help="lower the FedMRN pod round instead of plain steps")
+    ap.add_argument("--list-algorithms", action="store_true",
+                    help="print the simulation-engine algorithm registry "
+                         "(name + per-client uplink bits/param on the "
+                         "reduced arch) and exit")
     ap.add_argument("--fed-mode", default="fedmrn",
                     choices=["fedmrn", "fedavg"],
                     help="pod-round aggregation (fedavg = float baseline)")
@@ -224,6 +228,25 @@ def main():
                     help="rounds fused per dispatch (lax.scan over the "
                          "pod round body when > 1)")
     args = ap.parse_args()
+
+    if args.list_algorithms:
+        # the simulation registry — every name here is runnable through
+        # the Experiment API (the pod path lowers the fedmrn/fedavg modes)
+        import dataclasses as _dc
+
+        from ..fed import FLConfig, get_algorithm, list_algorithms
+        from ..models.cnn import cnn_init
+        probe = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
+        n_params = sum(int(jnp.size(l))
+                       for l in jax.tree_util.tree_leaves(probe))
+        cfg0 = FLConfig()
+        print(f"{'algorithm':12s} {'uplink bits/param':>18s}")
+        for name in list_algorithms():
+            algo = get_algorithm(name)
+            cfg = _dc.replace(cfg0, algorithm=name)
+            bpp = algo.uplink_record(cfg, probe) / n_params
+            print(f"{name:12s} {bpp:18.3f}")
+        return
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]
     shapes = (list(INPUT_SHAPES) if (args.all or not args.shape)

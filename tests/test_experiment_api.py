@@ -1,0 +1,345 @@
+"""Experiment API (ISSUE 3): algorithm plugin registry round-trips, typed
+RunResult + unified history schema, vmapped multi-seed sweeps, and the
+deprecated run_federated shim."""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import sgd_local_update, tree_num_params
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition, sample_local_batches)
+from repro.fed import (ALGORITHMS, Algorithm, Experiment, ExperimentSpec,
+                       FLConfig, HISTORY_KEYS, get_algorithm,
+                       list_algorithms, register_algorithm, run_federated)
+from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
+
+KEY = jax.random.key(0)
+
+# the engine-independent history contract (golden copy — update BOTH this
+# and repro.fed.api.HISTORY_KEYS deliberately when the schema changes)
+GOLDEN_HISTORY_KEYS = {
+    "algorithm", "engine", "acc", "round", "local_loss",
+    "uplink_bits_per_client", "uplink_bits_round", "params", "schedule",
+    "num_dispatches", "wall_s", "final_acc",
+}
+
+
+def _setup(algorithm="fedmrn", rounds=3, **cfg_kw):
+    task = make_image_task(0, n=600, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+    params = mlp_init(KEY, d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm=algorithm, num_clients=8, clients_per_round=4,
+                   rounds=rounds, local_steps=3, batch_size=16, lr=0.1,
+                   noise_alpha=3e-2, **cfg_kw)
+    ds = make_federated_dataset(task.x, task.y, parts,
+                                x_test=task.x[:200], y_test=task.y[:200],
+                                batch_seed=7)
+    return mlp_loss, params, ds, cfg
+
+
+def _experiment(algorithm="fedmrn", rounds=3, **cfg_kw):
+    loss_fn, params, ds, cfg = _setup(algorithm, rounds, **cfg_kw)
+    return Experiment(ExperimentSpec(
+        loss_fn=loss_fn, params=params, data=ds, config=cfg,
+        eval_apply=mlp_apply))           # eval auto-wired from test split
+
+
+# ---------------------------------------------------------------------------
+# the plugin registry
+# ---------------------------------------------------------------------------
+
+def test_registry_lists_builtin_families():
+    names = list_algorithms()
+    for expected in ("fedmrn", "fedmrns", "fedavg", "fedpm", "fedsparsify",
+                     "signsgd", "topk", "qsgd", "eden"):
+        assert expected in names
+    assert "none" not in names            # the identity compressor is not
+    assert get_algorithm("fedmrn").name == "fedmrn"   # an FL algorithm
+
+
+def test_unknown_algorithm_raises_with_listing():
+    with pytest.raises(ValueError, match="registered"):
+        get_algorithm("nope")
+    loss_fn, params, ds, cfg = _setup()
+    with pytest.raises(ValueError, match="registered"):
+        Experiment(ExperimentSpec(
+            loss_fn=loss_fn, params=params, data=ds,
+            config=dataclasses.replace(cfg, algorithm="nope")))
+
+
+def _toy_algorithm(name="toy_halfsgd"):
+    """Third-party style plugin: FedAvg with a half-strength server step,
+    built WITHOUT touching engine internals."""
+
+    def make_body(loss_fn, cfg, params):
+        def round_fn(seed, w, state, batches, picked, round_idx, weights):
+            def per_client(b, cid):
+                return sgd_local_update(loss_fn, w, b, lr=cfg.lr)
+
+            updates, losses = jax.vmap(per_client)(batches, picked)
+            wn = weights / jnp.sum(weights)
+            agg = jax.tree_util.tree_map(
+                lambda x: jnp.tensordot(wn, x, axes=1), updates)
+            new_w = jax.tree_util.tree_map(lambda p, a: p + 0.5 * a, w, agg)
+            return new_w, state, losses
+
+        return round_fn
+
+    return Algorithm(name=name, make_round_body=make_body,
+                     uplink_record=lambda cfg, p: 16 * tree_num_params(p))
+
+
+def test_custom_algorithm_registry_roundtrip():
+    """Register a toy plugin, run it through the scan AND batched engines,
+    and check the engines agree on its trajectory."""
+    toy = register_algorithm(_toy_algorithm())
+    try:
+        loss_fn, params, ds, cfg = _setup()
+        cfg = dataclasses.replace(cfg, algorithm="toy_halfsgd")
+        assert "toy_halfsgd" in list_algorithms()
+        exp = Experiment(ExperimentSpec(
+            loss_fn=loss_fn, params=params, data=ds, config=cfg,
+            eval_apply=mlp_apply))
+        rs = exp.run(engine="scan")
+        rb = exp.run(engine="batched")
+        assert rs.algorithm == rb.algorithm == "toy_halfsgd"
+        assert rs.uplink_bits_per_client == 16 * rs.num_params
+        np.testing.assert_allclose(rs.acc, rb.acc, atol=1e-6)
+        np.testing.assert_allclose(rs.local_loss, rb.local_loss, atol=1e-5)
+        assert np.isfinite(rs.final_acc)
+    finally:
+        ALGORITHMS.pop("toy_halfsgd", None)
+
+
+def test_register_duplicate_name_raises():
+    with pytest.raises(ValueError, match="already registered"):
+        register_algorithm(_toy_algorithm(name="fedmrn"))
+
+
+def test_spec_accepts_algorithm_instance():
+    """An unregistered Algorithm instance auto-registers through the spec."""
+    toy = _toy_algorithm(name="toy_spec_inline")
+    try:
+        loss_fn, params, ds, cfg = _setup()
+        exp = Experiment(ExperimentSpec(
+            loss_fn=loss_fn, params=params, data=ds, config=cfg,
+            algorithm=toy, eval_apply=mlp_apply))
+        assert exp.cfg.algorithm == "toy_spec_inline"
+        assert "toy_spec_inline" in list_algorithms()
+        assert np.isfinite(exp.run(engine="scan").final_acc)
+    finally:
+        ALGORITHMS.pop("toy_spec_inline", None)
+
+
+# ---------------------------------------------------------------------------
+# config validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overrides, match", [
+    (dict(clients_per_round=9), "clients_per_round"),
+    (dict(rounds=0), "rounds"),
+    (dict(algorithm="topk", topk_frac=0.0), "topk_frac"),
+    (dict(algorithm="qsgd", qsgd_bits=0), "qsgd_bits"),
+    (dict(algorithm="fedmrn", noise_alpha=-1.0), "noise_alpha"),
+])
+def test_config_validation(overrides, match):
+    loss_fn, params, ds, cfg = _setup()
+    cfg = dataclasses.replace(cfg, **overrides)
+    with pytest.raises(ValueError, match=match):
+        Experiment(ExperimentSpec(loss_fn=loss_fn, params=params, data=ds,
+                                  config=cfg, eval_apply=mlp_apply))
+
+
+def test_eval_autowire_requires_test_split():
+    loss_fn, params, ds, cfg = _setup()
+    bare = dataclasses.replace(ds, x_test=None, y_test=None)
+    exp = Experiment(ExperimentSpec(loss_fn=loss_fn, params=params,
+                                    data=bare, config=cfg,
+                                    eval_apply=mlp_apply))
+    with pytest.raises(ValueError, match="test split"):
+        exp.run()
+
+
+def test_scan_requires_some_eval():
+    loss_fn, params, ds, cfg = _setup()
+    exp = Experiment(ExperimentSpec(loss_fn=loss_fn, params=params,
+                                    data=ds, config=cfg))
+    with pytest.raises(ValueError, match="eval_program"):
+        exp.run(engine="scan")
+
+
+def test_client_weights_length_validated():
+    """A wrong-length weights vector must raise, not be clamped by the
+    in-program gather (XLA clamps out-of-range indices silently)."""
+    loss_fn, params, ds, cfg = _setup()
+    with pytest.raises(ValueError, match="client_weights"):
+        Experiment(ExperimentSpec(loss_fn=loss_fn, params=params, data=ds,
+                                  config=cfg, eval_apply=mlp_apply,
+                                  client_weights=(1.0, 2.0)))
+
+
+def test_looped_engine_rejects_plugin_algorithms():
+    register_algorithm(_toy_algorithm(name="toy_no_loop"))
+    try:
+        loss_fn, params, ds, cfg = _setup()
+        exp = Experiment(ExperimentSpec(
+            loss_fn=loss_fn, params=params, data=ds,
+            config=dataclasses.replace(cfg, algorithm="toy_no_loop"),
+            eval_apply=mlp_apply))
+        with pytest.raises(ValueError, match="looped"):
+            exp.run(engine="looped")
+    finally:
+        ALGORITHMS.pop("toy_no_loop", None)
+
+
+def test_spec_rejects_host_callback_data():
+    loss_fn, params, ds, cfg = _setup()
+    with pytest.raises(ValueError, match="FederatedDataset"):
+        Experiment(ExperimentSpec(loss_fn=loss_fn, params=params,
+                                  data=lambda r, c: None, config=cfg))
+
+
+# ---------------------------------------------------------------------------
+# typed results: golden schema, identical across engines (satellite)
+# ---------------------------------------------------------------------------
+
+def test_history_schema_identical_across_engines():
+    exp = _experiment()
+    hists = {e: exp.run(engine=e).to_history()
+             for e in ("scan", "batched", "looped")}
+    for engine, hist in hists.items():
+        assert set(hist) == GOLDEN_HISTORY_KEYS, engine
+        assert hist["engine"] == engine
+        # previously scan-only keys now exist (and are sane) everywhere
+        assert len(hist["uplink_bits_round"]) == exp.cfg.rounds
+        assert all(b > 0 for b in hist["uplink_bits_round"])
+        assert hist["num_dispatches"] > 0
+    assert HISTORY_KEYS == frozenset(GOLDEN_HISTORY_KEYS)
+
+
+def test_legacy_host_callback_history_matches_schema():
+    """The run_federated host-callback path records the same key set."""
+    loss_fn, params, _, cfg = _setup()
+    task = make_image_task(0, n=600, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+
+    def batch_fn(rnd, cid):
+        return sample_local_batches(rnd * 100 + cid, task.x, task.y,
+                                    parts[cid], steps=cfg.local_steps,
+                                    batch=cfg.batch_size)
+
+    def eval_fn(p):
+        return 0.5
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        for engine in ("batched", "looped"):
+            hist = run_federated(loss_fn, params, batch_fn, eval_fn, cfg,
+                                 engine=engine)
+            assert set(hist) == GOLDEN_HISTORY_KEYS, engine
+
+
+def test_run_result_round_trips_and_is_frozen():
+    exp = _experiment()
+    res = exp.run()
+    assert res.engine == "scan" and res.final_acc == res.acc[-1]
+    assert res.total_uplink_bits == pytest.approx(
+        sum(res.uplink_bits_round))
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        res.engine = "other"
+    hist = res.to_history()
+    from repro.fed import RunResult
+    back = RunResult.from_history(res.config, res.engine, hist)
+    assert back.acc == res.acc and back.eval_rounds == res.eval_rounds
+    assert back.num_dispatches == res.num_dispatches
+
+
+# ---------------------------------------------------------------------------
+# the deprecated shim (satellite)
+# ---------------------------------------------------------------------------
+
+def test_run_federated_shim_warns_and_matches_experiment():
+    loss_fn, params, ds, cfg = _setup()
+    exp = Experiment(ExperimentSpec(loss_fn=loss_fn, params=params,
+                                    data=ds, config=cfg,
+                                    eval_apply=mlp_apply))
+    res = exp.run(engine="scan")
+    eval_prog = exp.eval_program()
+    with pytest.warns(DeprecationWarning, match="run_federated"):
+        hist = run_federated(loss_fn, params, ds, None, cfg,
+                             eval_program=eval_prog, engine="scan")
+    np.testing.assert_allclose(hist["acc"], res.acc, atol=1e-6)
+    np.testing.assert_allclose(hist["local_loss"], res.local_loss,
+                               atol=1e-6)
+    np.testing.assert_array_equal(hist["schedule"], res.schedule)
+    assert set(hist) == GOLDEN_HISTORY_KEYS
+
+
+# ---------------------------------------------------------------------------
+# vmapped multi-seed sweeps (the acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_independent_runs():
+    """sweep(seeds=4) — ONE vmapped program — reproduces four independent
+    single-seed runs to 1e-6, including cross-round EF state."""
+    exp = _experiment(rounds=4, error_feedback=True)
+    sweep = exp.sweep(seeds=4)
+    assert sweep.vmapped and sweep.seeds == (0, 1, 2, 3)
+    assert sweep.acc.shape[0] == 4
+    for i, s in enumerate(sweep.seeds):
+        solo = exp.run(seed=s)
+        np.testing.assert_allclose(sweep.runs[i].acc, solo.acc, atol=1e-6)
+        np.testing.assert_allclose(sweep.runs[i].local_loss,
+                                   solo.local_loss, atol=1e-5)
+        np.testing.assert_array_equal(sweep.runs[i].schedule,
+                                      solo.schedule)
+    # the seeds genuinely differ (schedules diverge at S=4, R=4 w.h.p.)
+    assert any(not np.array_equal(sweep.runs[0].schedule,
+                                  r.schedule) for r in sweep.runs[1:])
+    mean, std = sweep.point.mean_std()
+    assert mean == pytest.approx(float(sweep.final_acc.mean()))
+
+
+def test_sweep_host_fallback_matches_vmapped():
+    exp = _experiment(rounds=3)
+    vm = exp.sweep(seeds=3)
+    host = exp.sweep(seeds=3, vmapped=False)
+    assert not host.vmapped
+    for a, b in zip(vm.runs, host.runs):
+        np.testing.assert_allclose(a.acc, b.acc, atol=1e-6)
+        np.testing.assert_allclose(a.local_loss, b.local_loss, atol=1e-5)
+
+
+def test_sweep_explicit_seed_list_and_chunking():
+    exp = _experiment(rounds=4)
+    sweep = exp.sweep(seeds=[11, 3], chunk=3)     # 3 + 1 trailing chunk
+    assert sweep.seeds == (11, 3)
+    assert all(r.num_dispatches == 2 for r in sweep.runs)
+    solo = exp.run(seed=11)
+    np.testing.assert_allclose(sweep.runs[0].acc, solo.acc, atol=1e-6)
+
+
+def test_sweep_grid_host_loops_points_and_vmaps_seeds():
+    exp = _experiment(rounds=2)
+    sweep = exp.sweep(seeds=2, grid={"noise_alpha": [0.02, 0.05],
+                                     "lr": [0.1]})
+    assert len(sweep.points) == 2
+    for point in sweep.points:
+        assert len(point.runs) == 2
+        assert np.isfinite(point.final_acc).all()
+    rows = sweep.summary()
+    assert rows[0]["noise_alpha"] == 0.02 and rows[1]["noise_alpha"] == 0.05
+    assert all(r["seeds"] == 2 for r in rows)
+    with pytest.raises(ValueError):              # multi-point convenience
+        sweep.point                              # accessors must refuse
+    with pytest.raises(ValueError, match="FLConfig"):
+        exp.sweep(seeds=2, grid={"not_a_field": [1]})
+    with pytest.raises(ValueError, match="seeds"):
+        exp.sweep(seeds=2, grid={"seed": [1, 2]})   # seeds have their axis
+    with pytest.raises(ValueError, match="num_clients"):
+        # the dataset pins num_clients; an in-program gather would CLAMP
+        exp.sweep(seeds=2, grid={"num_clients": [16]})
