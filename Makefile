@@ -1,8 +1,8 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast bench-engine bench-engine-smoke bench quickstart \
-    examples-smoke
+.PHONY: test test-fast test-sharded bench-engine bench-engine-smoke bench \
+    quickstart examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -12,7 +12,15 @@ test:
 test-fast:
 	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
 	    tests/test_round_engine.py tests/test_scan_engine.py \
-	    tests/test_fed_engine.py tests/test_experiment_api.py
+	    tests/test_fed_engine.py tests/test_experiment_api.py \
+	    tests/test_history_golden.py
+
+# multi-device tier: 8 fake CPU devices so the pod client mesh axis and
+# the shard_map seed mesh genuinely partition (CI job: test-multidevice)
+test-sharded:
+	XLA_FLAGS="--xla_force_host_platform_device_count=8" \
+	    $(PY) -m pytest -x -q tests/test_sharded_engine.py \
+	    tests/test_sharding_units.py
 
 # looped/batched/scan round engine benchmark (ISSUE 1+2 acceptance);
 # writes machine-readable BENCH_engine.json at the repo root

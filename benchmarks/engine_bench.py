@@ -24,12 +24,18 @@ Rows (derived = rounds/sec, except ratio rows):
   engine/<algo>/scan_vs_batched                 scan vs batched_driver —
                                                 the PR-2 acceptance ratio
 
-Multi-seed sweep rows (derived = seeds/sec, except the ratio):
-  engine/sweep/vmapped           Experiment.sweep: S seeds as ONE vmapped
-                                 scan program (one dispatch per chunk)
-  engine/sweep/host_loop         the fallback: S sequential dispatches of
-                                 one seed-polymorphic compiled program
-  engine/sweep/vmapped_vs_loop   the PR-3 acceptance ratio (>= 2x)
+Multi-seed sweep rows (derived = seeds/sec, except the ratios):
+  engine/sweep/vmapped            Experiment.sweep: S seeds as ONE vmapped
+                                  scan program (one dispatch per chunk)
+  engine/sweep/host_loop          the fallback: S sequential dispatches of
+                                  one seed-polymorphic compiled program
+  engine/sweep/vmapped_vs_loop    the PR-3 acceptance ratio (>= 2x)
+  engine/sweep/sharded            sharding="devices": the seed axis
+                                  shard_map'd over the local device mesh
+                                  (S/D seeds vmapped per device; equals
+                                  the vmapped program when D=1)
+  engine/sweep/sharded_devices    D actually used (context for the row)
+  engine/sweep/sharded_vs_vmapped sharded over vmapped seeds/sec ratio
 
 ``write_bench_json`` emits the machine-readable ``BENCH_engine.json``
 (rounds/sec per engine + config + commit) next to the repo root.
@@ -237,6 +243,13 @@ def sweep_rows(n_rounds: int = 10, n_seeds: int = 32) -> List[Dict]:
 
     t_vm = timed(lambda: exp.sweep(seeds=n_seeds))
     t_host = timed(lambda: exp.sweep(seeds=n_seeds, vmapped=False))
+    # sharding="devices": identical per-seed programs shard_map'd over the
+    # local device mesh.  On the single-device CI runner D=1 and the row
+    # degenerates to the vmapped program (ratio ≈ 1); spread it with e.g.
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8.  Report the
+    # device count the timed sweep ACTUALLY used, not a recomputation.
+    n_dev = exp.sweep(seeds=n_seeds, sharding="devices").devices
+    t_sh = timed(lambda: exp.sweep(seeds=n_seeds, sharding="devices"))
     return [
         dict(name="engine/sweep/vmapped", us_per_call=t_vm * 1e6,
              derived=round(n_seeds / t_vm, 2)),
@@ -244,6 +257,12 @@ def sweep_rows(n_rounds: int = 10, n_seeds: int = 32) -> List[Dict]:
              derived=round(n_seeds / t_host, 2)),
         dict(name="engine/sweep/vmapped_vs_loop", us_per_call=0.0,
              derived=round(t_host / t_vm, 2)),
+        dict(name="engine/sweep/sharded", us_per_call=t_sh * 1e6,
+             derived=round(n_seeds / t_sh, 2)),
+        dict(name="engine/sweep/sharded_devices", us_per_call=0.0,
+             derived=n_dev),
+        dict(name="engine/sweep/sharded_vs_vmapped", us_per_call=0.0,
+             derived=round(t_vm / t_sh, 2)),
     ]
 
 
@@ -272,9 +291,11 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
         "config": {"clients_per_round": K, "num_clients": NUM_CLIENTS,
                    "local_steps": STEPS, "batch_size": BATCH,
                    "n_rounds": n_rounds, "n_sweep_seeds": n_sweep_seeds,
+                   "n_devices": jax.local_device_count(),
                    "model": "cnn(4,4)/hw8", "unit": "rounds_per_sec "
                    "(sweep rows are seeds_per_sec; speedup/"
-                   "scan_vs_batched/vmapped_vs_loop rows are ratios)"},
+                   "scan_vs_batched/vmapped_vs_loop/sharded_vs_vmapped "
+                   "rows are ratios; sharded_devices is a device count)"},
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "results": results,
     }

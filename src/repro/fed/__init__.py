@@ -10,7 +10,8 @@ from .algorithms import (  # noqa: F401
 )
 from .engine import (  # noqa: F401
     make_client_schedule, make_experiment_program, make_round_body,
-    make_round_engine, make_seeded_experiment_program, make_sweep_program,
+    make_round_engine, make_seeded_experiment_program,
+    make_sharded_sweep_program, make_sweep_program, sweep_device_count,
 )
 from .api import (  # noqa: F401
     ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,

@@ -139,6 +139,14 @@ class Algorithm:
     where ``seed`` is a (possibly traced) int32 scalar — derive every PRNG
     key from it (``jax.random.key(seed + c)`` / ``client_round_key``), not
     from ``cfg.seed``, or multi-seed sweeps silently reuse one stream.
+
+    ``uplink_kind`` declares what crosses the wire each round: ``"mask"``
+    families ship (packed) mask bits whose server aggregation is a
+    mask-count — the pod path defaults them to shared noise, so the
+    server sum becomes a popcount-style mask count scaled by ONE noise
+    tensor (no per-client noise regeneration); ``"dense"`` families ship
+    float updates (the 32 bpp all-reduce baseline).  Purely advisory —
+    every engine runs either kind.
     """
 
     name: str
@@ -146,6 +154,7 @@ class Algorithm:
     uplink_record: Callable[[FLConfig, Pytree], int]
     init_state: Callable[[FLConfig, Pytree], Pytree] = _no_state
     validate: Callable[[FLConfig], None] = _no_validate
+    uplink_kind: str = "dense"       # "mask" | "dense" (pod aggregation hint)
 
 
 ALGORITHMS: Dict[str, Algorithm] = {}
@@ -477,14 +486,15 @@ def _register_builtins() -> None:
         register_algorithm(Algorithm(
             name=name, make_round_body=_fedmrn_body,
             uplink_record=_fedmrn_bits, init_state=_fedmrn_state,
-            validate=_fedmrn_validate))
+            validate=_fedmrn_validate, uplink_kind="mask"))
     register_algorithm(Algorithm(
         name="fedavg", make_round_body=_fedavg_family_body(None),
         uplink_record=_fedavg_bits))
     register_algorithm(Algorithm(
         name="fedpm", make_round_body=_fedpm_body,
         uplink_record=_baseline_bits("fedpm"),
-        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)}))
+        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)},
+        uplink_kind="mask"))
     register_algorithm(Algorithm(
         name="fedsparsify", make_round_body=_fedsparsify_body,
         uplink_record=_baseline_bits("fedsparsify",

@@ -46,6 +46,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
+from functools import partial
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
                     Tuple, Union)
 
@@ -59,7 +60,9 @@ from ..data.federated import FederatedDataset
 from .algorithms import (ALGORITHMS, Algorithm, FLConfig, get_algorithm,
                          register_algorithm, uplink_bits)
 from .engine import (eval_round_indices, make_client_schedule,
-                     make_seeded_experiment_program, make_sweep_program)
+                     make_seeded_experiment_program,
+                     make_sharded_sweep_program, make_sweep_program,
+                     sweep_device_count)
 
 Pytree = Any
 
@@ -186,6 +189,7 @@ class SweepResult:
     seeds: Tuple[int, ...]
     vmapped: bool          # True: seeds ran as ONE vmapped program/point
     wall_s: float
+    devices: int = 1       # >1: seed axis shard_map'd over this many devices
 
     def summary(self) -> List[Dict[str, Any]]:
         return [p.summary_row() for p in self.points]
@@ -332,18 +336,23 @@ class Experiment:
 
     # ---- program cache ------------------------------------------------
 
-    def _program(self, kind: str, cfg: FLConfig):
+    def _program(self, kind: str, cfg: FLConfig, devices: int = 1):
         """Build-or-fetch the (seed-polymorphic) chunk/sweep program.
 
         The cache key normalises the seed out: seeds are traced arguments,
         so one compiled program serves every seed of a sweep AND every
-        ``run(seed=...)`` override.
+        ``run(seed=...)`` override.  ``devices`` keys the sharded sweep
+        variants (the mesh shape is baked into the program).
         """
-        key = (kind, dataclasses.replace(cfg, seed=0),
+        key = (kind, devices, dataclasses.replace(cfg, seed=0),
                self.spec.eval_every, self.spec.client_weights)
         if key not in self._programs:
-            maker = (make_sweep_program if kind == "sweep"
-                     else make_seeded_experiment_program)
+            if kind == "sweep_sharded":
+                maker = partial(make_sharded_sweep_program, devices=devices)
+            elif kind == "sweep":
+                maker = make_sweep_program
+            else:
+                maker = make_seeded_experiment_program
             prog = self.eval_program()
             if prog is None:
                 raise ValueError(
@@ -434,6 +443,8 @@ class Experiment:
     def sweep(self, seeds: Union[int, Sequence[int]] = 4, *,
               grid: Optional[Mapping[str, Sequence[Any]]] = None,
               vmapped: bool = True,
+              sharding: Optional[str] = None,
+              devices: Optional[int] = None,
               chunk: Optional[int] = None) -> SweepResult:
         """Run a multi-seed (× config-grid) sweep.
 
@@ -443,11 +454,28 @@ class Experiment:
         compile, S experiments resident per dispatch; ``vmapped=False``
         host-loops a single seed-polymorphic compiled program (the
         fallback, and the baseline the sweep benchmark compares against).
-        ``grid`` maps FLConfig field names to value lists; the grid cross
-        product is host-looped (axes like batch size change shapes, and
-        closure constants like lr live outside the traced argument set),
-        with seeds vmapped *within* each point.
+        ``sharding="devices"`` additionally spreads the seed axis over
+        the local devices via ``shard_map`` (S/D seeds vmapped per
+        device, still one compile, no collectives); ``devices`` pins the
+        mesh size (default: the largest divisor of S that fits the
+        machine — 1 degenerates to the plain vmapped program).  ``grid``
+        maps FLConfig field names to value lists; the grid cross product
+        is host-looped (axes like batch size change shapes, and closure
+        constants like lr live outside the traced argument set), with
+        seeds vmapped/sharded *within* each point.
         """
+        if sharding not in (None, "none", "devices"):
+            raise ValueError(
+                f"unknown sharding {sharding!r} (None or 'devices')")
+        sharded = sharding == "devices"
+        if sharded and not vmapped:
+            raise ValueError(
+                "sharding='devices' shards the vmapped program; it cannot "
+                "combine with vmapped=False")
+        if devices is not None and not sharded:
+            raise ValueError(
+                "devices= only applies to sharding='devices' — without it "
+                "the argument would be silently ignored")
         if isinstance(seeds, (int, np.integer)):
             if seeds <= 0:
                 raise ValueError(f"need at least one seed, got {seeds}")
@@ -467,6 +495,17 @@ class Experiment:
         points = [dict(zip(grid, vals))
                   for vals in itertools.product(*grid.values())] or [{}]
 
+        if sharded:
+            n_dev = (sweep_device_count(len(seed_list)) if devices is None
+                     else int(devices))
+            if n_dev < 1 or len(seed_list) % n_dev:
+                raise ValueError(
+                    f"{len(seed_list)} seeds do not divide over "
+                    f"{n_dev} devices (pick devices dividing the seed "
+                    "count, or omit it for auto)")
+        else:
+            n_dev = 1
+
         t0 = time.time()
         out = []
         for overrides in points:
@@ -480,19 +519,23 @@ class Experiment:
                     f"grid point {overrides} sets num_clients="
                     f"{cfg.num_clients} but the dataset has "
                     f"{self.spec.data.num_clients} clients")
-            runs = (self._sweep_point_vmapped(cfg, seed_list, chunk)
+            runs = (self._sweep_point_vmapped(cfg, seed_list, chunk,
+                                              devices=n_dev)
                     if vmapped else
                     self._sweep_point_host(cfg, seed_list, chunk))
             out.append(SweepPoint(
                 overrides=tuple(sorted(overrides.items())),
                 seeds=seed_list, runs=tuple(runs)))
         return SweepResult(points=tuple(out), seeds=seed_list,
-                           vmapped=vmapped, wall_s=time.time() - t0)
+                           vmapped=vmapped, wall_s=time.time() - t0,
+                           devices=n_dev)
 
     def _sweep_point_vmapped(self, cfg: FLConfig, seeds: Tuple[int, ...],
-                             chunk: Optional[int]) -> List[RunResult]:
+                             chunk: Optional[int],
+                             devices: int = 1) -> List[RunResult]:
         S = len(seeds)
-        run_sweep, state0, metrics0 = self._program("sweep", cfg)
+        kind = "sweep_sharded" if devices > 1 else "sweep"
+        run_sweep, state0, metrics0 = self._program(kind, cfg, devices)
         schedules = np.stack(
             [make_client_schedule(cfg, s) for s in seeds])      # (S, R, K)
         sched_dev = jnp.asarray(schedules, jnp.int32)

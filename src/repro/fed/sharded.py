@@ -1,213 +1,260 @@
-"""FedMRN as a single pjit program on the production mesh — the paper's
-protocol mapped onto pod hardware (DESIGN.md §3).
+"""Registry-driven pod rounds — any FL algorithm as a single pjit program
+on the production mesh (the paper's protocol mapped onto pod hardware,
+DESIGN.md §3).
 
 Clients = slices of one mesh axis ('pod' when multi-pod — cross-silo FL
-between pods over the slow inter-pod links — else 'data').  One round:
+between pods over the slow inter-pod links — else 'data').  The round is
+the SAME pure body every simulation engine runs — whatever
+:class:`~repro.fed.algorithms.Algorithm` is registered under the chosen
+name builds it — lowered with the stacked client axis partitioned over
+the client mesh axis:
 
-  1. every client runs S local SGD steps on its update copy ``u`` with PSM
-     masking in the forward pass (vmap over the client axis; XLA partitions
-     the vmapped dim over the client mesh axis, so clients train in
-     parallel, tensor/ZeRO-parallel *within* their slice);
-  2. clients sample final masks and bit-pack them along each leaf's last
-     dim (sharding-preserving) — the packed uint32 payload IS the uplink;
-  3. the payload is all-gathered along the client axis (1 bit/param on the
-     wire — vs 32 for FedAvg's float all-reduce, directly visible in the
-     HLO collective bytes);
-  4. every shard regenerates each client's noise for the slice it owns
-     (seed → noise is deterministic, Eq. 5) and accumulates
-     w += mean_c G(s_c) ⊙ m_c.
+  1. the body vmaps the K selected clients over the stacked axis; XLA
+     partitions the vmapped dim over the client mesh axis, so clients
+     train in parallel, tensor/ZeRO-parallel *within* their slice;
+  2. each family's own uplink choreography lowers under the mesh:
+     ``uplink_kind == "mask"`` families (fedmrn/fedmrns, fedpm)
+     aggregate mask bits — with ``shared_noise`` (the pod default for
+     mask families) the server sum Σ_k p'_k m_k is a popcount-style
+     mask count scaled by ONE regenerated noise tensor, so per-client
+     noise regeneration drops out of the server loop entirely (the
+     mask-count all-reduce is still carried in f32 today; the
+     ⌈log2(K+1)⌉-bit integer wire format it admits is the next ROADMAP
+     item); ``"dense"`` families (fedavg + compressors, fedsparsify)
+     all-reduce f32 updates;
+  3. cross-round state (EF residuals, fedpm scores) flows through the
+     ``state`` pytree exactly as on the scan engine.
 
-The per-client local computation is the SAME round-program code the
-simulation engine vmaps (``core.fedmrn.psm_local_train`` /
-``sample_final_mask``), parameterised by :class:`PodRoundSpec` instead of
-hardcoded hyper-parameters; only the collective choreography (last-dim
-packing, client-axis all-gather, per-shard noise regen) is pod-specific.
+Because the pod program and the simulation engines share one round body,
+pod trajectories are ≡ the scan engine's at fixed seed/schedule/batches
+(``tests/test_sharded_engine.py`` asserts it to 1e-6 on 8 fake CPU
+devices) — there is no pod-only algorithm fork left to drift.
 
-``mode='fedavg'`` lowers the float-aggregation baseline for the roofline
-comparison.  ``PodRoundSpec(rounds=R)`` lowers an R-round ``lax.scan``
-over the round body — the pod-path mirror of the simulation engine's
-multi-round experiment program — with per-round seed/noise keys, for
-probing multi-round HLO and collective totals.
+``PodRoundSpec(rounds=R)`` lowers an R-round ``lax.scan`` over the round
+body — the pod-path mirror of the simulation engine's multi-round
+experiment program — reusing one batch stream across rounds (dry-run
+semantics, for probing multi-round HLO and collective totals).  All
+hyper-parameters come from the spec's :class:`FLConfig` — the same
+config object every other engine consumes — so pod train/noise keys are
+derived by the registered algorithm itself, never duplicated here.
 """
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from ..core.fedmrn import (FedMRNConfig, final_mask_key, mix_add,
-                           psm_local_train, sample_final_mask)
-from ..core.noise import NoiseConfig, client_round_key, gen_noise
-from ..core.packing import pack_lastdim, unpack_lastdim
 from ..sharding.rules import param_shardings
+from .algorithms import (ALGORITHMS, Algorithm, FLConfig, get_algorithm,
+                         register_algorithm)
 
 Pytree = Any
 
-LOCAL_STEPS = 2          # S for the dry-run round (linear in FLOPs)
-NOISE = NoiseConfig(dist="uniform", alpha=1e-2)
+# the dry-run probe trains S=2 local steps (linear in FLOPs, enough to
+# exercise the scan) — everything else keeps the FLConfig defaults
+POD_PROBE_CONFIG = FLConfig(local_steps=2)
 
 
 @dataclasses.dataclass(frozen=True)
 class PodRoundSpec:
-    """Round hyper-parameters for the pod program (was hardcoded)."""
+    """What the pod program runs: an :class:`FLConfig` + fusion depth.
 
-    local_steps: int = LOCAL_STEPS
-    lr: float = 0.1
-    noise: NoiseConfig = NOISE
-    mask_mode: str = "binary"
-    base_seed: int = 0
-    backend: str | None = None     # masking/packing kernel backend
-    # rounds fused per dispatch: >1 lowers a multi-round ``lax.scan`` over
-    # the round body (same fusion the simulation scan engine uses), with
-    # per-round seed/noise keys — for probing multi-round HLO/collectives;
-    # the batch stream is reused across rounds (dry-run semantics)
+    ``config`` is the SAME config type every simulation engine takes —
+    local steps, lr, noise, seed, backend, shared_noise all live there
+    and are interpreted by the registered algorithm (no pod-side
+    duplicate defaults).  ``rounds > 1`` fuses a multi-round ``lax.scan``
+    over the round body into one dispatch (same fusion as the scan
+    engine), with per-round keys; the batch stream is reused across
+    rounds (dry-run semantics).
+    """
+
+    config: FLConfig = POD_PROBE_CONFIG
     rounds: int = 1
 
-    def fedmrn_config(self) -> FedMRNConfig:
-        return FedMRNConfig(mask_mode=self.mask_mode, noise=self.noise,
-                            lr=self.lr, backend=self.backend)
+    def resolved(self, algorithm: Union[str, Algorithm, None]) -> FLConfig:
+        """The config with the ``make_pod_round`` algorithm applied."""
+        if algorithm is None:
+            return self.config
+        name = (algorithm.name if isinstance(algorithm, Algorithm)
+                else algorithm)
+        return dataclasses.replace(self.config, algorithm=name)
 
 
 def client_axis_of(mesh) -> str:
     return "pod" if "pod" in mesh.shape else "data"
 
 
-def _shift_spec(ns: NamedSharding, client_axis: str, mesh) -> NamedSharding:
-    """Prepend the client axis to a param sharding (for u/masks/noise)."""
-    spec = list(ns.spec) if ns.spec else []
-    # params in fedmrn mode are zero-sharded over remaining data axes only;
-    # drop any use of the client axis inside the param dims
-    spec = [None if s == client_axis
-            else (tuple(x for x in s if x != client_axis) or None
-                  if isinstance(s, tuple) else s)
-            for s in spec]
-    return NamedSharding(mesh, P(client_axis, *spec))
+def pod_param_shardings(p_specs: Pytree, mesh, *, num_layers: int,
+                        encoder_layers: int = 0) -> Pytree:
+    """Param shardings for the pod round: ZeRO minus the client axis.
 
-
-def make_fedmrn_pod_step(model, mesh, p_specs, p_shard, batch_specs,
-                         b_shard, *, mode: str = "fedmrn",
-                         spec: PodRoundSpec = PodRoundSpec()):
-    """Returns (step_fn, arg_specs, in_shardings) for jit+lower."""
-    cfg = model.cfg
+    Params must NOT be zero-sharded over the client axis (each client
+    needs the full model in its slice), so ZeRO uses the remaining data
+    axes only.
+    """
     client_axis = client_axis_of(mesh)
-    C = mesh.shape[client_axis]
-    mrn = spec.fedmrn_config()
-    S = spec.local_steps
-
-    # params must NOT be zero-sharded over the client axis (each client
-    # needs the full model in its slice) — reshard with fsdp minus client
     fsdp = tuple(a for a in ("pod", "data")
                  if a in mesh.shape and a != client_axis)
-    p_shard = param_shardings(
-        p_specs, mesh, num_layers=cfg.num_layers,
-        encoder_layers=cfg.encoder_layers, zero=bool(fsdp), fsdp_axes=fsdp)
+    return param_shardings(p_specs, mesh, num_layers=num_layers,
+                           encoder_layers=encoder_layers, zero=bool(fsdp),
+                           fsdp_axes=fsdp)
 
-    u_specs = jax.tree_util.tree_map(
-        lambda s: jax.ShapeDtypeStruct((C,) + s.shape, jnp.float32)
-        if jnp.issubdtype(s.dtype, jnp.floating) else
-        jax.ShapeDtypeStruct((C,) + s.shape, s.dtype), p_specs)
-    u_shard = jax.tree_util.tree_map(
-        lambda ns: _shift_spec(ns, client_axis, mesh), p_shard)
 
-    # split the global batch into (C, S_local, b_local, ...) local streams
-    def split_batch_spec(s):
+def pod_batch_specs(batch_specs: Dict[str, Any], num_clients: int,
+                    local_steps: int) -> Dict[str, Any]:
+    """Split a global-batch spec into per-client local streams.
+
+    ``(B, ...)`` → ``(K, S, b_local, ...)`` with ``b_local = B // (K·S)``
+    (floor, min 1) — the round bodies' input contract: a stacked client
+    axis of S-step local batch stacks.
+    """
+    def split(s):
         B = s.shape[0]
-        b_local = max(1, B // (C * S))
-        return jax.ShapeDtypeStruct((C, S, b_local) + s.shape[1:], s.dtype)
+        b_local = max(1, B // (num_clients * local_steps))
+        return jax.ShapeDtypeStruct(
+            (num_clients, local_steps, b_local) + s.shape[1:], s.dtype)
 
-    fb_specs = {k: split_batch_spec(v) for k, v in batch_specs.items()
-                if k != "positions3"}
-    fb_shard = {k: NamedSharding(mesh, P(client_axis, None, None))
-                for k in fb_specs}
+    return {k: split(v) for k, v in batch_specs.items()}
 
-    def one_client_update(u_c, batch_c, client_id, w, round_idx):
-        """S local steps of SGD on u with PSM — the shared Alg. 1 body."""
-        seed_key = client_round_key(spec.base_seed, round_idx, client_id)
-        noise = gen_noise(seed_key, w, mrn.noise)
-        train_key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.key(spec.base_seed + 1),
-                               round_idx), client_id)
 
-        if mode == "fedmrn":
-            u_c, losses = psm_local_train(model.loss_fn, w, batch_c, noise,
-                                          train_key, cfg=mrn, u0=u_c)
-            m = sample_final_mask(u_c, noise, final_mask_key(train_key, S),
-                                  cfg=mrn)
-            return m, losses.mean(), noise
+def _replicated(mesh, tree: Pytree) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)
 
-        # fedavg baseline: same scan shape, no masking
-        def local_step(u, batch):
-            def fwd(u_):
-                wc = jax.tree_util.tree_map(mix_add, w, u_)
-                return model.loss_fn(wc, batch)
 
-            loss, g = jax.value_and_grad(fwd)(u)
-            u = jax.tree_util.tree_map(
-                lambda a, gi: a - spec.lr * gi, u, g)
-            return u, loss
+def _state_shardings(mesh, state_specs: Pytree, cfg: FLConfig,
+                     client_axis: str) -> Pytree:
+    """Client-stacked state leaves shard over the client axis; the rest
+    (fedpm scores, any global pytree) replicate.
 
-        u_c, losses = jax.lax.scan(local_step, u_c, batch_c)
-        return u_c, losses.mean(), noise
+    A hint, not a contract: leaves whose leading dim is the client count
+    (EF residual stacks) are the only ones that grow with clients.
+    """
+    D = mesh.shape[client_axis]
 
-    def one_round(w, u, batch, round_idx):
-        client_ids = jnp.arange(C)
-        out, losses, _ = jax.vmap(
-            lambda u_c, b_c, cid: one_client_update(u_c, b_c, cid, w,
-                                                    round_idx)
-        )(u, batch, client_ids)
+    def shard_one(s):
+        shape = jnp.shape(s)
+        if len(shape) >= 1 and shape[0] == cfg.num_clients \
+                and shape[0] % D == 0:
+            return NamedSharding(mesh, P(client_axis))
+        return NamedSharding(mesh, P())
 
-        if mode == "fedmrn":
-            # ---- uplink: bit-packed masks, all-gathered over clients -------
-            payload = jax.tree_util.tree_map(
-                lambda m: pack_lastdim(m > 0), out)
-            payload = jax.tree_util.tree_map(
-                lambda words, ns: jax.lax.with_sharding_constraint(
-                    words, NamedSharding(mesh, P(None, *ns.spec))),
-                payload, p_shard)   # replicate client axis == all-gather
+    return jax.tree_util.tree_map(shard_one, state_specs)
 
-            # ---- server: regen noise per client, Eq. (5) --------------------
-            def srv_body(acc, cid):
-                key = client_round_key(spec.base_seed, round_idx, cid)
-                noise_c = gen_noise(key, w, mrn.noise)
-                u_hat = jax.tree_util.tree_map(
-                    lambda words, wl, nl: nl * unpack_lastdim(
-                        words[cid], wl.shape[-1]).astype(nl.dtype),
-                    payload, w, noise_c)
-                acc = jax.tree_util.tree_map(jnp.add, acc, u_hat)
-                return acc, None
 
-            acc0 = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), w)
-            agg, _ = jax.lax.scan(srv_body, acc0, jnp.arange(C))
-        else:
-            # FedAvg: float updates cross the wire (mean over client axis
-            # → XLA all-reduce of f32) — the 32 bpp baseline
-            agg = jax.tree_util.tree_map(
-                lambda uc: jnp.sum(uc.astype(jnp.float32), axis=0), out)
+def make_pod_round(
+    algorithm: Union[str, Algorithm, None],
+    mesh,
+    spec: PodRoundSpec = PodRoundSpec(),
+    *,
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    p_specs: Pytree,
+    p_shard: Optional[Pytree] = None,
+    batch_specs: Pytree,
+    client_weights: Optional[Any] = None,
+) -> Tuple[Callable, Tuple, Tuple]:
+    """Lower any registered algorithm's round body as a pod program.
 
-        new_w = jax.tree_util.tree_map(
-            lambda p, a: mix_add(p, a / C), w, agg)
-        return new_w, losses.mean()
+    Returns ``(step, arg_specs, in_shardings)`` for ``jit`` + ``lower``:
 
-    def step(w, u, batch):
+      step(w, state, batches, picked, round_idx)
+          -> (new_w, new_state, losses)
+
+    ``batches`` is the stacked-client pytree the round bodies consume —
+    ``(K, S, B, ...)`` leaves with ``K = cfg.clients_per_round`` — and is
+    sharded over the client mesh axis (which must divide K).  ``picked``
+    is the ``(K,)`` int32 client-id vector (``arange(K)`` for the probe,
+    a schedule row for trajectory runs), ``round_idx`` a scalar int32.
+    With ``spec.rounds > 1`` the round body is scanned ``rounds`` times
+    starting at ``round_idx`` (losses gain a leading round axis) and the
+    same ``batches`` feed every round — a cost/sharding probe, not
+    training.
+
+    ``p_shard`` defaults to fully-replicated params (fine for tests /
+    small models); pass :func:`pod_param_shardings` for the production
+    ZeRO layout.  ``client_weights`` (one float per ``cfg.num_clients``)
+    reproduces the simulation engines' weighted aggregation — the round
+    weights are gathered as ``weights_all[picked]``, exactly like the
+    scan engine's chunk body; None means uniform.  State specs are
+    derived from the algorithm's own ``init_state`` via ``eval_shape`` —
+    nothing is materialised here.
+
+    Like :class:`~repro.fed.api.ExperimentSpec`, an unregistered
+    :class:`Algorithm` instance auto-registers; an instance whose name is
+    taken by a DIFFERENT plugin raises instead of silently running the
+    registered one.
+    """
+    if isinstance(algorithm, Algorithm):
+        existing = ALGORITHMS.get(algorithm.name)
+        if existing is None:
+            register_algorithm(algorithm)
+        elif existing is not algorithm:
+            raise ValueError(
+                f"algorithm name {algorithm.name!r} is already registered "
+                "by a different plugin")
+    cfg = spec.resolved(algorithm)
+    algo = get_algorithm(cfg.algorithm)
+    cfg.validate()
+    algo.validate(cfg)
+
+    client_axis = client_axis_of(mesh)
+    D = mesh.shape[client_axis]
+    K = cfg.clients_per_round
+    if K % D:
+        raise ValueError(
+            f"clients_per_round={K} must be divisible by the client mesh "
+            f"axis {client_axis!r} (size {D})")
+    for k, leaf in jax.tree_util.tree_leaves_with_path(batch_specs):
+        if jnp.shape(leaf)[0] != K:
+            raise ValueError(
+                f"batch leaf {k} has leading dim {jnp.shape(leaf)[0]}, "
+                f"expected the stacked client axis K={K} "
+                "(see pod_batch_specs)")
+
+    round_body = algo.make_round_body(loss_fn, cfg, p_specs)
+    state_specs = jax.eval_shape(lambda p: algo.init_state(cfg, p), p_specs)
+    seed = jnp.int32(cfg.seed)
+    if client_weights is None:
+        weights_all = jnp.ones((cfg.num_clients,), jnp.float32)
+    else:
+        cw = [float(x) for x in client_weights]
+        if len(cw) != cfg.num_clients:
+            # must fail here: weights_all[picked] inside jit would
+            # silently CLAMP out-of-range client ids instead of raising
+            raise ValueError(
+                f"client_weights has {len(cw)} entries, cfg expects "
+                f"{cfg.num_clients}")
+        weights_all = jnp.asarray(cw, jnp.float32)
+
+    def step(w, state, batches, picked, round_idx):
+        weights = weights_all[picked]
         if spec.rounds == 1:
-            return one_round(w, u, batch, jnp.int32(0))
+            return round_body(seed, w, state, batches, picked, round_idx,
+                              weights)
 
-        # multi-round program: scan the round body, fresh u (=input copy,
-        # normally zeros) and per-round keys each round; the same batch
-        # stream feeds every round (cost/sharding probe, not training)
-        def body(w_c, round_idx):
-            w_c, loss = one_round(w_c, u, batch, round_idx)
-            return w_c, loss
+        def body(carry, r):
+            w_c, state_c = carry
+            w_c, state_c, losses = round_body(seed, w_c, state_c, batches,
+                                              picked, r, weights)
+            return (w_c, state_c), losses
 
-        w_final, losses = jax.lax.scan(
-            body, w, jnp.arange(spec.rounds, dtype=jnp.int32))
-        return w_final, losses.mean()
+        rs = round_idx + jnp.arange(spec.rounds, dtype=jnp.int32)
+        (w, state), losses = jax.lax.scan(body, (w, state), rs)
+        return w, state, losses            # losses: (rounds, K, S)
 
-    args = (p_specs, u_specs, fb_specs)
-    in_shardings = (p_shard, u_shard, fb_shard)
-    return step, args, in_shardings
+    if p_shard is None:
+        p_shard = _replicated(mesh, p_specs)
+    b_shard = jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P(client_axis)), batch_specs)
+    s_shard = _state_shardings(mesh, state_specs, cfg, client_axis)
+
+    arg_specs = (p_specs, state_specs, batch_specs,
+                 jax.ShapeDtypeStruct((K,), jnp.int32),
+                 jax.ShapeDtypeStruct((), jnp.int32))
+    in_shardings = (p_shard, s_shard, b_shard,
+                    NamedSharding(mesh, P(client_axis)),
+                    NamedSharding(mesh, P()))
+    return step, arg_specs, in_shardings

@@ -13,7 +13,7 @@ wall compile time.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b \
-      --shape train_4k [--multi-pod] [--all] [--fedmrn]
+      --shape train_4k [--multi-pod] [--all] [--sharded --algo fedpm]
 """
 import argparse
 import json
@@ -72,8 +72,8 @@ def _momentum_specs(params):
 
 
 def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-              dtype=jnp.bfloat16, fedmrn: bool = False,
-              fed_mode: str = "fedmrn", fed_rounds: int = 1):
+              dtype=jnp.bfloat16, sharded: bool = False,
+              fed_algo: str = "fedmrn", fed_rounds: int = 1):
     """Lower+compile one combination; returns the result record dict."""
     cfg = get_config(arch)
     cfg = cfg.__class__(**{**cfg.__dict__, "dtype": dtype})
@@ -82,7 +82,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     rec = {"arch": arch, "shape": shape_name,
            "mesh": "2x16x16" if multi_pod else "16x16",
            "kind": shape.kind, "params": count_params(cfg),
-           "fedmrn": fedmrn}
+           "sharded": sharded}
     if not ok:
         rec.update(status="skipped", reason=why)
         return rec
@@ -104,12 +104,30 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     specs = input_specs(cfg, shape)
     b_shard = batch_shardings(specs["batch"], mesh)
 
-    if fedmrn:
-        from ..fed.sharded import PodRoundSpec, make_fedmrn_pod_step
-        step, args, in_shardings = make_fedmrn_pod_step(
-            model, mesh, p_specs, p_shard, specs["batch"], b_shard,
-            mode=fed_mode, spec=PodRoundSpec(rounds=fed_rounds))
+    if sharded:
+        from ..fed import FLConfig, get_algorithm
+        from ..fed.sharded import (PodRoundSpec, client_axis_of,
+                                   make_pod_round, pod_batch_specs,
+                                   pod_param_shardings)
+        C = mesh.shape[client_axis_of(mesh)]
+        algo = get_algorithm(fed_algo)
+        # mask families default to shared noise on the pod path: the
+        # cross-client collective carries mask counts, not f32 updates
+        flc = FLConfig(algorithm=fed_algo, num_clients=C,
+                       clients_per_round=C, local_steps=2,
+                       shared_noise=(algo.uplink_kind == "mask"))
+        fb_specs = pod_batch_specs(
+            {k: v for k, v in specs["batch"].items() if k != "positions3"},
+            C, flc.local_steps)
+        step, args, in_shardings = make_pod_round(
+            fed_algo, mesh, PodRoundSpec(config=flc, rounds=fed_rounds),
+            loss_fn=model.loss_fn, p_specs=p_specs,
+            p_shard=pod_param_shardings(
+                p_specs, mesh, num_layers=cfg.num_layers,
+                encoder_layers=cfg.encoder_layers),
+            batch_specs=fb_specs)
         rec["fed_rounds"] = fed_rounds
+        rec["algorithm"] = fed_algo
     elif shape.kind == "train":
         hp = TrainHParams(microbatches=MICROBATCHES.get(arch, 1))
         step = step_for_kind(model, "train", hp)
@@ -131,7 +149,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         in_shardings = (p_shard, c_shard, b_shard)
 
     hint_axes = None
-    if fedmrn:
+    if sharded:
         # clients train independently: activation hints must not span the
         # client axis ('pod' when multi-pod, else 'data')
         from ..fed.sharded import client_axis_of
@@ -149,6 +167,8 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
 
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):   # some jax builds return [dict]
+        ca = ca[0] if ca else {}
     hlo = compiled.as_text()
     coll = hlo_analysis.analyze(hlo)
     promo = _f32_promotion_bytes(hlo)
@@ -181,16 +201,16 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     return rec
 
 
-def run_and_save(arch, shape_name, *, multi_pod, fedmrn=False,
-                 fed_mode="fedmrn", fed_rounds=1, out_dir=OUT_DIR):
+def run_and_save(arch, shape_name, *, multi_pod, sharded=False,
+                 fed_algo="fedmrn", fed_rounds=1, out_dir=OUT_DIR):
     tag = f"{arch}__{shape_name}__{'2x16x16' if multi_pod else '16x16'}"
-    if fedmrn:
-        tag += f"__{fed_mode}"
+    if sharded:
+        tag += f"__{fed_algo}"
         if fed_rounds > 1:
             tag += f"__r{fed_rounds}"
     try:
         rec = lower_one(arch, shape_name, multi_pod=multi_pod,
-                        fedmrn=fedmrn, fed_mode=fed_mode,
+                        sharded=sharded, fed_algo=fed_algo,
                         fed_rounds=fed_rounds)
     except Exception as e:  # noqa: BLE001 — record the failure, keep going
         rec = {"arch": arch, "shape": shape_name,
@@ -215,23 +235,29 @@ def main():
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--both-meshes", action="store_true")
     ap.add_argument("--all", action="store_true")
-    ap.add_argument("--fedmrn", action="store_true",
-                    help="lower the FedMRN pod round instead of plain steps")
+    ap.add_argument("--sharded", "--fedmrn", dest="sharded",
+                    action="store_true",
+                    help="lower the registry-driven pod round instead of "
+                         "plain steps (--fedmrn is the legacy alias)")
     ap.add_argument("--list-algorithms", action="store_true",
                     help="print the simulation-engine algorithm registry "
                          "(name + per-client uplink bits/param on the "
                          "reduced arch) and exit")
-    ap.add_argument("--fed-mode", default="fedmrn",
-                    choices=["fedmrn", "fedavg"],
-                    help="pod-round aggregation (fedavg = float baseline)")
+    ap.add_argument("--algo", default=None,
+                    help="pod-round algorithm: ANY registered name "
+                         "(see --list-algorithms); default fedmrn")
+    ap.add_argument("--fed-mode", default=None,
+                    help="deprecated alias of --algo")
     ap.add_argument("--fed-rounds", type=int, default=1,
                     help="rounds fused per dispatch (lax.scan over the "
                          "pod round body when > 1)")
     args = ap.parse_args()
+    fed_algo = args.algo or args.fed_mode or "fedmrn"
 
     if args.list_algorithms:
         # the simulation registry — every name here is runnable through
-        # the Experiment API (the pod path lowers the fedmrn/fedavg modes)
+        # the Experiment API AND lowerable on the pod path (--sharded
+        # --algo <name>)
         import dataclasses as _dc
 
         from ..fed import FLConfig, get_algorithm, list_algorithms
@@ -255,8 +281,8 @@ def main():
     for arch in archs:
         for shape in shapes:
             for mp in meshes:
-                run_and_save(arch, shape, multi_pod=mp, fedmrn=args.fedmrn,
-                             fed_mode=args.fed_mode,
+                run_and_save(arch, shape, multi_pod=mp,
+                             sharded=args.sharded, fed_algo=fed_algo,
                              fed_rounds=args.fed_rounds)
 
 

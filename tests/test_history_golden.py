@@ -1,0 +1,94 @@
+"""Golden-file regression of the RunResult/history contract (ISSUE 4):
+``to_history()`` must keep ONE key schema — keys AND value types — across
+every engine, including results coming out of sharded sweeps.  Schema
+drift (a key added/removed/retyped anywhere) fails against the committed
+``tests/golden/history_schema.json`` instead of silently forking the
+engines' output formats again.
+"""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition)
+from repro.fed import (Experiment, ExperimentSpec, FLConfig, HISTORY_KEYS,
+                       RunResult)
+from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "golden",
+                           "history_schema.json")
+
+with open(GOLDEN_PATH) as f:
+    GOLDEN = json.load(f)["keys"]
+
+
+def _describe(value):
+    """The golden type descriptor of one history value."""
+    if isinstance(value, bool):          # bool is an int subclass — reject
+        return "bool"
+    if isinstance(value, str):
+        return "str"
+    if isinstance(value, (int, np.integer)):
+        return "int"
+    if isinstance(value, (float, np.floating)):
+        return "float"
+    if isinstance(value, np.ndarray):
+        return f"ndarray[{value.dtype}]"
+    if isinstance(value, (list, tuple)):
+        inner = sorted({_describe(v) for v in value}) or ["empty"]
+        return f"list[{','.join(inner)}]"
+    return type(value).__name__
+
+
+def _schema_of(hist):
+    return {k: _describe(v) for k, v in hist.items()}
+
+
+@pytest.fixture(scope="module")
+def experiment():
+    task = make_image_task(0, n=400, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+    params = mlp_init(jax.random.key(0), d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm="fedmrn", num_clients=8, clients_per_round=4,
+                   rounds=2, local_steps=2, batch_size=16, lr=0.1,
+                   noise_alpha=3e-2)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7,
+                                x_test=task.x[:128], y_test=task.y[:128])
+    return Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
+                                     data=ds, config=cfg,
+                                     eval_apply=mlp_apply))
+
+
+def test_golden_file_matches_history_keys_constant():
+    """The committed golden keys and the in-code schema constant agree —
+    whichever one drifts first, this fires."""
+    assert set(GOLDEN) == set(HISTORY_KEYS)
+
+
+@pytest.mark.parametrize("engine", ["scan", "batched", "looped"])
+def test_engine_history_matches_golden_schema(experiment, engine):
+    hist = experiment.run(engine=engine).to_history()
+    assert _schema_of(hist) == GOLDEN, (
+        f"engine={engine!r} drifted from tests/golden/history_schema.json "
+        "— if the change is deliberate, update the golden file AND "
+        "repro.fed.api.HISTORY_KEYS together")
+
+
+@pytest.mark.parametrize("sweep_kw", [
+    dict(),                                    # vmapped
+    dict(sharding="devices"),                  # shard_map over the seed mesh
+])
+def test_sweep_run_results_match_golden_schema(experiment, sweep_kw):
+    """Sweep-produced RunResults — vmapped and device-sharded — emit the
+    same golden history schema as single runs."""
+    sweep = experiment.sweep(seeds=2, **sweep_kw)
+    for run in sweep.runs:
+        hist = run.to_history()
+        assert _schema_of(hist) == GOLDEN
+        # and the dict round-trips through the typed result unchanged
+        back = RunResult.from_history(run.config, run.engine, hist)
+        assert back.acc == run.acc
+        assert _schema_of(back.to_history()) == GOLDEN
