@@ -11,9 +11,9 @@ test:
 # engine + core only (skips the slow per-arch smoke sweep)
 test-fast:
 	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
-	    tests/test_round_engine.py tests/test_scan_engine.py \
-	    tests/test_fed_engine.py tests/test_experiment_api.py \
-	    tests/test_history_golden.py
+	    tests/test_codecs.py tests/test_round_engine.py \
+	    tests/test_scan_engine.py tests/test_fed_engine.py \
+	    tests/test_experiment_api.py tests/test_history_golden.py
 
 # multi-device tier: 8 fake CPU devices so the pod client mesh axis and
 # the shard_map seed mesh genuinely partition (CI job: test-multidevice)

@@ -37,6 +37,17 @@ Multi-seed sweep rows (derived = seeds/sec, except the ratios):
   engine/sweep/sharded_devices    D actually used (context for the row)
   engine/sweep/sharded_vs_vmapped sharded over vmapped seeds/sec ratio
 
+Wire-format rows (the codec pod aggregation, derived = rounds/sec unless
+noted):
+  engine/wire/pod_int_mask        fedmrn shared-noise pod round with the
+                                  ⌈log2(K+1)⌉-bit integer mask-count
+                                  all-reduce (int_mask_agg)
+  engine/wire/pod_f32_mask        the same round forced to the f32
+                                  reference aggregation
+  engine/wire/int_vs_f32          f32-over-int wall-time ratio
+  engine/wire/{int,f32}_payload_B cross-client collective payload bytes
+                                  per round for each format
+
 ``write_bench_json`` emits the machine-readable ``BENCH_engine.json``
 (rounds/sec per engine + config + commit) next to the repo root.
 """
@@ -155,8 +166,8 @@ def engine_rows(n_rounds: int = 30) -> List[Dict]:
         weights_dev = jnp.asarray(weights, jnp.float32)
 
         def batched_round():
-            w, _, losses = round_fn(params, state0, stacked, picked_dev,
-                                    jnp.int32(0), weights_dev)
+            w, _, losses, _ = round_fn(params, state0, stacked, picked_dev,
+                                       jnp.int32(0), weights_dev)
             return w, losses          # losses stay device-resident
 
         # ---- batched DRIVER: what run_federated(engine="batched") pays
@@ -172,8 +183,8 @@ def engine_rows(n_rounds: int = 30) -> List[Dict]:
             for rnd in range(n_rounds):
                 bs = stack_client_batches(
                     [batch_fn(rnd, int(cid)) for cid in picked])
-                w, _, losses = round_fn(params, state0, bs, picked_dev,
-                                        jnp.int32(rnd), weights_dev)
+                w, _, losses, _ = round_fn(params, state0, bs, picked_dev,
+                                           jnp.int32(rnd), weights_dev)
                 loss_buf.append(jnp.mean(losses[:, -1]))
             return w, loss_buf
 
@@ -266,6 +277,68 @@ def sweep_rows(n_rounds: int = 10, n_seeds: int = 32) -> List[Dict]:
     ]
 
 
+def wire_rows(n_rounds: int = 20) -> List[Dict]:
+    """Pod mask-aggregation wire formats: integer vs f32 all-reduce.
+
+    Lowers the SAME fedmrn shared-noise pod round twice — once with the
+    ``⌈log2(K+1)⌉``-bit integer mask-count aggregate (``int_mask_agg``,
+    the pod default for count-aggregatable mask codecs) and once forced
+    to the f32 reference path — and reports rounds/sec plus the
+    cross-client collective payload bytes each format moves (P elements
+    × the aggregate dtype).  On a single-device runner the mesh is
+    degenerate (no collective), but the rows still track the program
+    cost of both formats.
+    """
+    import dataclasses as _dc
+
+    from repro.fed.codecs import min_count_dtype
+    from repro.fed.sharded import PodRoundSpec, make_pod_round
+
+    params, _, ds = _setup()
+    ndev = jax.local_device_count()
+    client_dev = next(d for d in range(min(K, ndev), 0, -1) if K % d == 0)
+    mesh = jax.make_mesh((client_dev, 1), ("data", "model"))
+    cfg = _dc.replace(_cfg("fedmrn"), shared_noise=True)
+
+    def specs_of(tree):
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), tree)
+
+    picked = jnp.arange(K, dtype=jnp.int32)
+    b0 = jax.jit(lambda: ds.gather_batches(
+        jnp.int32(0), picked, steps=STEPS, batch=BATCH))()
+    P = sum(int(np.prod(l.shape))
+            for l in jax.tree_util.tree_leaves(params))
+    times, payload = {}, {}
+    for kind, imask in (("int", True), ("f32", False)):
+        step, _, in_sh = make_pod_round(
+            "fedmrn", mesh, PodRoundSpec(config=cfg),
+            loss_fn=cnn_loss, p_specs=specs_of(params),
+            batch_specs=specs_of(b0), int_mask_agg=imask)
+        jitted = jax.jit(step, in_shardings=in_sh)
+
+        def round_once():
+            return jitted(params, {}, b0, picked, jnp.int32(0))
+
+        times[kind] = _time_rounds(round_once, n_rounds)
+        dtype = min_count_dtype(K) if imask else jnp.float32
+        payload[kind] = P * np.dtype(dtype).itemsize
+    return [
+        dict(name="engine/wire/pod_int_mask",
+             us_per_call=times["int"] * 1e6,
+             derived=round(1.0 / times["int"], 2)),
+        dict(name="engine/wire/pod_f32_mask",
+             us_per_call=times["f32"] * 1e6,
+             derived=round(1.0 / times["f32"], 2)),
+        dict(name="engine/wire/int_vs_f32", us_per_call=0.0,
+             derived=round(times["f32"] / times["int"], 2)),
+        dict(name="engine/wire/int_payload_B", us_per_call=0.0,
+             derived=payload["int"]),
+        dict(name="engine/wire/f32_payload_B", us_per_call=0.0,
+             derived=payload["f32"]),
+    ]
+
+
 def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
                      n_rounds: int = 30, n_sweep_seeds: int = 32) -> str:
     """Emit machine-readable engine results (satellite: bench trajectory).
@@ -307,7 +380,7 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    all_rows = engine_rows() + sweep_rows()
+    all_rows = engine_rows() + sweep_rows() + wire_rows()
     for row in all_rows:
         print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
     print(f"# wrote {write_bench_json(all_rows, n_rounds=30)}")

@@ -35,7 +35,8 @@ def main() -> None:
         "engine": lambda: (
             engine_bench.engine_rows(n_rounds=10 if args.quick else 30)
             + engine_bench.sweep_rows(n_rounds=5 if args.quick else 10,
-                                      n_seeds=8 if args.quick else 32)),
+                                      n_seeds=8 if args.quick else 32)
+            + engine_bench.wire_rows(n_rounds=5 if args.quick else 20)),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:

@@ -47,12 +47,15 @@ def main():
                 noise_alpha=0.025 if algo == "fedmrns" else 0.05),
             eval_apply=cnn_apply,           # auto-wires the eval program
             eval_every=5)
-        res = Experiment(spec).run()        # scan engine: ONE program
-        bpp = res.uplink_bits_per_client / res.num_params
+        exp = Experiment(spec)
+        res = exp.run()                     # scan engine: ONE program
+        rec = exp.comm_record()             # the codec's measured cost
         print(f"{algo:10s} acc={res.final_acc:.3f} "
-              f"uplink={bpp:6.2f} bit/param "
-              f"(x{32/bpp:.1f} compression) wall={res.wall_s:.1f}s "
-              f"dispatches={res.num_dispatches}")
+              f"{type(exp.codec()).__name__:11s} "
+              f"uplink={rec.uplink_bpp:6.2f} bit/param "
+              f"(paper {rec.uplink_bpp_paper:5.2f}, "
+              f"x{rec.compression_x:.1f} compression) "
+              f"wall={res.wall_s:.1f}s dispatches={res.num_dispatches}")
 
 
 if __name__ == "__main__":

@@ -31,6 +31,7 @@ from .packing import (  # noqa: F401
     tree_pack,
     tree_pack_stacked,
     tree_unpack,
+    tree_unpack_counts,
     tree_unpack_stacked,
     unpack_bits,
     unpack_mask,

@@ -27,20 +27,36 @@ class CommRecord:
         return self.uplink_bits / self.params
 
     @property
+    def uplink_bpp_paper(self) -> float:
+        return self.uplink_bits_paper / self.params
+
+    @property
     def compression_x(self) -> float:
         return 32.0 * self.params / self.uplink_bits
 
     def row(self) -> Dict[str, Any]:
+        """One table row: exact AND paper-style uplink, plus downlink."""
         return dict(
             method=self.method, params=self.params,
             uplink_bpp=round(self.uplink_bpp, 4),
+            uplink_bpp_paper=round(self.uplink_bpp_paper, 4),
             uplink_MB=round(self.uplink_bits / 8e6, 4),
+            downlink_bits=self.downlink_bits,
             compression_x=round(self.compression_x, 2),
         )
 
 
-def fedmrn_record(params: int, *, n_leaves: int = 0) -> CommRecord:
-    # packed masks (padded to 32-bit words) + one 64-bit seed
+def fedmrn_record(params: int) -> CommRecord:
+    """Packed masks (padded to 32-bit words) + ONE 64-bit seed per
+    client-round.
+
+    The seed is per-CLIENT, not per-leaf: the server regenerates every
+    leaf's noise from the one key via the ``fold_in`` chain
+    (``core/noise.py``), so no per-leaf headers exist — this matches
+    exactly what ``repro.fed.codecs.MaskCodec.wire_bits`` measures from
+    the encoded buffers (asserted in ``tests/test_codecs.py``).  The old
+    ``n_leaves`` kwarg was dead and is gone.
+    """
     words = (params + 31) // 32
     exact = words * 32 + 64
     return CommRecord("fedmrn", params, exact, params, 32 * params)

@@ -76,6 +76,36 @@ def tree_bit_sizes(tree: Pytree):
     return [math.prod(jnp.shape(l)) or 1 for l in jax.tree_util.tree_leaves(tree)]
 
 
+def tree_flat_layout(tree: Pytree):
+    """``(leaves, treedef, sizes, offsets)`` of a pytree's flat layout.
+
+    THE one definition of how leaf data maps into a flat wire buffer
+    (leaf order, per-leaf element counts, start offsets) — every
+    unpack/split path below and in ``fed/codecs.py`` derives from it, so
+    a layout change cannot silently fork the wire formats.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
+    offsets, off = [], 0
+    for sz in sizes:
+        offsets.append(off)
+        off += sz
+    return leaves, treedef, sizes, offsets
+
+
+def tree_split_flat(flat: jax.Array, like: Pytree, *,
+                    leading: Tuple[int, ...] = ()) -> Pytree:
+    """Split a flat ``(..., P)`` buffer back into ``like``-shaped leaves.
+
+    ``leading`` names extra leading axes to preserve (e.g. ``(K,)`` for
+    a client-stacked buffer); leaf dtypes are NOT cast — callers decide.
+    """
+    leaves, treedef, sizes, offsets = tree_flat_layout(like)
+    out = [flat[..., off: off + sz].reshape(leading + tuple(jnp.shape(l)))
+           for l, sz, off in zip(leaves, sizes, offsets)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 # --- backend-dispatched row packing (the wire hot path) --------------------
 #
 # ``pack_rows``/``unpack_rows`` operate on a (rows, n_bits) {0,1} matrix —
@@ -128,9 +158,7 @@ def tree_pack(mask_tree: Pytree, *, mode: str = "binary",
 def tree_unpack(words: jax.Array, like: Pytree, *, mode: str = "binary",
                 backend: str | None = None) -> Pytree:
     """Unpack one payload into a mask pytree shaped like ``like``."""
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
-    total = sum(sizes)
+    total = sum(tree_flat_layout(like)[2])
     backend = resolve_backend(backend)
     if backend == "pallas":
         bits = unpack_rows(words[None, :], total, backend=backend)[0]
@@ -138,11 +166,7 @@ def tree_unpack(words: jax.Array, like: Pytree, *, mode: str = "binary",
         bits = unpack_bits(words, total)
     if mode == "signed":
         bits = (2 * bits - 1).astype(jnp.int8)
-    out, off = [], 0
-    for leaf, sz in zip(leaves, sizes):
-        out.append(bits[off: off + sz].reshape(jnp.shape(leaf)))
-        off += sz
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return tree_split_flat(bits, like)
 
 
 def tree_pack_stacked(mask_tree: Pytree, *, mode: str = "binary",
@@ -165,18 +189,31 @@ def tree_unpack_stacked(words: jax.Array, like: Pytree, *,
                         mode: str = "binary",
                         backend: str | None = None) -> Pytree:
     """Inverse of :func:`tree_pack_stacked`: (K, W) → stacked mask pytree."""
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    sizes = [math.prod(jnp.shape(l)) or 1 for l in leaves]
-    total = sum(sizes)
+    total = sum(tree_flat_layout(like)[2])
     K = words.shape[0]
     bits = unpack_rows(words, total, backend=backend)
     if mode == "signed":
         bits = (2 * bits - 1).astype(jnp.int8)
-    out, off = [], 0
-    for leaf, sz in zip(leaves, sizes):
-        out.append(bits[:, off: off + sz].reshape((K,) + tuple(jnp.shape(leaf))))
-        off += sz
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return tree_split_flat(bits, like, leading=(K,))
+
+
+def tree_unpack_counts(words: jax.Array, like: Pytree, *,
+                       mode: str = "binary",
+                       dtype=jnp.int8,
+                       backend: str | None = None) -> Pytree:
+    """(K, W) packed rows → per-leaf integer mask-count sums ``Σ_k m_k``.
+
+    The server side of the ``⌈log2(K+1)⌉``-bit mask wire format: unpack
+    the K clients' rows and reduce over the client axis in the *integer*
+    ``dtype`` (which must hold ±K), so that when the client axis is
+    partitioned over a mesh the cross-client all-reduce moves integer
+    words instead of f32.  Signed mode sums {-1,+1} values (range ±K).
+    """
+    total = sum(tree_flat_layout(like)[2])
+    bits = unpack_rows(words, total, backend=backend)
+    if mode == "signed":
+        bits = (2 * bits - 1).astype(jnp.int8)
+    return tree_split_flat(jnp.sum(bits, axis=0, dtype=dtype), like)
 
 
 def pack_lastdim(bits: jax.Array) -> jax.Array:

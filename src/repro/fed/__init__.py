@@ -5,8 +5,12 @@ algorithms plug in through the :data:`ALGORITHMS` registry
 (``fed/algorithms.py``); the execution drivers live in ``fed/engine.py``.
 """
 from .algorithms import (  # noqa: F401
-    ALGORITHMS, Algorithm, FLConfig, get_algorithm, list_algorithms,
-    register_algorithm, uplink_bits,
+    ALGORITHMS, Algorithm, FLConfig, algorithm_codec, get_algorithm,
+    list_algorithms, register_algorithm, uplink_bits,
+)
+from .codecs import (  # noqa: F401
+    DenseCodec, MaskCodec, SignCodec, SparseCodec, UplinkCodec, WireMsg,
+    make_codec, mask_count_bits, min_count_dtype, template_of,
 )
 from .engine import (  # noqa: F401
     make_client_schedule, make_experiment_program, make_round_body,

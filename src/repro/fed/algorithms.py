@@ -7,38 +7,56 @@ know about one federated-learning family:
   make_round_body(loss_fn, cfg, params)
                                 -> seeded_round_body(seed, w, state,
                                        batches, picked, round_idx, weights)
-                                   -> (new_w, new_state, losses)
-  uplink_record(cfg, params)    exact per-client uplink bits of one round
+                                   -> (new_w, new_state, losses[,
+                                       wire_bits])
+  codec(cfg, params)            -> the family's typed uplink wire format
+                                   (an :class:`~repro.fed.codecs.
+                                   UplinkCodec`): what the round body
+                                   routes client outputs through
+                                   (encode → stacked WireMsg →
+                                   aggregate), and where engines read
+                                   the measured comm cost
   validate(cfg)                 raise ValueError on a nonsense config
+
+``uplink_record`` / ``uplink_kind`` are DEPRECATED: a codec is derived
+from them for one release (:func:`repro.fed.codecs.make_codec`).
 
 The round body is PURE and takes the experiment ``seed`` as a *traced*
 int32 scalar (not a closure constant): that is what lets a multi-seed
 sweep ``vmap`` the whole experiment program over a seed axis with one
 compile (``fed.engine.make_sweep_program``).  The drivers in
 ``fed/engine.py`` bind ``seed = cfg.seed`` for ordinary single-seed runs,
-so trajectories are unchanged.
+so trajectories are unchanged.  The optional 4th output ``wire_bits``
+is the round's K-client MEASURED uplink (summed encoded ``WireMsg``
+buffer sizes — ``codec.round_bits(msg)``); engines fall back to the
+codec's static report for legacy 3-tuple bodies.
 
 Built-in families (extracted from the seed-era ``if/elif`` branches):
 
-  fedmrn / fedmrns   PSM local training → masks → packed uplink → Eq.(5)
-  fedavg             float updates, plus one registered algorithm per
-                     post-training compressor (signsgd … post_sm)
-  fedpm              supermask-as-weights baseline (Isik et al.)
-  fedsparsify        magnitude-pruned weight upload baseline
+  fedmrn / fedmrns   PSM local training → MaskCodec (packed masks +
+                     64-bit seed) → Eq.(5) via codec.aggregate
+  fedavg             DenseCodec f32 updates, plus one registered
+                     algorithm per post-training compressor (signsgd →
+                     SignCodec, topk → SparseCodec, the rest roundtrip
+                     in-body over DenseCodec transport)
+  fedpm              supermask-as-weights baseline (Isik et al.) —
+                     MaskCodec mask-frequency aggregation
+  fedsparsify        magnitude-pruned weight upload → SparseCodec
 
 Third-party algorithms register WITHOUT touching engine internals::
 
     from repro.fed import Algorithm, register_algorithm
+    from repro.fed.codecs import DenseCodec, template_of
 
     register_algorithm(Algorithm(
         name="my_algo",
         make_round_body=my_builder,      # (loss_fn, cfg, params) -> body
         init_state=lambda cfg, p: {},
-        uplink_record=lambda cfg, p: 32 * tree_num_params(p),
+        codec=lambda cfg, p: DenseCodec(template_of(p), name="my_algo"),
     ))
 
-and every engine (scan / batched / looped drivers), the Experiment API,
-examples, and benchmarks pick it up by name.
+and every engine (scan / batched / looped drivers), the pod path, the
+Experiment API, examples, and benchmarks pick it up by name.
 """
 from __future__ import annotations
 
@@ -50,11 +68,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (FedMRNConfig, NoiseConfig, baseline_record,
-                    client_round_key, fedmrn_record, final_mask_key,
+                    client_round_key, final_mask_key,
                     gen_noise, make_compressor, mix_add, psm_local_train,
                     sample_final_mask, sgd_local_update, tree_masked_noise,
-                    tree_num_params, tree_pack_stacked, tree_unpack_stacked)
+                    tree_num_params)
 from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
+from .codecs import (DenseCodec, MaskCodec, SignCodec, SparseCodec,
+                     UplinkCodec, make_codec, min_count_dtype,
+                     template_of)
 
 Pytree = Any
 RoundBody = Callable[..., Tuple[Pytree, Pytree, jax.Array]]
@@ -83,6 +104,12 @@ class FLConfig:
     # and at pod scale the mask all-gather can become a ⌈log2(K+1)⌉-bit
     # integer all-reduce (a further ~3× cross-client traffic cut at K=16).
     shared_noise: bool = False
+    # aggregate mask COUNTS in the minimal integer dtype holding
+    # ⌈log2(K+1)⌉ bits instead of f32 (the pod-path wire format for mask
+    # families — the cross-client all-reduce then moves int8/int16 words).
+    # Requires uniform client weights (engines enforce) and a
+    # count-aggregatable format (fedpm, or fedmrn with shared_noise).
+    int_mask_agg: bool = False
     # baselines
     topk_frac: float = 0.03
     sparsify_frac: float = 0.03    # fedsparsify keeps top 3% of weights
@@ -129,32 +156,42 @@ def _no_validate(cfg: FLConfig) -> None:
 
 @dataclasses.dataclass(frozen=True)
 class Algorithm:
-    """One pluggable FL family: round body + state + uplink accounting.
+    """One pluggable FL family: round body + state + wire format.
 
     ``make_round_body(loss_fn, cfg, params)`` must return a PURE function
 
         body(seed, w, state, batches, picked, round_idx, weights)
-            -> (new_w, new_state, losses)     # losses: (K, S) device array
+            -> (new_w, new_state, losses[, wire_bits])
+                                              # losses: (K, S) device array
 
     where ``seed`` is a (possibly traced) int32 scalar — derive every PRNG
     key from it (``jax.random.key(seed + c)`` / ``client_round_key``), not
     from ``cfg.seed``, or multi-seed sweeps silently reuse one stream.
+    The optional ``wire_bits`` output is the round's measured K-client
+    uplink (``codec.round_bits(stacked_msg)``) — engines substitute the
+    codec's static report when a legacy body returns a 3-tuple.
 
-    ``uplink_kind`` declares what crosses the wire each round: ``"mask"``
-    families ship (packed) mask bits whose server aggregation is a
-    mask-count — the pod path defaults them to shared noise, so the
-    server sum becomes a popcount-style mask count scaled by ONE noise
-    tensor (no per-client noise regeneration); ``"dense"`` families ship
-    float updates (the 32 bpp all-reduce baseline).  Purely advisory —
-    every engine runs either kind.
+    ``codec(cfg, params)`` returns the family's
+    :class:`~repro.fed.codecs.UplinkCodec` — the typed wire format the
+    round body routes client outputs through and the single source of
+    comm accounting (``codec.wire_bits(params) -> CommRecord``).
+
+    ``uplink_record`` and ``uplink_kind`` are DEPRECATED (kept one
+    release): when ``codec`` is None, :func:`repro.fed.codecs.make_codec`
+    derives one from them — ``uplink_kind == "mask"`` → a binary
+    :class:`MaskCodec` (so the pod path still defaults such families to
+    shared-noise count aggregation), else :class:`DenseCodec`, with
+    ``uplink_record``'s bits preserved as the cost report.
     """
 
     name: str
     make_round_body: Callable[[Callable, FLConfig, Pytree], RoundBody]
-    uplink_record: Callable[[FLConfig, Pytree], int]
+    codec: Optional[Callable[[FLConfig, Pytree], UplinkCodec]] = None
     init_state: Callable[[FLConfig, Pytree], Pytree] = _no_state
     validate: Callable[[FLConfig], None] = _no_validate
-    uplink_kind: str = "dense"       # "mask" | "dense" (pod aggregation hint)
+    # deprecated (one release): derive-a-codec shims — see class docstring
+    uplink_record: Optional[Callable[[FLConfig, Pytree], int]] = None
+    uplink_kind: Optional[str] = None
 
 
 ALGORITHMS: Dict[str, Algorithm] = {}
@@ -164,6 +201,11 @@ def register_algorithm(algo: Algorithm, *, overwrite: bool = False) -> Algorithm
     """Add ``algo`` to the registry (raises on duplicate names)."""
     if not algo.name:
         raise ValueError("algorithm needs a non-empty name")
+    if algo.codec is None and algo.uplink_record is None:
+        raise ValueError(
+            f"algorithm {algo.name!r} must declare codec= (an UplinkCodec "
+            "factory; see repro.fed.codecs) or the deprecated "
+            "uplink_record=")
     if algo.name in ALGORITHMS and not overwrite:
         raise ValueError(
             f"algorithm {algo.name!r} already registered "
@@ -185,9 +227,18 @@ def list_algorithms() -> Tuple[str, ...]:
     return tuple(sorted(ALGORITHMS))
 
 
+def algorithm_codec(cfg: FLConfig, params: Pytree) -> UplinkCodec:
+    """The registered algorithm's uplink codec for this config/model."""
+    return make_codec(get_algorithm(cfg.algorithm), cfg, params)
+
+
 def uplink_bits(cfg: FLConfig, params: Pytree) -> int:
-    """Exact per-client uplink cost of one round (for history accounting)."""
-    return get_algorithm(cfg.algorithm).uplink_record(cfg, params)
+    """Exact per-client uplink cost of one round (for history accounting).
+
+    Measured from the codec's encoded buffer sizes (or the deprecated
+    ``uplink_record`` figure for legacy plugins without a codec).
+    """
+    return int(algorithm_codec(cfg, params).wire_bits(params).uplink_bits)
 
 
 # ---------------------------------------------------------------------------
@@ -196,13 +247,6 @@ def uplink_bits(cfg: FLConfig, params: Pytree) -> int:
 
 def _tree_zeros_like(t: Pytree) -> Pytree:
     return jax.tree_util.tree_map(jnp.zeros_like, t)
-
-
-def _weighted_sum(weights: jax.Array, stacked: Pytree) -> Pytree:
-    """Σ_k w_k · leaf[k] over the leading client axis of every leaf."""
-    return jax.tree_util.tree_map(
-        lambda x: jnp.tensordot(weights, x.astype(jnp.float32), axes=1),
-        stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -265,9 +309,21 @@ def fedsparsify_local(loss_fn, w, batches, *, lr, frac):
 # built-in round bodies, one per algorithm family
 # ---------------------------------------------------------------------------
 
+def _fedmrn_codec(cfg: FLConfig, params: Pytree) -> MaskCodec:
+    """Packed masks + the 64-bit noise seed — the paper's wire format."""
+    mrn = cfg.fedmrn_config()
+    return MaskCodec(
+        template_of(params), name=cfg.algorithm, mode=mrn.mask_mode,
+        noise=mrn.noise, shared_noise=cfg.shared_noise,
+        count_dtype=(min_count_dtype(cfg.clients_per_round)
+                     if cfg.int_mask_agg else None),
+        backend=cfg.backend)
+
+
 def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
     mrn = cfg.fedmrn_config()
     ef = cfg.error_feedback
+    codec = _fedmrn_codec(cfg, params)
 
     def round_fn(seed, w, state, batches, picked, round_idx, weights):
         train_base = jax.random.key(seed + 1)
@@ -289,38 +345,18 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
             residual = (jax.tree_util.tree_map(
                 jnp.subtract, u, tree_masked_noise(noise, m))
                 if ef else None)
-            return m, losses, residual
+            return m, seed_key, losses, residual
 
         r0 = (jax.tree_util.tree_map(lambda r: r[picked],
                                      state["residuals"])
               if ef else jnp.zeros((picked.shape[0],)))
-        masks, losses, residuals = jax.vmap(per_client)(batches, picked, r0)
+        masks, seed_keys, losses, residuals = jax.vmap(per_client)(
+            batches, picked, r0)
 
-        # ---- uplink: the wire payload, packed in one kernel launch ------
-        payload = tree_pack_stacked(masks, mode=mrn.mask_mode,
-                                    backend=cfg.backend)
-
-        # ---- server: unpack, regen noise from seeds, Eq. (5) ------------
-        m_rec = tree_unpack_stacked(payload, w, mode=mrn.mask_mode,
-                                    backend=cfg.backend)
-        wn = weights / jnp.sum(weights)
-        if cfg.shared_noise:
-            # Σ_k p'_k G(s_t)⊙m_k = G(s_t) ⊙ Σ_k p'_k m_k: one noise
-            # tensor scales an (integer-valued) mask average
-            noise = gen_noise(client_round_key(seed, round_idx, 0),
-                              w, mrn.noise)
-            m_avg = _weighted_sum(wn, m_rec)
-            agg = jax.tree_util.tree_map(
-                lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
-        else:
-            def decode(cid, m_c):
-                noise = gen_noise(client_round_key(seed, round_idx, cid),
-                                  w, mrn.noise)
-                return jax.tree_util.tree_map(
-                    lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_c)
-
-            u_hats = jax.vmap(decode)(picked, m_rec)
-            agg = _weighted_sum(wn, u_hats)
+        # ---- uplink: (packed masks, seeds) encoded in one kernel launch
+        msg = codec.encode_stacked({"mask": masks, "seed": seed_keys})
+        # ---- server: the codec is the decode boundary — Eq. (5) --------
+        agg = codec.aggregate(msg, weights)
         new_w = jax.tree_util.tree_map(mix_add, w, agg)
 
         new_state = state
@@ -328,7 +364,7 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
             new_state = {"residuals": jax.tree_util.tree_map(
                 lambda r, nr: r.at[picked].set(nr),
                 state["residuals"], residuals)}
-        return new_w, new_state, losses
+        return new_w, new_state, losses, codec.round_bits(msg)
 
     return round_fn
 
@@ -350,7 +386,41 @@ def _fedmrn_validate(cfg: FLConfig) -> None:
     if cfg.noise_alpha <= 0:
         raise ValueError(
             f"noise_alpha must be positive, got {cfg.noise_alpha}")
+    if cfg.int_mask_agg and not cfg.shared_noise:
+        raise ValueError(
+            "int_mask_agg needs shared_noise for fedmrn: with per-client "
+            "noise the server update Σ w'_k G(s_k)⊙m_k is not a function "
+            "of mask counts")
     NoiseConfig(dist=cfg.noise_dist, alpha=cfg.noise_alpha)  # checks dist
+
+
+# compressors whose quantization IS the codec's encode step (no in-body
+# roundtrip): deterministic sign → SignCodec, magnitude top-k → SparseCodec
+_CODEC_COMPRESSORS = ("signsgd", "topk")
+
+
+def _fedavg_family_codec(compressor_name: Optional[str]):
+    """Codec factory for fedavg + every post-training compressor entry."""
+
+    def factory(cfg: FLConfig, params: Pytree) -> UplinkCodec:
+        t = template_of(params)
+        if compressor_name is None:
+            return DenseCodec(t, name="fedavg")
+        if compressor_name == "signsgd":
+            return SignCodec(t, name="signsgd", backend=cfg.backend)
+        if compressor_name == "topk":
+            return SparseCodec(t, name="topk", frac=cfg.topk_frac)
+        # stochastic quantizers roundtrip inside the body; the f32
+        # transport stands in for the quantized format, whose true cost
+        # the record reports (exact + paper-style, comm.py §5.1.3)
+        P = tree_num_params(params)
+        L = len(jax.tree_util.tree_leaves(params))
+        rec = baseline_record(compressor_name, P, L,
+                              topk_frac=cfg.topk_frac,
+                              qsgd_bits=cfg.qsgd_bits)
+        return DenseCodec(t, name=compressor_name, record=rec)
+
+    return factory
 
 
 def _fedavg_family_body(compressor_name: Optional[str]):
@@ -358,7 +428,9 @@ def _fedavg_family_body(compressor_name: Optional[str]):
 
     def build(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
         mrn = cfg.fedmrn_config()
-        compressor = (None if compressor_name is None else
+        codec = _fedavg_family_codec(compressor_name)(cfg, params)
+        compressor = (None if compressor_name is None
+                      or compressor_name in _CODEC_COMPRESSORS else
                       make_compressor(compressor_name,
                                       topk_frac=cfg.topk_frac,
                                       qsgd_bits=cfg.qsgd_bits,
@@ -376,18 +448,31 @@ def _fedavg_family_body(compressor_name: Optional[str]):
                 return u, losses
 
             updates, losses = jax.vmap(per_client)(batches, picked)
-            wn = weights / jnp.sum(weights)
-            agg = _weighted_sum(wn, updates)
+            msg = codec.encode_stacked({"value": updates})
+            agg = codec.aggregate(msg, weights)
             new_w = jax.tree_util.tree_map(mix_add, w, agg)
-            return new_w, state, losses
+            return new_w, state, losses, codec.round_bits(msg)
 
         return round_fn
 
     return build
 
 
+def _fedpm_codec(cfg: FLConfig, params: Pytree) -> MaskCodec:
+    """Bernoulli-sampled masks, no noise seed: the server aggregate is
+    the raw VOTE count (``normalize=False``; the body passes unit
+    weights and applies the Beta(1,1) smoothing), integer-dtype when
+    ``int_mask_agg``."""
+    return MaskCodec(
+        template_of(params), name="fedpm", mode="binary", normalize=False,
+        count_dtype=(min_count_dtype(cfg.clients_per_round)
+                     if cfg.int_mask_agg else None),
+        backend=cfg.backend)
+
+
 def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
     noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
+    codec = _fedpm_codec(cfg, params)
 
     def round_fn(seed, w, state, batches, picked, round_idx, weights):
         # frozen random init, regenerated from the traced seed: keeps the
@@ -406,59 +491,55 @@ def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
 
         masks, losses = jax.vmap(per_client)(batches, picked)
         K = picked.shape[0]
+        # ---- uplink: packed mask bits, counted server-side -------------
+        msg = codec.encode_stacked({"mask": masks})
+        # the posterior counts VOTES — one per client, ``client_weights``
+        # ignored (the original FedPM rule): weighted counts could exceed
+        # K, push probs past 1 and NaN the logit below
+        m_sum = codec.aggregate(msg, jnp.ones_like(weights))
         # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
         # accumulated in f32 regardless of param dtype.  The raw K-client
         # mean hits exactly 0/1 whenever all clients agree, and logit of
         # the clipped value (±9.2) saturates next round's sigmoid scores —
         # training freezes.  Smoothing bounds scores to |logit| ≤ ln(K+1).
-        probs = jax.tree_util.tree_map(
-            lambda m: (jnp.sum(m.astype(jnp.float32), axis=0) + 1.0)
-            / (K + 2.0), masks)
+        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (K + 2.0),
+                                       m_sum)
         new_scores = jax.tree_util.tree_map(
             lambda p_: jnp.log(p_ / (1 - p_)), probs)      # sigmoid^-1
         new_w = jax.tree_util.tree_map(
             lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
-        return new_w, {"scores": new_scores}, losses
+        return new_w, {"scores": new_scores}, losses, codec.round_bits(msg)
 
     return round_fn
 
 
+def _fedsparsify_codec(cfg: FLConfig, params: Pytree) -> SparseCodec:
+    return SparseCodec(template_of(params), name="fedsparsify",
+                       frac=cfg.sparsify_frac)
+
+
 def _fedsparsify_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
+    codec = _fedsparsify_codec(cfg, params)
+
     def round_fn(seed, w, state, batches, picked, round_idx, weights):
         def per_client(b, cid):
             return fedsparsify_local(loss_fn, w, b, lr=cfg.lr,
                                      frac=cfg.sparsify_frac)
 
         w_locals, losses = jax.vmap(per_client)(batches, picked)
-        wn = weights / jnp.sum(weights)
-        new_w = _weighted_sum(wn, w_locals)
+        # the pruned local WEIGHTS are the payload: top-k values+indices
+        msg = codec.encode_stacked({"value": w_locals})
+        new_w = codec.aggregate(msg, weights)
         new_w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
                                        w, new_w)
-        return new_w, state, losses
+        return new_w, state, losses, codec.round_bits(msg)
 
     return round_fn
 
 
 # ---------------------------------------------------------------------------
-# uplink accounting + built-in registration
+# validation + built-in registration
 # ---------------------------------------------------------------------------
-
-def _fedmrn_bits(cfg, params):
-    return fedmrn_record(tree_num_params(params)).uplink_bits
-
-
-def _fedavg_bits(cfg, params):
-    return 32 * tree_num_params(params)
-
-
-def _baseline_bits(name, **rec_kw):
-    def bits(cfg, params):
-        P = tree_num_params(params)
-        L = len(jax.tree_util.tree_leaves(params))
-        kw = {k: getattr(cfg, v) for k, v in rec_kw.items()}
-        return baseline_record(name, P, L, **kw).uplink_bits
-    return bits
-
 
 def _frac_validate(field):
     def validate(cfg):
@@ -473,39 +554,27 @@ def _qsgd_validate(cfg):
         raise ValueError(f"qsgd_bits must be >= 1, got {cfg.qsgd_bits}")
 
 
-def _compressor_bits(name):
-    if name == "topk":
-        return _baseline_bits(name, topk_frac="topk_frac")
-    if name == "qsgd":
-        return _baseline_bits(name, qsgd_bits="qsgd_bits")
-    return _baseline_bits(name)
-
-
 def _register_builtins() -> None:
     for name in ("fedmrn", "fedmrns"):
         register_algorithm(Algorithm(
-            name=name, make_round_body=_fedmrn_body,
-            uplink_record=_fedmrn_bits, init_state=_fedmrn_state,
-            validate=_fedmrn_validate, uplink_kind="mask"))
+            name=name, make_round_body=_fedmrn_body, codec=_fedmrn_codec,
+            init_state=_fedmrn_state, validate=_fedmrn_validate))
     register_algorithm(Algorithm(
         name="fedavg", make_round_body=_fedavg_family_body(None),
-        uplink_record=_fedavg_bits))
+        codec=_fedavg_family_codec(None)))
     register_algorithm(Algorithm(
-        name="fedpm", make_round_body=_fedpm_body,
-        uplink_record=_baseline_bits("fedpm"),
-        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)},
-        uplink_kind="mask"))
+        name="fedpm", make_round_body=_fedpm_body, codec=_fedpm_codec,
+        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)}))
     register_algorithm(Algorithm(
         name="fedsparsify", make_round_body=_fedsparsify_body,
-        uplink_record=_baseline_bits("fedsparsify",
-                                     topk_frac="sparsify_frac"),
+        codec=_fedsparsify_codec,
         validate=_frac_validate("sparsify_frac")))
     for comp in COMPRESSOR_REGISTRY:
         if comp == "none":
             continue
         register_algorithm(Algorithm(
             name=comp, make_round_body=_fedavg_family_body(comp),
-            uplink_record=_compressor_bits(comp),
+            codec=_fedavg_family_codec(comp),
             validate=(_frac_validate("topk_frac") if comp == "topk"
                       else _qsgd_validate if comp == "qsgd"
                       else _no_validate)))

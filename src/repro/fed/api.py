@@ -55,10 +55,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import tree_num_params
+from ..core.comm import CommRecord
 from ..core.evaluation import make_eval_program
 from ..data.federated import FederatedDataset
-from .algorithms import (ALGORITHMS, Algorithm, FLConfig, get_algorithm,
-                         register_algorithm, uplink_bits)
+from .algorithms import (ALGORITHMS, Algorithm, FLConfig, algorithm_codec,
+                         get_algorithm, register_algorithm, uplink_bits)
+from .codecs import UplinkCodec
 from .engine import (eval_round_indices, make_client_schedule,
                      make_seeded_experiment_program,
                      make_sharded_sweep_program, make_sweep_program,
@@ -96,7 +98,9 @@ class RunResult:
     eval_rounds: Tuple[int, ...]
     acc: Tuple[float, ...]                 # one entry per eval round
     local_loss: Tuple[float, ...]          # one entry per round
-    uplink_bits_round: Tuple[float, ...]   # K-client total bits per round
+    uplink_bits_round: Tuple[float, ...]   # measured K-client wire bits
+    #   per round: summed encoded WireMsg buffer sizes, same on every
+    #   engine (NOT a precomputed estimate)
     uplink_bits_per_client: int
     num_params: int
     schedule: np.ndarray                   # (R, K) int32 client selection
@@ -299,6 +303,19 @@ class Experiment:
                 f"cfg expects {self.cfg.num_clients}")
         self._programs: Dict[Any, Tuple[Callable, Pytree, Pytree]] = {}
         self._eval_prog: Optional[Callable] = None
+
+    # ---- the wire format ----------------------------------------------
+
+    def codec(self) -> UplinkCodec:
+        """The algorithm's typed uplink codec for this spec's model —
+        the same object the round bodies route payloads through."""
+        return algorithm_codec(self.cfg, self.spec.params)
+
+    def comm_record(self) -> CommRecord:
+        """The codec's cost report: measured uplink bits (summed encoded
+        ``WireMsg`` buffer sizes), the paper-style figure, and the f32
+        downlink."""
+        return self.codec().wire_bits(self.spec.params)
 
     # ---- eval wiring --------------------------------------------------
 

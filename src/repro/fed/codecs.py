@@ -1,0 +1,510 @@
+"""Typed uplink wire formats — what literally crosses the client→server wire.
+
+The paper's contribution IS a wire format: clients transmit a packed
+1-bit mask plus a 64-bit random seed instead of a float32 update.  This
+module makes that format (and every baseline's) a first-class, typed
+object instead of an accounting estimate:
+
+  :class:`WireMsg`      one client's encoded payload — a dict of real
+                        device buffers (packed words, seeds, scales,
+                        indices…) registered as a pytree, so it vmaps
+                        over a stacked client axis and flows through
+                        jitted round programs.  ``msg.bits`` is the
+                        summed buffer size — the *measured* wire cost.
+  :class:`UplinkCodec`  the protocol every algorithm family declares:
+
+      encode(payload)            -> WireMsg        (client side)
+      decode(msg)                -> payload        (inverse, lossless
+                                                    for mask/dense)
+      aggregate(stacked, weights)-> server update  (the ONLY way engine
+                                                    round bodies may
+                                                    cross the wire)
+      wire_bits(params)          -> CommRecord     (cost report: exact
+                                                    measured + paper +
+                                                    downlink bits)
+
+Built-ins:
+
+  :class:`MaskCodec`    packed 1-bit masks + the 64-bit noise seed
+                        (binary / signed, over the ``core/packing``
+                        Pallas bitpack kernels).  Its server aggregation
+                        optionally reduces mask COUNTS in the minimal
+                        integer dtype holding ``⌈log2(K+1)⌉`` bits
+                        (``count_dtype``) — on the pod mesh that lowers
+                        the cross-client collective to an integer-dtype
+                        all-reduce instead of f32.
+  :class:`SignCodec`    1-bit signs + a 32-bit per-leaf scale (SIGNSGD).
+  :class:`DenseCodec`   float32 passthrough (FedAvg; also the transport
+                        for compressors whose quantization happens
+                        in-body, with ``record`` reporting the quantized
+                        wire cost the f32 simulation stands in for).
+  :class:`SparseCodec`  top-k values + int32 indices (top-k /
+                        FedSparsify).
+
+``Algorithm.codec`` (a ``(cfg, params) -> UplinkCodec`` factory)
+replaces the deprecated ``uplink_record`` / ``uplink_kind`` fields;
+:func:`make_codec` derives a codec from the legacy fields for one
+release (parity-tested in ``tests/test_codecs.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import warnings
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import NoiseConfig, gen_noise
+from ..core.comm import CommRecord
+from ..core.packing import (tree_flat_layout, tree_num_params, tree_pack,
+                            tree_pack_stacked, tree_split_flat, tree_unpack,
+                            tree_unpack_counts, tree_unpack_stacked)
+
+Pytree = Any
+
+
+def template_of(params: Pytree) -> Pytree:
+    """Shape/dtype specs of a param pytree (what codecs close over)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(jnp.shape(x), x.dtype), params)
+
+
+def mask_count_bits(clients: int, *, signed: bool = False) -> int:
+    """Logical bit width of a K-client mask-count sum.
+
+    Binary masks sum to [0, K] → ``⌈log2(K+1)⌉`` bits; signed masks sum
+    to [-K, K] → one more for the sign.
+    """
+    if clients < 1:
+        raise ValueError(f"need at least one client, got {clients}")
+    span = 2 * clients + 1 if signed else clients + 1
+    return max(1, math.ceil(math.log2(span)))
+
+
+def min_count_dtype(clients: int):
+    """Smallest machine integer dtype holding a ±K mask-count sum.
+
+    The ``⌈log2(K+1)⌉``-bit wire format rounds up to the next machine
+    width — what the pod-path all-reduce actually moves.
+    """
+    if clients <= 127:
+        return jnp.int8
+    if clients <= 32767:
+        return jnp.int16
+    return jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# the wire message
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class WireMsg:
+    """One encoded uplink payload: named device buffers + codec tag.
+
+    A pytree (buffers are the children, ``codec`` + key order the static
+    aux data), so ``vmap``-ing a per-client ``encode`` yields ONE
+    ``WireMsg`` whose buffers carry a leading client axis — the
+    "stacked" message the server aggregates.
+    """
+
+    codec: str
+    buffers: Dict[str, jax.Array]
+
+    def tree_flatten(self):
+        keys = tuple(sorted(self.buffers))
+        return tuple(self.buffers[k] for k in keys), (self.codec, keys)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codec, keys = aux
+        return cls(codec, dict(zip(keys, children)))
+
+    @property
+    def bits(self) -> int:
+        """Summed buffer size in bits (static under jit — shapes only).
+
+        On a stacked message this is the K-client round total; divide by
+        the leading axis for the per-client cost.
+        """
+        return sum(
+            int(np.prod(jnp.shape(b)) or 1) * np.dtype(b.dtype).itemsize * 8
+            for b in self.buffers.values())
+
+
+def _weighted(wn: jax.Array, stacked: Pytree) -> Pytree:
+    """Σ_k wn_k · leaf[k] over the leading client axis (wn pre-scaled)."""
+    return jax.tree_util.tree_map(
+        lambda x: jnp.tensordot(wn, x.astype(jnp.float32), axes=1), stacked)
+
+
+# ---------------------------------------------------------------------------
+# the codec protocol
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class UplinkCodec:
+    """Base of every uplink wire format; subclasses implement the four
+    methods below.  ``record`` (when set) overrides the cost report —
+    used when the simulated transport (f32) stands in for a quantized
+    wire format whose true cost the codec still reports."""
+
+    template: Pytree
+    name: str = "codec"
+    record: Optional[CommRecord] = None
+
+    # --- the protocol ---------------------------------------------------
+    def encode(self, payload: Pytree) -> WireMsg:
+        raise NotImplementedError
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        raise NotImplementedError
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        """Stacked client messages + round weights → the server update."""
+        raise NotImplementedError
+
+    def wire_bits(self, params: Pytree) -> CommRecord:
+        """The codec's cost report: MEASURED uplink bits (summed encoded
+        buffer sizes via ``eval_shape`` — no FLOPs), the paper-style
+        figure, and the (uncompressed f32) downlink."""
+        if self.record is not None:
+            return self.record
+        P = tree_num_params(params)
+        return CommRecord(self.name, P, self.measured_bits(params),
+                          self._paper_bits(params), 32 * P)
+
+    # --- shared machinery ----------------------------------------------
+    def encode_stacked(self, payloads: Pytree) -> WireMsg:
+        """Encode a client-stacked payload (leading K axis on every
+        leaf) into one stacked message.  Default: ``vmap(encode)``;
+        subclasses override with batch kernels (one launch per round)."""
+        return jax.vmap(self.encode)(payloads)
+
+    def measured_bits(self, params: Pytree) -> int:
+        """Per-client wire bits measured from the encoded buffer shapes."""
+        msg = jax.eval_shape(self.encode, self.template_payload(params))
+        return msg.bits
+
+    def round_bits(self, stacked: WireMsg) -> float:
+        """K-client measured wire bits of one round's stacked message.
+
+        With a ``record`` override the report is K × the record's exact
+        bits (the f32 sim buffers are NOT the claimed wire format)."""
+        if self.record is not None:
+            k = jnp.shape(next(iter(stacked.buffers.values())))[0]
+            return float(k * self.record.uplink_bits)
+        return float(stacked.bits)
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        """A spec-level payload for ``eval_shape`` measurements."""
+        raise NotImplementedError
+
+    def _paper_bits(self, params: Pytree) -> int:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# built-in codecs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MaskCodec(UplinkCodec):
+    """Packed 1-bit masks (+ the 64-bit noise seed) — the paper's format.
+
+    ``payload = {"mask": pytree}`` (plus ``"seed"``: the client's PRNG
+    key, when ``noise`` is set).  ``aggregate`` semantics:
+
+      noise=None              Σ_k w'_k m_k   (mask-frequency aggregate —
+                              FedPM; ``normalize=False`` keeps raw
+                              weighted counts)
+      noise, shared_noise     G(s) ⊙ Σ_k w'_k m_k  (one regenerated
+                              noise tensor scales the mask count)
+      noise, per-client       Σ_k w'_k G(s_k) ⊙ m_k  (Eq. 5 — seeds come
+                              off the wire, noise regenerated per client)
+
+    ``count_dtype`` switches the count paths to an integer-dtype client
+    sum (``packing.tree_unpack_counts``): on the pod mesh the
+    cross-client collective then moves ``⌈log2(K+1)⌉``-bit integers, not
+    f32.  Only valid under UNIFORM weights (engines enforce this) and a
+    count-aggregatable format (``noise is None`` or ``shared_noise``).
+    """
+
+    mode: str = "binary"
+    noise: Optional[NoiseConfig] = None
+    shared_noise: bool = False
+    normalize: bool = True
+    count_dtype: Optional[Any] = None
+    backend: Optional[str] = None
+
+    @property
+    def carries_seed(self) -> bool:
+        return self.noise is not None
+
+    @property
+    def count_aggregatable(self) -> bool:
+        """Whether the server sum is a pure mask count (→ integer
+        all-reduce eligible): no noise, or one shared noise tensor."""
+        return self.noise is None or self.shared_noise
+
+    def encode(self, payload: Pytree) -> WireMsg:
+        bufs = {"words": tree_pack(payload["mask"], mode=self.mode,
+                                   backend=self.backend)}
+        if self.carries_seed:
+            bufs["seed"] = jax.random.key_data(payload["seed"])
+        return WireMsg(self.name, bufs)
+
+    def encode_stacked(self, payloads: Pytree) -> WireMsg:
+        bufs = {"words": tree_pack_stacked(payloads["mask"], mode=self.mode,
+                                           backend=self.backend)}
+        if self.carries_seed:
+            bufs["seed"] = jax.random.key_data(payloads["seed"])
+        return WireMsg(self.name, bufs)
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        out = {"mask": tree_unpack(msg.buffers["words"], self.template,
+                                   mode=self.mode, backend=self.backend)}
+        if "seed" in msg.buffers:
+            out["seed"] = jax.random.wrap_key_data(msg.buffers["seed"])
+        return out
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        words = stacked.buffers["words"]
+        wn = weights / jnp.sum(weights) if self.normalize else weights
+        if self.noise is not None and not self.shared_noise:
+            # Eq. (5) with per-client noise: decode every client, then
+            # the weighted sum — counts alone cannot express this.
+            masks = tree_unpack_stacked(words, self.template,
+                                        mode=self.mode,
+                                        backend=self.backend)
+            keys = jax.random.wrap_key_data(stacked.buffers["seed"])
+
+            def one(key, m_c):
+                noise = gen_noise(key, self.template, self.noise)
+                return jax.tree_util.tree_map(
+                    lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_c)
+
+            return _weighted(wn, jax.vmap(one)(keys, masks))
+
+        # count-aggregatable: Σ w'_k m_k, integer dtype when requested
+        if self.count_dtype is not None:
+            counts = tree_unpack_counts(words, self.template,
+                                        mode=self.mode,
+                                        dtype=self.count_dtype,
+                                        backend=self.backend)
+            m_avg = jax.tree_util.tree_map(
+                lambda c: c.astype(jnp.float32) * wn[0], counts)
+        else:
+            masks = tree_unpack_stacked(words, self.template,
+                                        mode=self.mode,
+                                        backend=self.backend)
+            m_avg = _weighted(wn, masks)
+        if self.noise is None:
+            return m_avg
+        key0 = jax.random.wrap_key_data(stacked.buffers["seed"])[0]
+        noise = gen_noise(key0, self.template, self.noise)
+        return jax.tree_util.tree_map(
+            lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        payload = {"mask": template_of(params)}
+        if self.carries_seed:
+            payload["seed"] = jax.random.key(0)
+        return payload
+
+    def _paper_bits(self, params: Pytree) -> int:
+        return tree_num_params(params)          # 1 bpp, headers ignored
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SignCodec(UplinkCodec):
+    """1-bit signs + one 32-bit L1 scale per leaf (the SIGNSGD format).
+
+    ``payload = {"value": pytree}`` — encode IS the compression (scale =
+    mean |leaf|, bit = value > 0), so routing a raw update through
+    encode → aggregate reproduces deterministic signSGD.  Exactly-zero
+    entries encode as sign −1: the 1-bit wire format cannot represent 0
+    (the old in-body roundtrip kept ``sign(0) == 0``, a value no 1-bit
+    uplink could actually transmit), so a parameter whose update is
+    identically zero now receives −scale like any negative entry.
+    """
+
+    backend: Optional[str] = None
+
+    def encode(self, payload: Pytree) -> WireMsg:
+        leaves = jax.tree_util.tree_leaves(payload["value"])
+        scale = jnp.stack(
+            [jnp.mean(jnp.abs(l.astype(jnp.float32))) for l in leaves])
+        return WireMsg(self.name, {
+            "words": tree_pack(payload["value"], mode="signed",
+                               backend=self.backend),
+            "scale": scale})
+
+    def encode_stacked(self, payloads: Pytree) -> WireMsg:
+        leaves = jax.tree_util.tree_leaves(payloads["value"])
+        scale = jnp.stack(
+            [jnp.mean(jnp.abs(l.astype(jnp.float32)),
+                      axis=tuple(range(1, l.ndim))) for l in leaves],
+            axis=1)                               # (K, L)
+        return WireMsg(self.name, {
+            "words": tree_pack_stacked(payloads["value"], mode="signed",
+                                       backend=self.backend),
+            "scale": scale})
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        signs = tree_unpack(msg.buffers["words"], self.template,
+                            mode="signed", backend=self.backend)
+        leaves, treedef = jax.tree_util.tree_flatten(signs)
+        scale = msg.buffers["scale"]
+        value = jax.tree_util.tree_unflatten(treedef, [
+            scale[i] * l.astype(jnp.float32) for i, l in enumerate(leaves)])
+        return {"value": value}
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        signs = tree_unpack_stacked(stacked.buffers["words"], self.template,
+                                    mode="signed", backend=self.backend)
+        scale = stacked.buffers["scale"]          # (K, L)
+        wn = weights / jnp.sum(weights)
+        leaves, treedef = jax.tree_util.tree_flatten(signs)
+        # Σ_k w'_k s_{k,l} m_{k,l} — fold the scale into the weights
+        out = [jnp.tensordot(wn * scale[:, i], l.astype(jnp.float32),
+                             axes=1) for i, l in enumerate(leaves)]
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        return {"value": template_of(params)}
+
+    def _paper_bits(self, params: Pytree) -> int:
+        return tree_num_params(params)          # 1 bpp, scales ignored
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class DenseCodec(UplinkCodec):
+    """Float32 passthrough — the 32 bpp FedAvg wire format.
+
+    One flat ``(P,)`` f32 buffer; also the transport for compressor
+    families whose quantization runs in the round body (``record`` then
+    reports the quantized cost the f32 buffer stands in for).
+    """
+
+    def encode(self, payload: Pytree) -> WireMsg:
+        flat = jnp.concatenate(
+            [l.reshape(-1).astype(jnp.float32)
+             for l in jax.tree_util.tree_leaves(payload["value"])])
+        return WireMsg(self.name, {"values": flat})
+
+    def encode_stacked(self, payloads: Pytree) -> WireMsg:
+        leaves = jax.tree_util.tree_leaves(payloads["value"])
+        K = jnp.shape(leaves[0])[0]
+        flat = jnp.concatenate(
+            [l.reshape(K, -1).astype(jnp.float32) for l in leaves], axis=1)
+        return WireMsg(self.name, {"values": flat})
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        split = tree_split_flat(msg.buffers["values"], self.template)
+        return {"value": jax.tree_util.tree_map(
+            lambda piece, leaf: piece.astype(leaf.dtype),
+            split, self.template)}
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        wn = weights / jnp.sum(weights)
+        agg = jnp.tensordot(wn, stacked.buffers["values"], axes=1)
+        return tree_split_flat(agg, self.template)   # f32, like _weighted
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        return {"value": template_of(params)}
+
+    def _paper_bits(self, params: Pytree) -> int:
+        return 32 * tree_num_params(params)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class SparseCodec(UplinkCodec):
+    """Top-k values + int32 indices per client (top-k / FedSparsify).
+
+    ``k = max(1, ceil(frac · n))`` PER LEAF (matching the compressors'
+    per-leaf thresholding); indices are global flat positions, so one
+    ``(Σk,)`` int32 + one ``(Σk,)`` f32 buffer form the message.
+    """
+
+    frac: float = 0.03
+
+    def _layout(self):
+        leaves, _, sizes, offsets = tree_flat_layout(self.template)
+        ks = [max(1, int(math.ceil(self.frac * n))) for n in sizes]
+        return leaves, sizes, ks, offsets
+
+    def encode(self, payload: Pytree) -> WireMsg:
+        leaves, _, ks, offsets = self._layout()
+        vals = jax.tree_util.tree_leaves(payload["value"])
+        idx_parts, val_parts = [], []
+        for leaf, k, off in zip(vals, ks, offsets):
+            flat = leaf.reshape(-1).astype(jnp.float32)
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            idx_parts.append(idx.astype(jnp.int32) + np.int32(off))
+            val_parts.append(jnp.take(flat, idx))
+        return WireMsg(self.name, {
+            "indices": jnp.concatenate(idx_parts),
+            "values": jnp.concatenate(val_parts)})
+
+    def _decode_flat(self, indices: jax.Array, values: jax.Array):
+        P = sum(self._layout()[1])
+        return jnp.zeros((P,), jnp.float32).at[indices].set(values)
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        flat = self._decode_flat(msg.buffers["indices"],
+                                 msg.buffers["values"])
+        split = tree_split_flat(flat, self.template)
+        return {"value": jax.tree_util.tree_map(
+            lambda piece, leaf: piece.astype(leaf.dtype),
+            split, self.template)}
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        wn = weights / jnp.sum(weights)
+        dense = jax.vmap(self._decode_flat)(stacked.buffers["indices"],
+                                            stacked.buffers["values"])
+        return tree_split_flat(jnp.tensordot(wn, dense, axes=1),
+                               self.template)
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        return {"value": template_of(params)}
+
+    def _paper_bits(self, params: Pytree) -> int:
+        return 32 * sum(self._layout()[2])       # values only, no indices
+
+
+# ---------------------------------------------------------------------------
+# deriving codecs from the deprecated Algorithm fields
+# ---------------------------------------------------------------------------
+
+def make_codec(algorithm, cfg, params: Pytree) -> UplinkCodec:
+    """The one entry point engines use to get an algorithm's codec.
+
+    ``algorithm.codec`` (a ``(cfg, params) -> UplinkCodec`` factory) wins;
+    otherwise a codec is DERIVED from the deprecated ``uplink_record`` /
+    ``uplink_kind`` fields — ``"mask"`` → a binary :class:`MaskCodec`,
+    else :class:`DenseCodec`, with ``uplink_record``'s figure preserved
+    as the cost report.  The derivation ships for one release; declare a
+    ``codec=`` factory instead.
+    """
+    if getattr(algorithm, "codec", None) is not None:
+        return algorithm.codec(cfg, params)
+    warnings.warn(
+        f"Algorithm {algorithm.name!r} declares no codec; deriving one "
+        "from the deprecated uplink_record/uplink_kind fields. Declare "
+        "codec=(cfg, params) -> UplinkCodec instead (repro.fed.codecs).",
+        DeprecationWarning, stacklevel=2)
+    record = None
+    if getattr(algorithm, "uplink_record", None) is not None:
+        bits = int(algorithm.uplink_record(cfg, params))
+        P = tree_num_params(params)
+        record = CommRecord(algorithm.name, P, bits, bits, 32 * P)
+    template = template_of(params)
+    if getattr(algorithm, "uplink_kind", None) == "mask":
+        return MaskCodec(template, name=algorithm.name, record=record,
+                         backend=getattr(cfg, "backend", None))
+    return DenseCodec(template, name=algorithm.name, record=record)

@@ -4,13 +4,17 @@ Algorithm families live in the plugin registry (``fed/algorithms.py``):
 each one exposes a PURE seeded round body
 
   body(seed, w, state, batches, picked, round_idx, weights)
-      -> (new_w, new_state, losses)            # losses: (K, S) device array
+      -> (new_w, new_state, losses[, wire_bits])   # losses: (K, S)
 
 in which the K selected clients run as a ``vmap`` over a stacked client
-axis — local PSM training, mask sampling, bit-packing (the Pallas-backed
-uplink hot path), and server aggregation fused end-to-end.  ``seed`` is a
-traced int32 scalar, which is what lets :func:`make_sweep_program` vmap a
-whole experiment over a seed axis with ONE compile.
+axis — local PSM training, mask sampling, and the family's typed uplink
+codec (client encode → stacked ``WireMsg`` → ``codec.aggregate``, the
+Pallas-backed bit-packing hot path) fused end-to-end.  ``wire_bits`` is
+the round's MEASURED K-client uplink (summed encoded buffer sizes);
+:func:`normalize_round_outputs` pads legacy 3-tuple bodies with the
+codec's static report so every driver records the same metric.  ``seed``
+is a traced int32 scalar, which is what lets :func:`make_sweep_program`
+vmap a whole experiment over a seed axis with ONE compile.
 
 This module composes those bodies into the execution drivers:
 
@@ -52,11 +56,41 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from .algorithms import (  # noqa: F401  (re-exported: legacy import site)
-    ALGORITHMS, Algorithm, FLConfig, fedpm_local, fedsparsify_local,
-    get_algorithm, list_algorithms, register_algorithm, uplink_bits,
+    ALGORITHMS, Algorithm, FLConfig, algorithm_codec, fedpm_local,
+    fedsparsify_local, get_algorithm, list_algorithms, register_algorithm,
+    uplink_bits,
 )
+from .codecs import make_codec
 
 Pytree = Any
+
+
+def normalize_round_outputs(out: Tuple, fallback_bits: float) -> Tuple:
+    """Uniform round-body result: ``(w, state, losses, wire_bits)``.
+
+    Codec-routed bodies already return the measured 4-tuple; legacy
+    3-tuple plugin bodies are padded with the codec's static wire-bit
+    report so every engine records ``uplink_bits_round`` the same way.
+    """
+    if len(out) == 4:
+        return out
+    w, state, losses = out
+    return w, state, losses, jnp.float32(fallback_bits)
+
+
+def _normalized_seeded_body(algo: Algorithm, loss_fn, cfg: FLConfig,
+                            params: Pytree):
+    """The registry body wrapped to the uniform 4-output contract."""
+    body = algo.make_round_body(loss_fn, cfg, params)
+    codec = make_codec(algo, cfg, params)
+    fallback = float(cfg.clients_per_round
+                     * codec.wire_bits(params).uplink_bits)
+
+    def seeded(seed, w, state, batches, picked, round_idx, weights):
+        out = body(seed, w, state, batches, picked, round_idx, weights)
+        return normalize_round_outputs(out, fallback)
+
+    return seeded
 
 
 def stack_client_batches(batches: list) -> Pytree:
@@ -79,9 +113,14 @@ def make_round_body(
     :func:`make_round_engine`, scanned by :func:`make_experiment_program`.
     The registry body's ``seed`` argument is bound to ``cfg.seed`` here —
     use :func:`make_sweep_program` when seeds must stay a traced axis.
+    Returns the NORMALISED body: always
+    ``(new_w, new_state, losses, wire_bits)``, where ``wire_bits`` is the
+    round's measured K-client uplink (codec-routed bodies measure it from
+    the encoded ``WireMsg`` buffers; legacy 3-tuple bodies get the
+    codec's static report).
     """
     algo = get_algorithm(cfg.algorithm)
-    seeded = algo.make_round_body(loss_fn, cfg, params)
+    seeded = _normalized_seeded_body(algo, loss_fn, cfg, params)
     round_fn = partial(seeded, jnp.int32(cfg.seed))
     return round_fn, algo.init_state(cfg, params)
 
@@ -149,9 +188,8 @@ def _make_chunk_body(
 ) -> Tuple[Callable, Dict[str, Pytree], Dict[str, jax.Array]]:
     """The un-jitted seeded chunk runner shared by every scan driver."""
     algo = get_algorithm(cfg.algorithm)
-    round_body = algo.make_round_body(loss_fn, cfg, params)
+    round_body = _normalized_seeded_body(algo, loss_fn, cfg, params)
     state0 = algo.init_state(cfg, params)
-    bits_round = float(cfg.clients_per_round * uplink_bits(cfg, params))
     cw = None if client_weights is None else list(client_weights)
     if cw is not None and len(cw) != cfg.num_clients:
         # must fail here: inside jit, weights_all[picked] would silently
@@ -159,6 +197,12 @@ def _make_chunk_body(
         raise ValueError(
             f"client_weights has {len(cw)} entries, "
             f"cfg expects {cfg.num_clients}")
+    if cfg.int_mask_agg and cw is not None:
+        # the integer mask-count aggregate folds ONE weight scalar over
+        # the summed counts — per-client weights need the f32 path
+        raise ValueError(
+            "int_mask_agg requires uniform client weights "
+            "(client_weights=None)")
     weights_all = jnp.asarray([1.0] * cfg.num_clients if cw is None else cw,
                               jnp.float32)
 
@@ -168,11 +212,13 @@ def _make_chunk_body(
         batches = data.gather_batches(r, picked, steps=cfg.local_steps,
                                       batch=cfg.batch_size)
         weights = weights_all[picked]
-        w, state, losses = round_body(seed, w, state, batches, picked, r,
-                                      weights)
+        w, state, losses, wire_bits = round_body(seed, w, state, batches,
+                                                 picked, r, weights)
         metrics = dict(metrics)
         metrics["loss"] = metrics["loss"].at[r].set(jnp.mean(losses[:, -1]))
-        metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(bits_round)
+        # MEASURED wire cost: summed encoded WireMsg buffer sizes, not a
+        # precomputed estimate (a constant in-program — shapes are static)
+        metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(wire_bits)
         if eval_program is not None:
             do_eval = (r % eval_every == 0) | (r == cfg.rounds - 1)
             acc = jax.lax.cond(do_eval, eval_program,

@@ -11,7 +11,14 @@ aggregation), and exists for exactly two purposes:
   2. the looped-vs-batched engine benchmark (``benchmarks`` entry
      ``engine/*``), which quantifies the rounds/sec win.
 
-Production callers should use ``run_federated`` (batched) instead.
+The SERVER side goes through the family's typed uplink codec exactly
+like the fused engines: per-client payloads are encoded into a stacked
+:class:`~repro.fed.codecs.WireMsg` and aggregated with
+``codec.aggregate`` — so ``uplink_bits_round`` here is the same MEASURED
+quantity (summed encoded buffer sizes per round) every engine reports,
+not a precomputed ``[K * estimate] * R`` constant list.
+
+Production callers should use the Experiment API (scan engine) instead.
 """
 from __future__ import annotations
 
@@ -24,11 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core import (NoiseConfig, client_local_update, gen_noise,
-                    make_compressor, server_aggregate,
-                    server_aggregate_updates, sgd_local_update,
+                    make_compressor, mix_add, sgd_local_update,
                     tree_num_params)
+from .algorithms import _CODEC_COMPRESSORS
+from .codecs import WireMsg, make_codec
 from .engine import (FLConfig, fedpm_local, fedsparsify_local,
-                     make_client_schedule, uplink_bits)
+                     get_algorithm, make_client_schedule,
+                     stack_client_batches, uplink_bits)
 
 Pytree = Any
 
@@ -52,19 +61,31 @@ def run_federated_looped(
             f"engine='looped' is the seed-era reference loop and only "
             f"supports the built-in families; run registered plugin "
             f"algorithm {cfg.algorithm!r} on engine='scan' or 'batched'")
+    if cfg.int_mask_agg and client_weights is not None:
+        # same guard as the scan chunk body: the integer count aggregate
+        # folds ONE weight scalar — per-client weights need the f32 path
+        raise ValueError(
+            "int_mask_agg requires uniform client weights "
+            "(client_weights=None)")
     # the same precomputed seed-stable (R, K) selection every engine uses
     if schedule is None:
         schedule = make_client_schedule(cfg)
     w = init_params
     mrn_cfg = cfg.fedmrn_config()
+    codec = make_codec(get_algorithm(cfg.algorithm), cfg, init_params)
     history: Dict[str, Any] = {
         "algorithm": cfg.algorithm, "engine": "looped",
         "acc": [], "round": [],
         "local_loss": [], "uplink_bits_per_client": uplink_bits(cfg, w),
+        "uplink_bits_round": [],
         "params": tree_num_params(w), "schedule": schedule,
     }
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
+    # one jitted server step per family: stacked WireMsg → update
+    # (encode is unused by fedmrn, whose clients ship packed masks already)
+    aggregate = jax.jit(codec.aggregate)
+    encode = jax.jit(codec.encode_stacked)
 
     # jitted workers (compiled once, reused by every client/round)
     if cfg.algorithm in ("fedmrn", "fedmrns"):
@@ -80,7 +101,11 @@ def run_federated_looped(
                                    frac=cfg.sparsify_frac))
     else:
         local_sgd = jax.jit(partial(sgd_local_update, loss_fn, lr=cfg.lr))
-        compressor = (None if cfg.algorithm == "fedavg" else
+        # signsgd/topk: the CODEC is the compression (encode quantizes) —
+        # same as the fused engines; stochastic quantizers still
+        # roundtrip per client before the DenseCodec transport
+        compressor = (None if cfg.algorithm in ("fedavg",)
+                      + _CODEC_COMPRESSORS else
                       make_compressor(cfg.algorithm,
                                       topk_frac=cfg.topk_frac,
                                       qsgd_bits=cfg.qsgd_bits,
@@ -93,6 +118,7 @@ def run_federated_looped(
     for rnd in range(cfg.rounds):
         picked = schedule[rnd]
         weights = [client_weights[c] for c in picked]
+        weights_dev = jnp.asarray(weights, jnp.float32)
         losses = []
 
         if cfg.algorithm in ("fedmrn", "fedmrns"):
@@ -109,24 +135,31 @@ def run_federated_looped(
                     residuals[int(cid)] = res.residual
                 results.append(res)
                 losses.append(float(res.losses[-1]))
-            w = server_aggregate(w, results, weights, cfg=mrn_cfg)
+            # clients already ship the wire format: stack it directly
+            msg = WireMsg(codec.name, {
+                "words": jnp.stack([r.packed_mask for r in results]),
+                "seed": jnp.stack([jax.random.key_data(r.seed_key)
+                                   for r in results])})
+            w = jax.tree_util.tree_map(mix_add, w,
+                                       aggregate(msg, weights_dev))
 
         elif cfg.algorithm == "fedpm":
-            mask_sum = jax.tree_util.tree_map(jnp.zeros_like, scores_global)
-            tot = 0.0
+            masks_all = []
             for cid in picked:
                 batches = client_batch_fn(rnd, int(cid))
                 masks, ls = local_pm(
                     w_frozen, scores_global, batches,
                     key=jax.random.fold_in(jax.random.key(cfg.seed + 2),
                                            rnd * 1000 + int(cid)))
-                mask_sum = jax.tree_util.tree_map(jnp.add, mask_sum, masks)
-                tot += 1.0
+                masks_all.append(masks)
                 losses.append(float(ls[-1]))
-            # Beta(1,1)-posterior estimate — see engine._make_fedpm_round
+            K = len(masks_all)
+            msg = encode({"mask": stack_client_batches(masks_all)})
+            # vote counts, client_weights ignored — see _fedpm_body
+            m_sum = aggregate(msg, jnp.ones((K,), jnp.float32))
+            # Beta(1,1)-posterior estimate — see algorithms._fedpm_body
             probs = jax.tree_util.tree_map(
-                lambda m: (m.astype(jnp.float32) + 1.0) / (tot + 2.0),
-                mask_sum)
+                lambda s: (s + 1.0) / (K + 2.0), m_sum)
             scores_global = jax.tree_util.tree_map(
                 lambda p_: jnp.log(p_ / (1 - p_)), probs)   # sigmoid^-1
             w = jax.tree_util.tree_map(
@@ -139,8 +172,10 @@ def run_federated_looped(
                 w_local, ls = local_sp(w, batches)
                 ws.append(w_local)
                 losses.append(float(ls[-1]))
-            zero = jax.tree_util.tree_map(jnp.zeros_like, w)
-            w = server_aggregate_updates(zero, ws, weights)
+            msg = encode({"value": stack_client_batches(ws)})
+            agg = aggregate(msg, weights_dev)
+            w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
+                                       w, agg)
 
         else:  # fedavg + post-training compressors
             updates = []
@@ -153,15 +188,16 @@ def run_federated_looped(
                         rnd * 1000 + int(cid)))
                 updates.append(u)
                 losses.append(float(ls[-1]))
-            w = server_aggregate_updates(w, updates, weights)
+            msg = encode({"value": stack_client_batches(updates)})
+            w = jax.tree_util.tree_map(mix_add, w,
+                                       aggregate(msg, weights_dev))
 
         history["local_loss"].append(float(np.mean(losses)))
+        # measured per-round wire bits: what the stacked message occupies
+        history["uplink_bits_round"].append(codec.round_bits(msg))
         if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
-    history["uplink_bits_round"] = (
-        [float(cfg.clients_per_round * history["uplink_bits_per_client"])]
-        * cfg.rounds)
     # one jitted local-update dispatch per (round, client) — the engine
     # overhead the batched/scan drivers collapse
     history["num_dispatches"] = cfg.rounds * cfg.clients_per_round

@@ -24,6 +24,7 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import INPUT_SHAPES, get_config, list_archs, shape_applicable
 from ..models.registry import (build_model, cache_specs, input_specs,
@@ -105,17 +106,22 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     b_shard = batch_shardings(specs["batch"], mesh)
 
     if sharded:
-        from ..fed import FLConfig, get_algorithm
+        from ..fed import FLConfig, MaskCodec, get_algorithm, make_codec
+        from ..fed.codecs import mask_count_bits, min_count_dtype
         from ..fed.sharded import (PodRoundSpec, client_axis_of,
                                    make_pod_round, pod_batch_specs,
                                    pod_param_shardings)
         C = mesh.shape[client_axis_of(mesh)]
         algo = get_algorithm(fed_algo)
-        # mask families default to shared noise on the pod path: the
-        # cross-client collective carries mask counts, not f32 updates
+        # mask-codec families default to shared noise on the pod path:
+        # the cross-client collective then carries integer mask counts
+        # (int_mask_agg auto-enables inside make_pod_round)
+        probe_codec = make_codec(algo, FLConfig(algorithm=fed_algo),
+                                 p_specs)
+        is_mask = isinstance(probe_codec, MaskCodec)
         flc = FLConfig(algorithm=fed_algo, num_clients=C,
                        clients_per_round=C, local_steps=2,
-                       shared_noise=(algo.uplink_kind == "mask"))
+                       shared_noise=is_mask)
         fb_specs = pod_batch_specs(
             {k: v for k, v in specs["batch"].items() if k != "positions3"},
             C, flc.local_steps)
@@ -128,6 +134,17 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
             batch_specs=fb_specs)
         rec["fed_rounds"] = fed_rounds
         rec["algorithm"] = fed_algo
+        # the codec as the pod program runs it (flc carries the pod
+        # shared-noise default, so fedmrn IS count-aggregatable here)
+        pod_codec = make_codec(algo, flc, p_specs)
+        rec["codec"] = type(pod_codec).__name__
+        rec["uplink"] = pod_codec.wire_bits(p_specs).row()
+        if is_mask and pod_codec.count_aggregatable:
+            # the wire format the pod aggregation uses for mask counts
+            rec["mask_agg"] = {
+                "logical_bits": mask_count_bits(C),
+                "dtype": np.dtype(min_count_dtype(C)).name,
+            }
     elif shape.kind == "train":
         hp = TrainHParams(microbatches=MICROBATCHES.get(arch, 1))
         step = step_for_kind(model, "train", hp)
@@ -172,6 +189,12 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     hlo = compiled.as_text()
     coll = hlo_analysis.analyze(hlo)
     promo = _f32_promotion_bytes(hlo)
+    if sharded:
+        # element dtypes crossing the client axis: for count-aggregatable
+        # mask codecs the big all-reduce must be integer (s8/s16), the
+        # acceptance probe of the ⌈log2(K+1)⌉-bit wire format
+        rec["allreduce_dtypes"] = sorted(set(
+            re.findall(r"= (\w+)\[[0-9,]*\][^=\n]*all-reduce", hlo)))
 
     rec.update(
         status="ok",
@@ -257,21 +280,30 @@ def main():
     if args.list_algorithms:
         # the simulation registry — every name here is runnable through
         # the Experiment API AND lowerable on the pod path (--sharded
-        # --algo <name>)
+        # --algo <name>).  One row per entry: the codec's comm table
+        # (CommRecord.row(): exact MEASURED bpp, paper-style bpp,
+        # downlink) on a small CNN probe model.
         import dataclasses as _dc
 
-        from ..fed import FLConfig, get_algorithm, list_algorithms
+        from ..fed import FLConfig, get_algorithm, list_algorithms, make_codec
         from ..models.cnn import cnn_init
         probe = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
-        n_params = sum(int(jnp.size(l))
-                       for l in jax.tree_util.tree_leaves(probe))
         cfg0 = FLConfig()
-        print(f"{'algorithm':12s} {'uplink bits/param':>18s}")
+        header = (f"{'algorithm':12s} {'codec':12s} {'bpp':>8s} "
+                  f"{'bpp(paper)':>10s} {'uplink MB':>10s} "
+                  f"{'downlink Mb':>12s} {'compr x':>8s}")
+        print(header)
         for name in list_algorithms():
             algo = get_algorithm(name)
             cfg = _dc.replace(cfg0, algorithm=name)
-            bpp = algo.uplink_record(cfg, probe) / n_params
-            print(f"{name:12s} {bpp:18.3f}")
+            codec = make_codec(algo, cfg, probe)
+            row = codec.wire_bits(probe).row()
+            print(f"{name:12s} {type(codec).__name__:12s} "
+                  f"{row['uplink_bpp']:8.3f} "
+                  f"{row['uplink_bpp_paper']:10.3f} "
+                  f"{row['uplink_MB']:10.4f} "
+                  f"{row['downlink_bits'] / 1e6:12.3f} "
+                  f"{row['compression_x']:8.2f}")
         return
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]

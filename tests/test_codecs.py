@@ -1,0 +1,329 @@
+"""Typed uplink codecs (ISSUE 5): encode→decode roundtrips, aggregate
+semantics (incl. the integer mask-count path), measured wire accounting
+vs the legacy estimates, the deprecated-field derivation shim, and the
+pack→unpack hypothesis property (ref ≡ pallas-interpret bitwise)."""
+import dataclasses
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    # hypothesis is a pinned requirement (requirements.txt) and the
+    # property tests are tier-1 in CI: REPRO_REQUIRE_HYPOTHESIS=1 there
+    # makes a missing install a hard failure instead of a skip.
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS", "") not in ("", "0"):
+        raise
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (NoiseConfig, client_round_key, fedmrn_record,
+                        gen_noise, tree_num_params)
+from repro.core.packing import pack_rows, tree_unpack_counts, unpack_rows
+from repro.fed import (ALGORITHMS, Algorithm, DenseCodec, MaskCodec,
+                       SignCodec, SparseCodec, WireMsg, FLConfig,
+                       algorithm_codec, make_codec, mask_count_bits,
+                       min_count_dtype, register_algorithm, template_of,
+                       uplink_bits)
+
+KEY = jax.random.key(0)
+
+TREE = {"w": jnp.zeros((33, 9)), "b": jnp.zeros((5,)),
+        "deep": {"c": jnp.zeros((40, 7))}}
+P = tree_num_params(TREE)
+
+
+def _tree_equal(a, b):
+    jax.tree_util.tree_map(
+        lambda x, y: np.testing.assert_array_equal(np.asarray(x),
+                                                   np.asarray(y)), a, b)
+
+
+def _random_mask(key, mode):
+    vals = jax.tree_util.tree_map(
+        lambda l: jax.random.bernoulli(key, 0.5, l.shape), TREE)
+    if mode == "signed":
+        return jax.tree_util.tree_map(
+            lambda m: (2 * m.astype(jnp.int8) - 1), vals)
+    return jax.tree_util.tree_map(lambda m: m.astype(jnp.int8), vals)
+
+
+# ---------------------------------------------------------------------------
+# encode → decode roundtrips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["binary", "signed"])
+def test_mask_codec_roundtrip(mode):
+    codec = MaskCodec(template_of(TREE), name="m", mode=mode,
+                      noise=NoiseConfig())
+    mask = _random_mask(KEY, mode)
+    seed = client_round_key(3, 1, 2)
+    msg = codec.encode({"mask": mask, "seed": seed})
+    assert set(msg.buffers) == {"words", "seed"}
+    assert msg.buffers["seed"].size * 32 == 64      # the 64-bit seed
+    out = codec.decode(msg)
+    _tree_equal(out["mask"], mask)
+    np.testing.assert_array_equal(jax.random.key_data(out["seed"]),
+                                  jax.random.key_data(seed))
+
+
+def test_dense_codec_roundtrip_and_bits():
+    codec = DenseCodec(template_of(TREE), name="d")
+    value = gen_noise(KEY, TREE, NoiseConfig(alpha=1.0))
+    msg = codec.encode({"value": value})
+    assert msg.bits == 32 * P                        # f32 passthrough
+    _tree_equal(codec.decode(msg)["value"], value)
+
+
+def test_sign_codec_roundtrip():
+    """decode(encode(u)) == mean|u| · sign(u) — encode IS signSGD."""
+    codec = SignCodec(template_of(TREE), name="s")
+    u = gen_noise(KEY, TREE, NoiseConfig(alpha=1.0))
+    out = codec.decode(codec.encode({"value": u}))["value"]
+    expected = jax.tree_util.tree_map(
+        lambda l: jnp.mean(jnp.abs(l)) * jnp.where(l > 0, 1.0, -1.0), u)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(np.asarray(a),
+                                                np.asarray(b), rtol=1e-6),
+        out, expected)
+
+
+def test_sparse_codec_roundtrip_on_sparse_input():
+    """A tree with ≤ k nonzeros per leaf decodes back exactly."""
+    codec = SparseCodec(template_of(TREE), name="k", frac=0.1)
+    dense = gen_noise(KEY, TREE, NoiseConfig(alpha=1.0))
+
+    def keep_topk(l, frac=0.1):
+        flat = jnp.abs(l).reshape(-1)
+        k = max(1, int(np.ceil(frac * flat.shape[0])))
+        thresh = jax.lax.top_k(flat, k)[0][-1]
+        return jnp.where(jnp.abs(l) >= thresh, l, 0.0)
+
+    sparse = jax.tree_util.tree_map(keep_topk, dense)
+    out = codec.decode(codec.encode({"value": sparse}))["value"]
+    _tree_equal(out, sparse)
+    # measured: 32-bit value + 32-bit index per kept element
+    ks = [max(1, int(np.ceil(0.1 * (np.prod(l.shape) or 1))))
+          for l in jax.tree_util.tree_leaves(TREE)]
+    assert codec.encode({"value": sparse}).bits == 64 * sum(ks)
+
+
+def test_encode_stacked_rows_match_per_client():
+    """Stacked encoding (one kernel launch) row k == client k's encode."""
+    codec = MaskCodec(template_of(TREE), name="m", noise=NoiseConfig())
+    K = 3
+    masks = [_random_mask(jax.random.key(i), "binary") for i in range(K)]
+    seeds = [client_round_key(0, 0, i) for i in range(K)]
+    stacked = codec.encode_stacked({
+        "mask": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *masks),
+        "seed": jnp.stack(seeds)})
+    for k in range(K):
+        single = codec.encode({"mask": masks[k], "seed": seeds[k]})
+        np.testing.assert_array_equal(
+            np.asarray(stacked.buffers["words"][k]),
+            np.asarray(single.buffers["words"]))
+    assert stacked.bits == K * single.bits
+
+
+# ---------------------------------------------------------------------------
+# aggregate semantics — incl. the ⌈log2(K+1)⌉-bit integer count path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["binary", "signed"])
+def test_mask_count_aggregate_matches_f32_path(mode):
+    """Integer-dtype count aggregation ≡ the f32 weighted sum (shared
+    noise), for binary and signed masks."""
+    noise_cfg = NoiseConfig(alpha=0.1)
+    K = 8
+    masks = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[_random_mask(jax.random.key(i), mode) for i in range(K)])
+    seed = client_round_key(0, 0, 0)
+    seeds = jnp.stack([seed] * K)
+    weights = jnp.ones((K,), jnp.float32)
+    mk = lambda dt: MaskCodec(template_of(TREE), name="m", mode=mode,
+                              noise=noise_cfg, shared_noise=True,
+                              count_dtype=dt)
+    msg = mk(None).encode_stacked({"mask": masks, "seed": seeds})
+    f32 = mk(None).aggregate(msg, weights)
+    i8 = mk(min_count_dtype(K)).aggregate(msg, weights)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-7), f32, i8)
+
+
+def test_tree_unpack_counts_dtype_and_values():
+    K = 5
+    bits = jax.random.bernoulli(KEY, 0.5, (K, 70))
+    words = pack_rows(bits.astype(jnp.int8))
+    like = {"a": jnp.zeros((70,))}
+    counts = tree_unpack_counts(words, like, dtype=jnp.int8)
+    assert counts["a"].dtype == jnp.int8
+    np.testing.assert_array_equal(
+        np.asarray(counts["a"]),
+        np.asarray(jnp.sum(bits, axis=0)).astype(np.int8))
+
+
+def test_mask_count_bits_and_min_dtype():
+    assert mask_count_bits(1) == 1
+    assert mask_count_bits(7) == 3
+    assert mask_count_bits(8) == 4          # ⌈log2(9)⌉
+    assert mask_count_bits(8, signed=True) == 5
+    assert min_count_dtype(8) == jnp.int8
+    assert min_count_dtype(127) == jnp.int8
+    assert min_count_dtype(128) == jnp.int16
+    assert min_count_dtype(40000) == jnp.int32
+    with pytest.raises(ValueError):
+        mask_count_bits(0)
+
+
+def test_per_client_noise_aggregate_regenerates_from_wire_seeds():
+    """Eq. (5): the server update comes entirely off the wire — masks
+    from the packed words, noise regenerated from the shipped seeds."""
+    noise_cfg = NoiseConfig(alpha=0.1)
+    codec = MaskCodec(template_of(TREE), name="m", noise=noise_cfg)
+    K = 4
+    masks = [_random_mask(jax.random.key(i), "binary") for i in range(K)]
+    seeds = [client_round_key(0, 2, i) for i in range(K)]
+    msg = codec.encode_stacked({
+        "mask": jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *masks),
+        "seed": jnp.stack(seeds)})
+    weights = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    agg = codec.aggregate(msg, weights)
+    wn = np.asarray(weights) / np.sum(np.asarray(weights))
+    expected = jax.tree_util.tree_map(lambda l: jnp.zeros(l.shape), TREE)
+    for k in range(K):
+        nz = gen_noise(seeds[k], TREE, noise_cfg)
+        expected = jax.tree_util.tree_map(
+            lambda e, n, m: e + wn[k] * n * m.astype(jnp.float32),
+            expected, nz, masks[k])
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), atol=1e-6), agg, expected)
+
+
+# ---------------------------------------------------------------------------
+# measured wire accounting vs the legacy estimates (satellite)
+# ---------------------------------------------------------------------------
+
+def test_fedmrn_record_matches_mask_codec_measurement():
+    """comm.fedmrn_record (one 64-bit per-client seed, word-padded
+    masks) == what MaskCodec measures from its encoded buffers."""
+    codec = MaskCodec(template_of(TREE), name="fedmrn",
+                      noise=NoiseConfig())
+    rec = codec.wire_bits(TREE)
+    legacy = fedmrn_record(P)
+    assert rec.uplink_bits == legacy.uplink_bits == 32 * ((P + 31) // 32) + 64
+    assert rec.uplink_bits_paper == legacy.uplink_bits_paper == P
+    assert rec.downlink_bits == legacy.downlink_bits == 32 * P
+    row = rec.row()
+    assert {"uplink_bpp", "uplink_bpp_paper", "downlink_bits"} <= set(row)
+
+
+def test_fedpm_measured_differs_from_legacy_estimate():
+    """uplink_bits is MEASURED (word-padded packed buffer), not the old
+    P + 32·L signsgd-style estimate."""
+    cfg = FLConfig(algorithm="fedpm")
+    bits = uplink_bits(cfg, TREE)
+    L = len(jax.tree_util.tree_leaves(TREE))
+    assert bits == 32 * ((P + 31) // 32)             # packed words only
+    assert bits != P + 32 * L                        # the old estimate
+
+
+def test_experiment_codec_types():
+    for name, cls in [("fedmrn", MaskCodec), ("fedmrns", MaskCodec),
+                      ("fedpm", MaskCodec), ("fedavg", DenseCodec),
+                      ("signsgd", SignCodec), ("topk", SparseCodec),
+                      ("fedsparsify", SparseCodec), ("qsgd", DenseCodec)]:
+        codec = algorithm_codec(FLConfig(algorithm=name), TREE)
+        assert isinstance(codec, cls), name
+    # quantizers that roundtrip in-body keep their exact cost report
+    qs = algorithm_codec(FLConfig(algorithm="qsgd", qsgd_bits=2), TREE)
+    assert qs.record is not None
+    assert qs.wire_bits(TREE).uplink_bits == qs.record.uplink_bits
+
+
+# ---------------------------------------------------------------------------
+# the deprecated uplink_record / uplink_kind derivation shim
+# ---------------------------------------------------------------------------
+
+def test_make_codec_derives_from_deprecated_fields():
+    legacy_dense = Algorithm(
+        name="legacy_dense", make_round_body=lambda *a: None,
+        uplink_record=lambda cfg, p: 16 * tree_num_params(p))
+    legacy_mask = Algorithm(
+        name="legacy_mask", make_round_body=lambda *a: None,
+        uplink_record=lambda cfg, p: tree_num_params(p),
+        uplink_kind="mask")
+    cfg = FLConfig()
+    with pytest.warns(DeprecationWarning, match="codec"):
+        d = make_codec(legacy_dense, cfg, TREE)
+    assert isinstance(d, DenseCodec)
+    assert d.wire_bits(TREE).uplink_bits == 16 * P   # record preserved
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        m = make_codec(legacy_mask, cfg, TREE)
+    assert isinstance(m, MaskCodec) and m.count_aggregatable
+    assert m.wire_bits(TREE).uplink_bits == P
+
+
+def test_register_requires_codec_or_record():
+    with pytest.raises(ValueError, match="codec"):
+        register_algorithm(Algorithm(name="no_wire",
+                                     make_round_body=lambda *a: None))
+    assert "no_wire" not in ALGORITHMS
+
+
+def test_int_mask_agg_validation():
+    """fedmrn with per-client noise cannot count-aggregate; non-uniform
+    weights cannot fold into the single count scale."""
+    from repro.fed import get_algorithm
+    cfg = FLConfig(algorithm="fedmrn", int_mask_agg=True)
+    with pytest.raises(ValueError, match="shared_noise"):
+        get_algorithm("fedmrn").validate(cfg)
+    get_algorithm("fedmrn").validate(
+        dataclasses.replace(cfg, shared_noise=True))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: pack→unpack roundtrip (satellite)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(n_bits=st.integers(1, 300).filter(lambda n: n % 32 != 0),
+           rows=st.integers(1, 4),
+           mode=st.sampled_from(["binary", "signed"]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_pack_unpack_roundtrip_property(n_bits, rows, mode, seed):
+        """pack_rows→unpack_rows is the identity for ANY length not
+        divisible by 32, binary and signed, and the ref backend is
+        bitwise-identical to pallas-interpret."""
+        bits = np.asarray(
+            jax.random.bernoulli(jax.random.key(seed), 0.5,
+                                 (rows, n_bits))).astype(np.int8)
+        ref_words = pack_rows(jnp.asarray(bits), backend="ref")
+        pal_words = pack_rows(jnp.asarray(bits), backend="pallas")
+        np.testing.assert_array_equal(np.asarray(ref_words),
+                                      np.asarray(pal_words))
+        for backend in ("ref", "pallas"):
+            out = unpack_rows(ref_words, n_bits, backend=backend)
+            np.testing.assert_array_equal(np.asarray(out), bits)
+            if mode == "signed":
+                signed = (2 * out - 1).astype(np.int8)
+                np.testing.assert_array_equal(
+                    np.asarray(signed), 2 * bits - 1)
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis missing — pinned in "
+                             "requirements.txt; install to run "
+                             "(REPRO_REQUIRE_HYPOTHESIS=1 raises instead)")
+    def test_pack_unpack_roundtrip_property():
+        pass

@@ -77,6 +77,21 @@ def test_engine_history_matches_golden_schema(experiment, engine):
         "repro.fed.api.HISTORY_KEYS together")
 
 
+def test_uplink_bits_round_is_measured_and_equal_across_engines(experiment):
+    """Satellite (ISSUE 5): every engine reports the MEASURED per-round
+    wire bits — K × the codec's encoded WireMsg size, identical across
+    scan/batched/looped (the looped engine used to emit a precomputed
+    ``[K * estimate] * R`` constant list)."""
+    codec = experiment.codec()
+    per_client = codec.wire_bits(experiment.spec.params).uplink_bits
+    K, R = experiment.cfg.clients_per_round, experiment.cfg.rounds
+    expected = [float(K * per_client)] * R
+    for engine in ("scan", "batched", "looped"):
+        hist = experiment.run(engine=engine).to_history()
+        assert hist["uplink_bits_round"] == expected, engine
+        assert hist["uplink_bits_per_client"] == per_client, engine
+
+
 @pytest.mark.parametrize("sweep_kw", [
     dict(),                                    # vmapped
     dict(sharding="devices"),                  # shard_map over the seed mesh

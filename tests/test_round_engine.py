@@ -97,13 +97,18 @@ def test_round_program_single_dispatch():
     picked = jnp.arange(K, dtype=jnp.int32)
     weights = jnp.ones((K,), jnp.float32)
     for rnd in range(2):
-        w, state, losses = round_fn(params, state, batches, picked,
-                                    jnp.int32(rnd), weights)
+        w, state, losses, wire_bits = round_fn(params, state, batches,
+                                               picked, jnp.int32(rnd),
+                                               weights)
     # vmap traces the per-client body ONCE per grad pass, not K times —
     # and round 2 reuses the compiled program (no retrace)
     assert len(traces) <= 4, f"loss_fn traced {len(traces)} times"
     assert isinstance(losses, jax.Array)
     assert losses.shape == (K, cfg.local_steps)
+    # the 4th output is the round's measured K-client wire cost
+    from repro.fed import algorithm_codec
+    codec = algorithm_codec(cfg, params)
+    assert float(wire_bits) == K * codec.wire_bits(params).uplink_bits
 
 
 # ---------------------------------------------------------------------------

@@ -64,7 +64,7 @@ def _specs_of(tree):
 
 
 def _pod_program(cfg, loss_fn, params, ds, rounds_fused=1,
-                 client_weights=None):
+                 client_weights=None, int_mask_agg=None):
     """(jitted pod step, batch gather fn, initial state) on _pod_mesh."""
     mesh = _pod_mesh()
     gather = jax.jit(lambda r, p: ds.gather_batches(
@@ -74,7 +74,8 @@ def _pod_program(cfg, loss_fn, params, ds, rounds_fused=1,
     step, arg_specs, in_sh = make_pod_round(
         cfg.algorithm, mesh, PodRoundSpec(config=cfg, rounds=rounds_fused),
         loss_fn=loss_fn, p_specs=_specs_of(params),
-        batch_specs=_specs_of(b0), client_weights=client_weights)
+        batch_specs=_specs_of(b0), client_weights=client_weights,
+        int_mask_agg=int_mask_agg)
     algo = get_algorithm(cfg.algorithm)
     return (jax.jit(step, in_shardings=in_sh), gather,
             algo.init_state(cfg, params))
@@ -235,6 +236,85 @@ def test_pod_runs_custom_plugin():
         assert changed
     finally:
         ALGORITHMS.pop("toy_pod", None)
+
+
+# ---------------------------------------------------------------------------
+# the codec wire format on the pod path (ISSUE 5 acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm, overrides", [
+    ("fedmrn", {"shared_noise": True}),
+    ("fedpm", {}),
+])
+def test_pod_int_mask_agg_matches_f32_reference(algorithm, overrides):
+    """The ⌈log2(K+1)⌉-bit integer mask-count aggregate (the pod default
+    for count-aggregatable MaskCodec families) reproduces the f32
+    reference aggregation — same trajectories over R rounds."""
+    loss_fn, params, ds, cfg = _setup(algorithm, **overrides)
+    schedule = jnp.asarray(make_client_schedule(cfg), jnp.int32)
+    int_step, gather, state_i = _pod_program(cfg, loss_fn, params, ds)
+    f32_step, _, state_f = _pod_program(cfg, loss_fn, params, ds,
+                                        int_mask_agg=False)
+    w_i = w_f = params
+    for r in range(cfg.rounds):
+        batches = gather(jnp.int32(r), schedule[r])
+        w_i, state_i, _ = int_step(w_i, state_i, batches, schedule[r],
+                                   jnp.int32(r))
+        w_f, state_f, _ = f32_step(w_f, state_f, batches, schedule[r],
+                                   jnp.int32(r))
+    _assert_trees_close(w_i, w_f, atol=1e-6)
+
+
+def test_pod_mask_allreduce_lowers_to_integer_dtype():
+    """Acceptance probe: with int_mask_agg (the pod default for fedmrn +
+    shared noise) the cross-client collective in the compiled HLO is an
+    INTEGER all-reduce, and no model-sized f32 all-reduce remains."""
+    import re
+
+    mesh = _pod_mesh()
+    D = mesh.shape[client_axis_of(mesh)]
+    if D == 1:
+        pytest.skip("degenerate 1-device client axis emits no collective")
+    loss_fn, params, ds, cfg = _setup("fedmrn", rounds=1,
+                                      shared_noise=True)
+    from repro.fed.codecs import min_count_dtype
+    import numpy as _np
+    want = _np.dtype(min_count_dtype(cfg.clients_per_round))
+    hlo_dtype = {"int8": "s8", "int16": "s16", "int32": "s32"}[want.name]
+
+    gather = jax.jit(lambda r, p: ds.gather_batches(
+        r, p, steps=cfg.local_steps, batch=cfg.batch_size))
+    b0 = gather(jnp.int32(0), jnp.arange(cfg.clients_per_round,
+                                         dtype=jnp.int32))
+    step, arg_specs, in_sh = make_pod_round(
+        cfg.algorithm, mesh, PodRoundSpec(config=cfg),
+        loss_fn=loss_fn, p_specs=_specs_of(params),
+        batch_specs=_specs_of(b0))
+    hlo = jax.jit(step, in_shardings=in_sh).lower(
+        *arg_specs).compile().as_text()
+    ars = re.findall(r"= (\w+)\[([0-9,]*)\][^=\n]*all-reduce", hlo)
+    assert any(dt == hlo_dtype for dt, _ in ars), (
+        f"no {hlo_dtype} all-reduce in HLO: {ars}")
+    n_params = sum(int(np.prod(l.shape))
+                   for l in jax.tree_util.tree_leaves(params))
+
+    def elems(dims):
+        out = 1
+        for d in dims.split(","):
+            out *= int(d) if d else 1
+        return out
+
+    big_f32 = [(dt, dims) for dt, dims in ars
+               if dt == "f32" and elems(dims) >= n_params]
+    assert not big_f32, f"model-sized f32 all-reduce survived: {big_f32}"
+
+
+def test_pod_int_mask_agg_rejects_nonuniform_weights():
+    loss_fn, params, ds, cfg = _setup("fedmrn", shared_noise=True)
+    cw = tuple(float(i + 1) for i in range(cfg.num_clients))
+    with pytest.raises(ValueError, match="uniform"):
+        _pod_program(cfg, loss_fn, params, ds, client_weights=cw,
+                     int_mask_agg=True)
 
 
 def test_pod_rejects_indivisible_client_axis():
