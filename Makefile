@@ -1,8 +1,8 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-sharded bench-engine bench-engine-smoke bench \
-    quickstart examples-smoke
+.PHONY: test test-fast test-sharded bench-engine bench-engine-smoke \
+    bench-kernels bench-kernels-smoke bench quickstart examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -11,6 +11,7 @@ test:
 # engine + core only (skips the slow per-arch smoke sweep)
 test-fast:
 	$(PY) -m pytest -x -q tests/test_core_masking.py tests/test_kernels.py \
+	    tests/test_mask_uplink.py \
 	    tests/test_codecs.py tests/test_round_engine.py \
 	    tests/test_scan_engine.py tests/test_fed_engine.py \
 	    tests/test_experiment_api.py tests/test_history_golden.py
@@ -30,6 +31,15 @@ bench-engine:
 # 1 tiny config — keeps the BENCH_engine.json emitter green in CI
 bench-engine-smoke:
 	$(PY) -m benchmarks.run --only engine --quick
+
+# fused vs staged mask-uplink kernel microbench (ISSUE 6 acceptance);
+# writes machine-readable BENCH_kernels.json at the repo root
+bench-kernels:
+	$(PY) -m benchmarks.run --only kernels
+
+# tiny sizes — keeps the BENCH_kernels.json emitter green in CI
+bench-kernels-smoke:
+	$(PY) -m benchmarks.run --only kernels --quick
 
 bench:
 	$(PY) -m benchmarks.run --quick

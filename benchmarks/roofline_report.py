@@ -1,4 +1,14 @@
-"""§Roofline benchmark: read dry-run records → three-term table rows."""
+"""§Roofline benchmark: read dry-run records → three-term table rows.
+
+Imported via ``PYTHONPATH=src python -m benchmarks.run`` like every
+other section — ``repro`` must already be importable; there is no
+``sys.path`` surgery here.
+
+When there is nothing to report the section emits an explicit
+``roofline/missing`` row whose ``derived`` column carries the REASON
+(no dry-run directory, or an empty one), instead of a silent zero row
+that is indistinguishable from a real measurement.
+"""
 from __future__ import annotations
 
 import os
@@ -7,13 +17,16 @@ DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                           "dryrun")
 
 
+def _missing(reason: str):
+    return [dict(name="roofline/missing", us_per_call=0.0, derived=reason)]
+
+
 def roofline_rows():
-    import sys
-    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
     from repro.sharding.roofline import load_all
-    rows = []
     if not os.path.isdir(DRYRUN_DIR):
-        return [dict(name="roofline/missing", us_per_call=0.0, derived=0.0)]
+        return _missing(f"no dry-run dir at {os.path.abspath(DRYRUN_DIR)}; "
+                        "run the sharding dry-run first")
+    rows = []
     for rec, r in load_all(DRYRUN_DIR):
         dom_ms = {"compute": r.compute_s, "memory": r.memory_s,
                   "collective": r.collective_s}[r.dominant] * 1e3
@@ -21,4 +34,7 @@ def roofline_rows():
             name=f"roofline/{r.arch}/{r.shape}/{r.mesh}/{r.dominant}",
             us_per_call=round(dom_ms * 1e3, 1),   # dominant term in us
             derived=round(r.useful_ratio, 4)))
+    if not rows:
+        return _missing(f"dry-run dir {os.path.abspath(DRYRUN_DIR)} "
+                        "contains no records")
     return rows

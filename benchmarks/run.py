@@ -20,10 +20,11 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true",
                     help="fewer rounds (CI mode)")
     ap.add_argument("--only", default=None,
-                    help="table1|fig4|fig5|fig6|comm|engine|roofline")
+                    help="table1|fig4|fig5|fig6|comm|engine|kernels|"
+                         "roofline")
     args = ap.parse_args()
 
-    from . import engine_bench, fl_suite, roofline_report
+    from . import engine_bench, fl_suite, kernel_bench, roofline_report
 
     rounds = 6 if args.quick else 15
     sections = {
@@ -37,6 +38,7 @@ def main() -> None:
             + engine_bench.sweep_rows(n_rounds=5 if args.quick else 10,
                                       n_seeds=8 if args.quick else 32)
             + engine_bench.wire_rows(n_rounds=5 if args.quick else 20)),
+        "kernels": lambda: kernel_bench.kernel_rows(smoke=args.quick),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:
@@ -54,6 +56,10 @@ def main() -> None:
                 path = engine_bench.write_bench_json(
                     rows, n_rounds=10 if args.quick else 30,
                     n_sweep_seeds=8 if args.quick else 32)
+                print(f"# wrote {path}", file=sys.stderr)
+            elif name == "kernels":
+                path = kernel_bench.write_bench_json(rows,
+                                                     smoke=args.quick)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}")

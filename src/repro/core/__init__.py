@@ -17,9 +17,13 @@ from .masking import (  # noqa: F401
     progressive_stochastic_masking,
     sample_mask,
     stochastic_masking,
+    TreeUplink,
+    tree_bernoulli_stacked,
+    tree_mask_uplink,
     tree_masked_noise,
     tree_psm,
     tree_sample_mask,
+    tree_sample_mask_stacked,
     tree_sm,
 )
 from .packing import (  # noqa: F401
@@ -32,6 +36,7 @@ from .packing import (  # noqa: F401
     tree_pack_stacked,
     tree_unpack,
     tree_unpack_counts,
+    tree_unpack_counts_apply,
     tree_unpack_stacked,
     unpack_bits,
     unpack_mask,

@@ -14,7 +14,7 @@ division so Bernoulli probabilities are always well defined.
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -188,6 +188,84 @@ def tree_psm(u: Pytree, n: Pytree, key, *, progress, mode="binary",
         ),
         key, u, n,
     )
+
+
+def tree_sample_mask_stacked(u: Pytree, n: Pytree, keys, *,
+                             mode="binary") -> Pytree:
+    """Client-stacked final-mask draw: row k of every leaf is exactly
+    ``tree_sample_mask(u_k, n_k, keys[k])``.  The per-client ``fold_in``
+    /uniform streams are counter-based, so vmapping them over the client
+    axis reproduces the per-client calls bit for bit — this is the
+    staged sampler the fused uplink is verified against.
+    """
+    return jax.vmap(
+        lambda ul, nl, k: tree_sample_mask(ul, nl, k, mode=mode)
+    )(u, n, keys)
+
+
+def tree_bernoulli_stacked(probs: Pytree, keys) -> Pytree:
+    """Client-stacked per-leaf Bernoulli draw (the FedPM uplink): row k of
+    leaf i is ``bernoulli(fold_in(keys[k], i), probs_k_i)``."""
+    return jax.vmap(
+        lambda pt, k: _tree_keyed_map(
+            lambda pl, lk: jax.random.bernoulli(lk, pl), k, pt)
+    )(probs, keys)
+
+
+class TreeUplink(NamedTuple):
+    """One round's fused mask uplink over a client-stacked param tree.
+
+    ``counts``/``wsum`` are FLAT ``(P,)`` buffers in ``tree_flat_layout``
+    leaf order (split with ``packing.tree_split_flat``); ``words`` is the
+    same ``(K, ceil(P/32))`` payload ``tree_pack_stacked`` produces.
+    """
+
+    words: jax.Array    # (K, ceil(P/32)) uint32 wire rows
+    counts: jax.Array   # (P,) int32 Σ_k m_k (signed: Σ ±1)
+    wsum: jax.Array     # (P,) f32 Σ_k w_k · v_k
+
+
+def tree_mask_uplink(u: Pytree, n: Pytree, keys, weights, *, mode="binary",
+                     wsum_values=True, probs=False,
+                     backend: str | None = None) -> TreeUplink:
+    """The whole uplink hot path in one pass: sample the final masks,
+    bitpack them, and reduce the server-side count/weighted sums.
+
+    Draws the SAME per-(client, leaf) uniform streams as
+    :func:`tree_sample_mask_stacked` (``bernoulli(k, p)`` ≡
+    ``uniform(k) < p``), so the packed words match the staged
+    ``tree_sample_mask → tree_pack_stacked`` composition bit for bit.
+    ``probs=True`` treats ``u`` as Bernoulli probabilities directly
+    (FedPM; ``n`` ignored) and matches :func:`tree_bernoulli_stacked`.
+    ``backend="pallas"`` runs the fused Pallas kernel (interpret mode
+    off-TPU); ``"ref"`` the single-program jnp oracle — neither ever
+    materializes the f32 mask tree or an unpacked bit tensor.
+    """
+    from ..kernels.mask_uplink.ops import mask_uplink_fused
+
+    backend = resolve_backend(backend)
+    leaves_u = jax.tree_util.tree_leaves(u)
+    leaves_n = None if probs else jax.tree_util.tree_leaves(n)
+    K = leaves_u[0].shape[0]
+    flats_u, flats_n, flats_r = [], [], []
+    for i, ul in enumerate(leaves_u):
+        shape = ul.shape[1:]
+        lk = jax.vmap(lambda k: jax.random.fold_in(k, i))(keys)
+        r = jax.vmap(
+            lambda k: jax.random.uniform(k, shape, jnp.float32))(lk)
+        flats_r.append(r.reshape(K, -1))
+        flats_u.append(ul.reshape(K, -1))
+        if not probs:
+            flats_n.append(leaves_n[i].reshape(K, -1))
+    uf = jnp.concatenate(flats_u, axis=1)
+    rf = jnp.concatenate(flats_r, axis=1)
+    nf = None if probs else jnp.concatenate(flats_n, axis=1)
+    out = mask_uplink_fused(uf, nf, rf, None, None, weights,
+                            mode=("prob" if probs else mode),
+                            wsum_values=wsum_values,
+                            use_pallas=(backend == "pallas"),
+                            interpret=pallas_interpret())
+    return TreeUplink(out.words, out.counts, out.wsum)
 
 
 def tree_sm(u: Pytree, n: Pytree, key, *, mode="binary") -> Pytree:

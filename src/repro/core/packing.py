@@ -208,12 +208,56 @@ def tree_unpack_counts(words: jax.Array, like: Pytree, *,
     ``dtype`` (which must hold ±K), so that when the client axis is
     partitioned over a mesh the cross-client all-reduce moves integer
     words instead of f32.  Signed mode sums {-1,+1} values (range ±K).
+
+    On the pallas backend the fused ``kernels/mask_uplink`` counts kernel
+    reduces per word-block inside VMEM — the 32×-larger unpacked bit
+    tensor never reaches HBM (ref unpacks then sums, same integers).
     """
     total = sum(tree_flat_layout(like)[2])
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        from ..kernels.mask_uplink.ops import unpack_counts
+        c = unpack_counts(words, use_pallas=True,
+                          interpret=pallas_interpret())[:total]
+        if mode == "signed":
+            c = 2 * c - words.shape[0]
+        return tree_split_flat(c.astype(dtype), like)
     bits = unpack_rows(words, total, backend=backend)
     if mode == "signed":
         bits = (2 * bits - 1).astype(jnp.int8)
     return tree_split_flat(jnp.sum(bits, axis=0, dtype=dtype), like)
+
+
+def tree_unpack_counts_apply(words: jax.Array, noise: Pytree, params: Pytree,
+                             scale, *, mode: str = "binary",
+                             backend: str | None = None) -> Pytree:
+    """Aggregated count words → the updated global model, in one op:
+
+        p  ←  (p + n ⊙ (scale · Σ_k m_k)).astype(p.dtype)
+
+    with ``Σ_k m_k`` the per-element client count read straight off the
+    (K, W) packed rows (signed mode: Σ ±1 via the 2c − K identity).  On
+    the pallas backend this is one ``kernels/mask_uplink`` kernel pass —
+    no unpacked bit tensor, no materialized count tree, no separate
+    elementwise update sweep.  Equal to ``mix_add(params,
+    noise ⊙ (scale · tree_unpack_counts(...)))`` leaf by leaf.
+    """
+    backend = resolve_backend(backend)
+    from ..kernels.mask_uplink.ops import unpack_counts_apply
+    K = words.shape[0]
+    a, b = (2.0, float(-K)) if mode == "signed" else (1.0, 0.0)
+    noise_flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(noise)])
+    base_flat = jnp.concatenate(
+        [l.reshape(-1).astype(jnp.float32)
+         for l in jax.tree_util.tree_leaves(params)])
+    out = unpack_counts_apply(words, noise_flat, base_flat, scale, a, b,
+                              use_pallas=(backend == "pallas"),
+                              interpret=pallas_interpret())
+    upd = tree_split_flat(out, params)
+    return jax.tree_util.tree_map(lambda p, o: o.astype(p.dtype),
+                                  params, upd)
 
 
 def pack_lastdim(bits: jax.Array) -> jax.Array:

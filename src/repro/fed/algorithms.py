@@ -253,8 +253,14 @@ def _tree_zeros_like(t: Pytree) -> Pytree:
 # per-client local updates for the baselines (shared with the looped engine)
 # ---------------------------------------------------------------------------
 
-def fedpm_local(loss_fn, w_init, scores, batches, *, lr, key):
-    """Train sigmoid-scores; weights = w_init ⊙ Bern(sigmoid(s)) with STE."""
+def fedpm_local(loss_fn, w_init, scores, batches, *, lr, key, sample=True):
+    """Train sigmoid-scores; weights = w_init ⊙ Bern(sigmoid(s)) with STE.
+
+    ``sample=False`` skips the final uplink draw and returns the trained
+    scores — the fused round body then hands ``sigmoid(scores)`` to
+    ``MaskCodec.uplink_stacked``, which performs the SAME Bernoulli draw
+    (identical key/uniform streams) inside the fused mask-uplink kernel.
+    """
 
     def masked_params(s, k):
         leaves, treedef = jax.tree_util.tree_flatten(s)
@@ -281,6 +287,8 @@ def fedpm_local(loss_fn, w_init, scores, batches, *, lr, key):
     n = jax.tree_util.tree_leaves(batches)[0].shape[0]
     s_final, losses = jax.lax.scan(step, scores,
                                    (jnp.arange(n), batches))
+    if not sample:
+        return s_final, losses
     # uplink: Bernoulli-sampled masks, one independent draw per leaf
     # (folding the leaf index keeps same-shaped leaves decorrelated)
     leaves, treedef = jax.tree_util.tree_flatten(s_final)
@@ -324,6 +332,11 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
     mrn = cfg.fedmrn_config()
     ef = cfg.error_feedback
     codec = _fedmrn_codec(cfg, params)
+    # DM masks and error-feedback residuals need the materialized mask
+    # tree; everything else ships through the fused uplink, which samples
+    # + packs + count-reduces in one kernel pass on the pallas backend
+    # (and stays the staged legacy composition, bitwise, on ref)
+    fused = mrn.use_sm and not ef
 
     def round_fn(seed, w, state, batches, picked, round_idx, weights):
         train_base = jax.random.key(seed + 1)
@@ -340,8 +353,11 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
             # key must track the real S or parity with the looped
             # reference breaks when a caller varies steps per round
             num_steps = jax.tree_util.tree_leaves(b)[0].shape[0]
-            m = sample_final_mask(
-                u, noise, final_mask_key(train_key, num_steps), cfg=mrn)
+            mask_key = final_mask_key(train_key, num_steps)
+            if fused:
+                # the final draw happens inside codec.uplink_stacked
+                return u, seed_key, mask_key, losses
+            m = sample_final_mask(u, noise, mask_key, cfg=mrn)
             residual = (jax.tree_util.tree_map(
                 jnp.subtract, u, tree_masked_noise(noise, m))
                 if ef else None)
@@ -350,14 +366,22 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
         r0 = (jax.tree_util.tree_map(lambda r: r[picked],
                                      state["residuals"])
               if ef else jnp.zeros((picked.shape[0],)))
+
+        if fused:
+            # ---- uplink + server sum in ONE fused pass (Eq. 5) ---------
+            u_stack, seed_keys, mask_keys, losses = jax.vmap(per_client)(
+                batches, picked, r0)
+            msg, agg = codec.uplink_stacked(u_stack, seed_keys, mask_keys,
+                                            weights)
+            new_w = jax.tree_util.tree_map(mix_add, w, agg)
+            return new_w, state, losses, codec.round_bits(msg)
+
         masks, seed_keys, losses, residuals = jax.vmap(per_client)(
             batches, picked, r0)
-
         # ---- uplink: (packed masks, seeds) encoded in one kernel launch
         msg = codec.encode_stacked({"mask": masks, "seed": seed_keys})
         # ---- server: the codec is the decode boundary — Eq. (5) --------
-        agg = codec.aggregate(msg, weights)
-        new_w = jax.tree_util.tree_map(mix_add, w, agg)
+        new_w = codec.aggregate_apply(msg, weights, w)
 
         new_state = state
         if ef:
@@ -485,18 +509,23 @@ def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
         scores = state["scores"]
 
         def per_client(b, cid):
-            return fedpm_local(
-                loss_fn, w_frozen, scores, b, lr=cfg.lr,
-                key=jax.random.fold_in(key_base, round_idx * 1000 + cid))
+            ckey = jax.random.fold_in(key_base, round_idx * 1000 + cid)
+            s_final, losses = fedpm_local(loss_fn, w_frozen, scores, b,
+                                          lr=cfg.lr, key=ckey, sample=False)
+            nb = jax.tree_util.tree_leaves(b)[0].shape[0]
+            mask_key = jax.random.fold_in(ckey, nb + 1)
+            probs_k = jax.tree_util.tree_map(jax.nn.sigmoid, s_final)
+            return probs_k, mask_key, losses
 
-        masks, losses = jax.vmap(per_client)(batches, picked)
+        probs_k, mask_keys, losses = jax.vmap(per_client)(batches, picked)
         K = picked.shape[0]
-        # ---- uplink: packed mask bits, counted server-side -------------
-        msg = codec.encode_stacked({"mask": masks})
+        # ---- uplink: the fused mask draw + pack + vote count -----------
         # the posterior counts VOTES — one per client, ``client_weights``
         # ignored (the original FedPM rule): weighted counts could exceed
         # K, push probs past 1 and NaN the logit below
-        m_sum = codec.aggregate(msg, jnp.ones_like(weights))
+        msg, m_sum = codec.uplink_stacked(probs_k, None, mask_keys,
+                                          jnp.ones_like(weights),
+                                          probs=True)
         # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
         # accumulated in f32 regardless of param dtype.  The raw K-client
         # mean hits exactly 0/1 whenever all clients agree, and logit of

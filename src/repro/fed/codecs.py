@@ -57,11 +57,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core import NoiseConfig, gen_noise
+from ..core import NoiseConfig, gen_noise, mix_add
+from ..core.backend import resolve_backend
 from ..core.comm import CommRecord
+from ..core.masking import (tree_bernoulli_stacked, tree_mask_uplink,
+                            tree_sample_mask_stacked)
 from ..core.packing import (tree_flat_layout, tree_num_params, tree_pack,
                             tree_pack_stacked, tree_split_flat, tree_unpack,
-                            tree_unpack_counts, tree_unpack_stacked)
+                            tree_unpack_counts, tree_unpack_counts_apply,
+                            tree_unpack_stacked)
 
 Pytree = Any
 
@@ -309,6 +313,95 @@ class MaskCodec(UplinkCodec):
         noise = gen_noise(key0, self.template, self.noise)
         return jax.tree_util.tree_map(
             lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
+
+    def uplink_stacked(self, scores: Pytree, noise_keys, mask_keys,
+                       weights: jax.Array, *, probs: bool = False):
+        """The WHOLE mask uplink, client sampling through server sum.
+
+        ``scores`` is the client-stacked trained ``u`` (FedMRN: the mask
+        is drawn against noise regenerated from ``noise_keys``) or, with
+        ``probs=True``, the Bernoulli probabilities themselves (FedPM;
+        ``noise_keys`` ignored).  Returns ``(stacked WireMsg, aggregate)``
+        with the aggregate equal to ``self.aggregate(msg, weights)``.
+
+        On the pallas backend this runs the fused ``kernels/mask_uplink``
+        pass — sample → bitpack → count/weighted-sum staged through VMEM,
+        no f32 mask tree and no unpacked bit tensor in HBM.  On ref it IS
+        the staged legacy composition (``tree_sample_mask_stacked`` →
+        ``encode_stacked`` → ``aggregate``), so CPU trajectories are
+        bit-identical to the pre-fusion path.
+        """
+        backend = resolve_backend(self.backend)
+        if backend != "pallas":
+            if probs:
+                masks = tree_bernoulli_stacked(scores, mask_keys)
+            else:
+                noise = jax.vmap(
+                    lambda k: gen_noise(k, self.template, self.noise)
+                )(noise_keys)
+                masks = tree_sample_mask_stacked(scores, noise, mask_keys,
+                                                 mode=self.mode)
+            payload = {"mask": masks}
+            if self.carries_seed:
+                payload["seed"] = noise_keys
+            msg = self.encode_stacked(payload)
+            return msg, self.aggregate(msg, weights)
+
+        noise = None
+        if not probs:
+            noise = jax.vmap(
+                lambda k: gen_noise(k, self.template, self.noise)
+            )(noise_keys)
+        wn = weights / jnp.sum(weights) if self.normalize else weights
+        per_client = self.noise is not None and not self.shared_noise
+        up = tree_mask_uplink(scores, noise, mask_keys, wn, mode=self.mode,
+                              probs=probs, wsum_values=per_client,
+                              backend=backend)
+        bufs = {"words": up.words}
+        if self.carries_seed:
+            bufs["seed"] = jax.random.key_data(noise_keys)
+        msg = WireMsg(self.name, bufs)
+        if per_client:
+            # Eq. (5): the kernel's Σ_k w'_k G(s_k)⊙m_k partials ARE it
+            return msg, tree_split_flat(up.wsum, self.template)
+        if self.count_dtype is not None:
+            counts = tree_split_flat(up.counts, self.template)
+            m_avg = jax.tree_util.tree_map(
+                lambda c: c.astype(self.count_dtype).astype(jnp.float32)
+                * wn[0], counts)
+        else:
+            m_avg = tree_split_flat(up.wsum, self.template)
+        if self.noise is None:
+            return msg, m_avg
+        noise0 = jax.tree_util.tree_map(lambda x: x[0], noise)
+        return msg, jax.tree_util.tree_map(
+            lambda nl, ml: nl * ml.astype(nl.dtype), noise0, m_avg)
+
+    def aggregate_apply(self, stacked: WireMsg, weights: jax.Array,
+                        params: Pytree) -> Pytree:
+        """Server decode + model update in one: equal (leaf by leaf) to
+        ``mix_add(params, self.aggregate(stacked, weights))``.
+
+        For the count-aggregatable integer formats (shared noise +
+        ``count_dtype``) on the pallas backend this is ONE fused
+        ``unpack_counts_apply`` kernel — aggregated words → popcounts →
+        ``w + G(s)⊙(w'·Σm)`` without an unpacked bit tensor or a
+        materialized count tree; every other configuration composes the
+        existing ``aggregate`` with ``mix_add`` unchanged.
+        """
+        fused = (resolve_backend(self.backend) == "pallas"
+                 and self.noise is not None and self.shared_noise
+                 and self.count_dtype is not None)
+        if not fused:
+            agg = self.aggregate(stacked, weights)
+            return jax.tree_util.tree_map(mix_add, params, agg)
+        words = stacked.buffers["words"]
+        wn = weights / jnp.sum(weights) if self.normalize else weights
+        key0 = jax.random.wrap_key_data(stacked.buffers["seed"])[0]
+        noise = gen_noise(key0, self.template, self.noise)
+        return tree_unpack_counts_apply(words, noise, params, wn[0],
+                                        mode=self.mode,
+                                        backend=self.backend)
 
     def template_payload(self, params: Pytree) -> Pytree:
         payload = {"mask": template_of(params)}

@@ -83,9 +83,13 @@ def run_federated_looped(
     if client_weights is None:
         client_weights = [1.0] * cfg.num_clients
     # one jitted server step per family: stacked WireMsg → update
-    # (encode is unused by fedmrn, whose clients ship packed masks already)
+    # (encode is unused by fedmrn, whose clients ship packed masks already;
+    # its decode + Eq.(5) update is one codec.aggregate_apply program —
+    # fused words→counts→model on the pallas backend)
     aggregate = jax.jit(codec.aggregate)
     encode = jax.jit(codec.encode_stacked)
+    if cfg.algorithm in ("fedmrn", "fedmrns"):
+        aggregate_apply = jax.jit(codec.aggregate_apply)
 
     # jitted workers (compiled once, reused by every client/round)
     if cfg.algorithm in ("fedmrn", "fedmrns"):
@@ -140,8 +144,7 @@ def run_federated_looped(
                 "words": jnp.stack([r.packed_mask for r in results]),
                 "seed": jnp.stack([jax.random.key_data(r.seed_key)
                                    for r in results])})
-            w = jax.tree_util.tree_map(mix_add, w,
-                                       aggregate(msg, weights_dev))
+            w = aggregate_apply(msg, weights_dev, w)
 
         elif cfg.algorithm == "fedpm":
             masks_all = []

@@ -1,0 +1,3 @@
+"""Fused mask-uplink kernels: PSM sample → bitpack → popcount in one pass."""
+from .ops import (UplinkOut, mask_uplink_fused, mask_uplink_ste,  # noqa: F401
+                  unpack_counts, unpack_counts_apply)

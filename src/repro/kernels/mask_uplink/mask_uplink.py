@@ -1,0 +1,212 @@
+"""Fused mask-uplink Pallas TPU kernel — the paper's whole wire hot path.
+
+The FedMRN uplink is: sample the 1-bit mask under PSM (Eq. 6/7/10),
+bitpack it into uint32 words, and reduce the per-element mask counts the
+server aggregates.  Run as separate kernels that chain makes three full
+HBM round trips over model-sized tensors and materializes both the mask
+tree and (server side) an unpacked bit tensor 32× the wire size.  Here
+the whole chain is ONE ``pallas_call``: each (block_r, block_c) tile of
+``u``/``n``/uniforms is read into VMEM once and leaves as
+
+  words    (R, C/32) uint32      the packed wire payload rows
+  counts   (R/br, C) int32       per-row-block popcount partials
+  wsum     (R/br, C) f32         per-row-block Σ_r w_r · v_r ⊙ m_r
+                                 partials (v = noise → Eq. 5 masked-noise
+                                 sums, or v = ±1 → weighted mask sums)
+  û        (R, C), optional      the PSM/STE forward value
+
+— the {0,1} mask itself never touches HBM.  The server-side mirrors,
+``unpack_counts`` and ``unpack_counts_apply``, go from aggregated words
+straight to counts (and into ``base + noise ⊙ (mul·(a·c + b))``, the
+global-model update) without materializing unpacked bits.
+
+Uniforms are drawn OUTSIDE (seeded jax.random streams — the server must
+reproduce G(s) exactly), like ``kernels/psm_mask``.  ``mode="prob"``
+reads P[m=1] directly from ``u`` (FedPM sigmoid scores); the ``r_pm``
+gate input is optional — omitted, the kernel is the progress=1 final
+uplink draw.  Callers pad shapes to block multiples (``kernels.tiling``)
+so the in-kernel reductions never see out-of-bounds lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WORD = 32
+BLOCK_R = 8        # sublane-aligned client rows per tile
+BLOCK_C = 4096     # bits per tile = 128 uint32 words (lane-aligned)
+_EPS = 1e-30
+
+
+def _uplink_kernel(*refs, mode: str, with_gate: bool, want_uhat: bool,
+                   wsum_values: bool):
+    it = iter(refs)
+    u_ref, n_ref, r_sm_ref = next(it), next(it), next(it)
+    r_pm_ref = next(it) if with_gate else None
+    w_ref = next(it)
+    prog_ref = next(it) if with_gate else None
+    words_ref, counts_ref, wsum_ref = next(it), next(it), next(it)
+    uhat_ref = next(it) if want_uhat else None
+
+    u = u_ref[...].astype(jnp.float32)
+    n = n_ref[...].astype(jnp.float32)
+    r_sm = r_sm_ref[...]
+    if mode == "prob":
+        p = jnp.clip(u, 0.0, 1.0)
+        m = r_sm < p
+        v = jnp.where(m, 1.0, 0.0)
+    else:
+        safe_n = jnp.where(jnp.abs(n) < _EPS, _EPS, n)
+        if mode == "binary":
+            p = jnp.clip(u / safe_n, 0.0, 1.0)
+            m = r_sm < p
+            hat_sm = jnp.where(m, n, 0.0)
+            lo = jnp.minimum(n, 0.0)
+            hi = jnp.maximum(n, 0.0)
+            v = hat_sm if wsum_values else jnp.where(m, 1.0, 0.0)
+        else:  # signed
+            p = jnp.clip((u + n) / (2.0 * safe_n), 0.0, 1.0)
+            m = r_sm < p
+            hat_sm = jnp.where(m, n, -n)
+            hi = jnp.abs(n)
+            lo = -hi
+            v = hat_sm if wsum_values else jnp.where(m, 1.0, -1.0)
+    if want_uhat:
+        bar = jnp.clip(u, lo, hi)
+        if with_gate:
+            gate = r_pm_ref[...] < prog_ref[0]
+            uhat = jnp.where(gate, hat_sm, bar)
+        else:                       # progress ≡ 1: every element is masked
+            uhat = hat_sm
+        uhat_ref[...] = uhat.astype(uhat_ref.dtype)
+
+    br, bc = m.shape
+    bits = m.reshape(br, bc // WORD, WORD).astype(jnp.uint32)
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    words_ref[...] = jnp.sum(bits << shifts[None, None, :], axis=-1,
+                             dtype=jnp.uint32)
+    # binary popcount partials even in signed mode: Σ(±1) = 2c − K is an
+    # affine fix the wrapper applies with the TRUE (unpadded) client count
+    counts_ref[...] = jnp.sum(m.astype(jnp.int32), axis=0, keepdims=True)
+    w = w_ref[...].astype(jnp.float32)              # (br, 1)
+    wsum_ref[...] = jnp.sum(w * v, axis=0, keepdims=True)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("mode", "wsum_values", "want_uhat",
+                                    "interpret", "block_r", "block_c"))
+def uplink_fused(u: jax.Array, n: jax.Array, r_sm: jax.Array,
+                 r_pm, progress, weights: jax.Array, *,
+                 mode: str = "binary", wsum_values: bool = True,
+                 want_uhat: bool = False, interpret: bool = True,
+                 block_r: int = BLOCK_R, block_c: int = BLOCK_C):
+    """One fused pass over (R, C) tiles; R, C must be block multiples.
+
+    ``r_pm=None`` (with ``progress=None``) drops the PM gate input — the
+    progress=1 uplink draw.  Returns ``(words, count_partials,
+    wsum_partials[, uhat])``; partials are (R/block_r, C) and summed over
+    axis 0 by the wrapper.
+    """
+    R, C = u.shape
+    br, bc = min(block_r, R), min(block_c, C)
+    assert R % br == 0 and C % bc == 0 and bc % WORD == 0, (R, C, br, bc)
+    with_gate = r_pm is not None
+    gr = R // br
+    grid = (gr, C // bc)
+    tile = pl.BlockSpec((br, bc), lambda i, j: (i, j))
+    row_spec = pl.BlockSpec((1, bc), lambda i, j: (i, j))
+
+    in_specs = [tile, tile, tile]
+    args = [u, n, r_sm]
+    if with_gate:
+        in_specs.append(tile)
+        args.append(r_pm)
+    in_specs.append(pl.BlockSpec((br, 1), lambda i, j: (i, 0)))
+    args.append(weights.reshape(R, 1))
+    if with_gate:
+        in_specs.append(pl.BlockSpec(memory_space=pl.ANY))
+        args.append(jnp.asarray(progress, jnp.float32).reshape(1))
+
+    out_specs = [pl.BlockSpec((br, bc // WORD), lambda i, j: (i, j)),
+                 row_spec, row_spec]
+    out_shape = [jax.ShapeDtypeStruct((R, C // WORD), jnp.uint32),
+                 jax.ShapeDtypeStruct((gr, C), jnp.int32),
+                 jax.ShapeDtypeStruct((gr, C), jnp.float32)]
+    if want_uhat:
+        out_specs.append(tile)
+        out_shape.append(jax.ShapeDtypeStruct((R, C), u.dtype))
+
+    return pl.pallas_call(
+        functools.partial(_uplink_kernel, mode=mode, with_gate=with_gate,
+                          want_uhat=want_uhat, wsum_values=wsum_values),
+        grid=grid, in_specs=in_specs, out_specs=out_specs,
+        out_shape=out_shape, interpret=interpret,
+    )(*args)
+
+
+# ---------------------------------------------------------------------------
+# server side: aggregated words → counts (→ applied update), no bit tensor
+# ---------------------------------------------------------------------------
+
+def _counts_kernel(words_ref, counts_ref):
+    words = words_ref[...]                           # (bk, bw)
+    bk, bw = words.shape
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    counts_ref[...] = jnp.sum(bits.astype(jnp.int32),
+                              axis=0).reshape(1, bw * WORD)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("interpret", "block_k", "block_w"))
+def unpack_counts_pallas(words: jax.Array, *, interpret: bool = True,
+                         block_k: int = BLOCK_R, block_w: int = 128):
+    """(K, W) packed rows → (K/bk, W·32) int32 popcount partials."""
+    K, W = words.shape
+    bk, bw = min(block_k, K), min(block_w, W)
+    assert K % bk == 0 and W % bw == 0, (K, W, bk, bw)
+    grid = (K // bk, W // bw)
+    return pl.pallas_call(
+        _counts_kernel, grid=grid,
+        in_specs=[pl.BlockSpec((bk, bw), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bw * WORD), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K // bk, W * WORD), jnp.int32),
+        interpret=interpret,
+    )(words)
+
+
+def _counts_apply_kernel(words_ref, noise_ref, base_ref, sc_ref, out_ref):
+    words = words_ref[...]                           # (K, bw): all clients
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & jnp.uint32(1)
+    bw = words.shape[1]
+    # f32 popcount is exact for K < 2^24; a·c + b is the signed-count fix
+    c = jnp.sum(bits.astype(jnp.float32), axis=0).reshape(1, bw * WORD)
+    mul, a, b = sc_ref[0], sc_ref[1], sc_ref[2]
+    out_ref[...] = base_ref[...] + noise_ref[...] * (mul * (a * c + b))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_w"))
+def unpack_counts_apply_pallas(words: jax.Array, noise: jax.Array,
+                               base: jax.Array, scalars: jax.Array, *,
+                               interpret: bool = True, block_w: int = 128):
+    """words (K, W), noise/base (1, W·32), scalars (mul, a, b) →
+    ``base + noise ⊙ (mul·(a·c + b))`` as (1, W·32) f32 — the Eq. (5)
+    shared-noise server update straight from the wire words."""
+    K, W = words.shape
+    bw = min(block_w, W)
+    assert W % bw == 0, (W, bw)
+    grid = (W // bw,)
+    return pl.pallas_call(
+        _counts_apply_kernel, grid=grid,
+        in_specs=[pl.BlockSpec((K, bw), lambda i: (0, i)),
+                  pl.BlockSpec((1, bw * WORD), lambda i: (0, i)),
+                  pl.BlockSpec((1, bw * WORD), lambda i: (0, i)),
+                  pl.BlockSpec(memory_space=pl.ANY)],
+        out_specs=pl.BlockSpec((1, bw * WORD), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, W * WORD), jnp.float32),
+        interpret=interpret,
+    )(words, noise, base, scalars)

@@ -11,21 +11,9 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from ..tiling import to_lane_tiles as _to_tiles
 from .psm_mask import psm_fused
 from .ref import psm_ref
-
-_LANE = 128
-
-
-def _to_tiles(x: jax.Array):
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    cols = _LANE
-    rows = -(-n // cols)
-    pad = rows * cols - n
-    if pad:
-        flat = jnp.concatenate([flat, jnp.zeros((pad,), flat.dtype)])
-    return flat.reshape(rows, cols), n
 
 
 def _draw_uniforms(key: jax.Array, shape):
@@ -83,8 +71,17 @@ def _psm_ste_fwd(u, n, r_sm, r_pm, progress, mode, interpret):
     return uhat, (u, n, gate)
 
 
-def _psm_ste_bwd(mode, interpret, res, g):
-    u, n, gate = res
+def ste_clip_bwd(mode, u, n, gate, g):
+    """Cotangent to ``u`` of ``where(gate, hat_sm, clip(u, lo(n), hi(n)))``.
+
+    ``hat_sm`` carries the Eq.(9) straight-through ∂/∂u = 1; the ungated
+    branch is the clip's exact VJP.  ``gate=None`` means progress ≡ 1
+    (every element masked) → the cotangent is ``g`` unchanged.  Shared by
+    the psm_mask and mask_uplink fused ops so their STE rules cannot
+    drift apart.
+    """
+    if gate is None:
+        return g
     if mode == "binary":
         lo = jnp.minimum(n, 0.0)
         hi = jnp.maximum(n, 0.0)
@@ -93,7 +90,12 @@ def _psm_ste_bwd(mode, interpret, res, g):
         lo = -hi
     _, clip_vjp = jax.vjp(lambda uu: jnp.clip(uu, lo, hi), u)
     zero = jnp.zeros_like(g)
-    ct_u = jnp.where(gate, g, zero) + clip_vjp(jnp.where(gate, zero, g))[0]
+    return jnp.where(gate, g, zero) + clip_vjp(jnp.where(gate, zero, g))[0]
+
+
+def _psm_ste_bwd(mode, interpret, res, g):
+    u, n, gate = res
+    ct_u = ste_clip_bwd(mode, u, n, gate, g)
     return (ct_u, jnp.zeros_like(n), jnp.zeros_like(g), jnp.zeros_like(g),
             jnp.zeros((), jnp.float32))
 

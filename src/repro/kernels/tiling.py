@@ -1,0 +1,36 @@
+"""Shared tile-shaping helpers for the Pallas kernel wrappers.
+
+Every kernel op pads its operands up to a block multiple before the
+``pallas_call`` and slices the padding back off afterwards.  These
+helpers are THE one implementation of that shaping (one ``jnp.pad``, no
+concatenate-then-reshape double copy), so the psm_mask and mask_uplink
+ops cannot drift apart on layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LANE = 128
+
+
+def pad_to_multiple(x: jax.Array, multiple: int, axis: int = -1) -> jax.Array:
+    """Zero-pad ``x`` along ``axis`` up to the next multiple (no-op copy
+    avoided entirely when already aligned)."""
+    size = x.shape[axis]
+    pad = (-size) % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis % x.ndim] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def to_lane_tiles(x: jax.Array, lane: int = LANE):
+    """Flatten any-shaped ``x`` to lane-aligned (rows, lane) tiles.
+
+    Returns ``(tiles, n)`` with ``n`` the true element count; the inverse
+    is ``tiles.reshape(-1)[:n].reshape(orig_shape)``.
+    """
+    flat = pad_to_multiple(x.reshape(-1), lane)
+    return flat.reshape(-1, lane), x.size

@@ -1,0 +1,25 @@
+"""Shared pytest config: the ``tpu`` marker.
+
+Tests marked ``@pytest.mark.tpu`` drive the Pallas kernels in compiled
+(non-interpret) mode and only make sense on a real TPU host; elsewhere
+they auto-skip here instead of being hand-guarded file by file.
+"""
+import jax
+import pytest
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "tpu: needs a real TPU (compiled, non-interpret Pallas); "
+        "auto-skipped when jax.default_backend() != 'tpu'")
+
+
+def pytest_collection_modifyitems(config, items):
+    if jax.default_backend() == "tpu":
+        return
+    skip = pytest.mark.skip(
+        reason="requires TPU (compiled, non-interpret Pallas)")
+    for item in items:
+        if "tpu" in item.keywords:
+            item.add_marker(skip)
