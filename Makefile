@@ -1,8 +1,9 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-sharded bench-engine bench-engine-smoke \
-    bench-kernels bench-kernels-smoke bench quickstart examples-smoke
+.PHONY: test test-fast test-cohort test-sharded bench-engine \
+    bench-engine-smoke bench-kernels bench-kernels-smoke bench-scale \
+    bench-scale-smoke bench quickstart examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -15,6 +16,12 @@ test-fast:
 	    tests/test_codecs.py tests/test_round_engine.py \
 	    tests/test_scan_engine.py tests/test_fed_engine.py \
 	    tests/test_experiment_api.py tests/test_history_golden.py
+
+# streaming cohort tier: cohort ≡ scan parity, hierarchical count
+# aggregation, skewed populations, 1e5-client smoke (CI job: test-cohort)
+test-cohort:
+	$(PY) -m pytest -x -q tests/test_cohort_engine.py \
+	    tests/test_federated_skew.py
 
 # multi-device tier: 8 fake CPU devices so the pod client mesh axis and
 # the shard_map seed mesh genuinely partition (CI job: test-multidevice)
@@ -40,6 +47,15 @@ bench-kernels:
 # tiny sizes — keeps the BENCH_kernels.json emitter green in CI
 bench-kernels-smoke:
 	$(PY) -m benchmarks.run --only kernels --quick
+
+# cohort-streaming scale bench: clients/sec at C up to 1e6 host-resident
+# clients + prefetch on/off ratio; writes BENCH_scale.json at the repo root
+bench-scale:
+	$(PY) -m benchmarks.run --only scale
+
+# small populations (C <= 1e4) — keeps the BENCH_scale.json emitter green
+bench-scale-smoke:
+	$(PY) -m benchmarks.run --only scale --quick
 
 bench:
 	$(PY) -m benchmarks.run --quick

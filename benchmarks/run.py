@@ -4,27 +4,62 @@ Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the
 table-specific metric (accuracy for Tables/Figs, bits-per-param for the
 comm table, useful-compute ratio for the roofline).
 
-The ``engine`` section additionally writes machine-readable results
-(rounds/sec per engine + config + commit) to ``BENCH_engine.json`` at the
-repo root, so the bench trajectory is tracked across commits instead of
-living only in stdout.
+The ``engine``/``kernels``/``scale`` sections additionally write
+machine-readable results (per-engine rates + config + commit) to
+``BENCH_<name>.json`` at the repo root, so the bench trajectory is
+tracked across commits instead of living only in stdout.  On every
+invocation the harness checks the tracked BENCH files' recorded commits
+against HEAD and warns about any that is NOT an ancestor (i.e. the
+numbers predate a rebase/amend and no longer belong to this history).
 
 Usage:  PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
 """
 import argparse
+import glob
+import json
+import os
+import subprocess
 import sys
+
+
+def _warn_stale_bench_files() -> None:
+    """Warn when a BENCH_*.json records a commit that is not an ancestor
+    of HEAD — its numbers were produced on a line of history this
+    checkout does not contain (rebase/amend), so the bench trajectory
+    has a hole until the section is re-run."""
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        try:
+            commit = json.load(open(path)).get("commit", "unknown")
+        except (OSError, ValueError):
+            continue
+        if commit == "unknown":
+            continue
+        try:
+            ok = subprocess.run(
+                ["git", "merge-base", "--is-ancestor", commit, "HEAD"],
+                cwd=root, capture_output=True).returncode == 0
+        except OSError:       # no git binary
+            return
+        if not ok:
+            print(f"# WARNING: {os.path.basename(path)} was recorded at "
+                  f"{commit[:12]}, which is not an ancestor of HEAD — "
+                  f"re-run its section to refresh it", file=sys.stderr)
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
-                    help="fewer rounds (CI mode)")
+                    help="fewer rounds / smaller populations (CI mode)")
     ap.add_argument("--only", default=None,
                     help="table1|fig4|fig5|fig6|comm|engine|kernels|"
-                         "roofline")
+                         "scale|roofline")
     args = ap.parse_args()
 
-    from . import engine_bench, fl_suite, kernel_bench, roofline_report
+    _warn_stale_bench_files()
+
+    from . import (engine_bench, fl_suite, kernel_bench, roofline_report,
+                   scale_bench)
 
     rounds = 6 if args.quick else 15
     sections = {
@@ -39,6 +74,7 @@ def main() -> None:
                                       n_seeds=8 if args.quick else 32)
             + engine_bench.wire_rows(n_rounds=5 if args.quick else 20)),
         "kernels": lambda: kernel_bench.kernel_rows(smoke=args.quick),
+        "scale": lambda: scale_bench.scale_rows(quick=args.quick),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:
@@ -60,6 +96,10 @@ def main() -> None:
             elif name == "kernels":
                 path = kernel_bench.write_bench_json(rows,
                                                      smoke=args.quick)
+                print(f"# wrote {path}", file=sys.stderr)
+            elif name == "scale":
+                path = scale_bench.write_bench_json(rows,
+                                                    quick=args.quick)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}")

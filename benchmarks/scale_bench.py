@@ -1,0 +1,178 @@
+"""Cohort-streaming scale benchmark: larger-than-HBM client populations.
+
+Drives the cohort engine (``fed/engine.py::CohortRunner``) over synthetic
+uniform populations of C ∈ {1e3, 1e5, 1e6} clients — the population's
+examples and index matrices stay HOST-resident, only one cohort block is
+device-resident at a time — and reports:
+
+  scale/C<β>/clients_per_sec   round-selected clients processed per
+                               wall-second (R·K / wall), prefetch on
+  scale/C<β>/rounds_per_sec    the same run, per-round view
+  scale/C<β>/prefetch_ratio    prefetch-off wall over prefetch-on wall —
+                               the double-buffering win.  The overlap
+                               needs a host core free beside the compute
+                               stream (or a real accelerator whose H2D
+                               DMA runs beside it); on a single-core CPU
+                               runner stage and compute share the core
+                               and the ratio degenerates to ~1.0, so the
+                               row must be read against ``n_cpus`` in
+                               BENCH_scale.json.
+  scale/C<β>/block_MB          device watermark: ONE staged cohort block
+                               (x/y + index matrix, padded to the
+                               population maxima) — what the engine keeps
+                               resident instead of the whole population
+  scale/C<β>/population_MB     host bytes of the full population (the
+                               device cost a non-streaming engine pays)
+  scale/peak_rss_MB            host max-RSS after the sweep (sanity: the
+                               host copy, not a device blowup)
+
+``write_bench_json`` emits machine-readable ``BENCH_scale.json`` at the
+repo root (same commit/config/results shape as BENCH_engine.json).
+"""
+from __future__ import annotations
+
+import json
+import os
+import resource
+import subprocess
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.data import make_cohorted_dataset
+from repro.fed import Experiment, ExperimentSpec, FLConfig
+from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
+
+K = 64              # clients per round
+ROUNDS = 3
+STEPS = 2           # local steps
+BATCH = 4
+PER_CLIENT = 2      # examples per client (uniform 2-D parts fast path)
+D = 16              # feature dim
+
+# population size → cohort size (clients staged per block)
+SIZES = {1_000: 256, 100_000: 8_192, 1_000_000: 16_384}
+SIZES_QUICK = {1_000: 256, 10_000: 2_048}
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_scale.json")
+
+
+def _population(C: int, cohort_size: int):
+    rng = np.random.RandomState(0)
+    x = rng.randn(C * PER_CLIENT, D).astype(np.float32)
+    y = rng.randint(0, 4, C * PER_CLIENT).astype(np.int32)
+    # uniform clients: the 2-D parts fast path (no per-client lists)
+    parts = np.arange(C * PER_CLIENT, dtype=np.int32).reshape(C, PER_CLIENT)
+    return make_cohorted_dataset(x, y, parts, cohort_size=cohort_size,
+                                 x_test=x[:256], y_test=y[:256],
+                                 batch_seed=7)
+
+
+def _block_mb(ds) -> float:
+    """Analytic bytes of ONE staged cohort block (the device watermark)."""
+    ex = ds.pad_examples
+    return (ex * D * 4 + ex * 4                       # x + y
+            + ds.pad_clients * ds.pad_len * 4         # client_idx
+            + ds.pad_clients * 4) / 1e6               # client_len
+
+
+def scale_rows(quick: bool = False) -> List[Dict]:
+    sizes = SIZES_QUICK if quick else SIZES
+    rounds = 2 if quick else ROUNDS
+    rows = []
+    for C, cohort_size in sizes.items():
+        ds = _population(C, cohort_size)
+        params = mlp_init(jax.random.key(0), d_in=D, d_hidden=32,
+                          n_classes=4)
+        cfg = FLConfig(algorithm="fedmrn", num_clients=C,
+                       clients_per_round=K, rounds=rounds,
+                       local_steps=STEPS, batch_size=BATCH, lr=0.1,
+                       noise_alpha=3e-2)
+        exp = Experiment(ExperimentSpec(
+            loss_fn=mlp_loss, params=params, data=ds, config=cfg,
+            eval_apply=mlp_apply, eval_every=rounds))
+        walls = {}
+        for prefetch in (True, False):
+            exp.run(engine="cohort", prefetch=prefetch)   # compile/warmup
+            best = float("inf")
+            for _ in range(2 if quick else 3):
+                t0 = time.time()
+                exp.run(engine="cohort", prefetch=prefetch)
+                best = min(best, time.time() - t0)
+            walls[prefetch] = best
+        wall = walls[True]
+        tag = f"scale/C{C:.0e}".replace("e+0", "e")
+        rows += [
+            dict(name=f"{tag}/clients_per_sec",
+                 us_per_call=wall / rounds * 1e6,
+                 derived=round(rounds * K / wall, 1)),
+            dict(name=f"{tag}/rounds_per_sec", us_per_call=0.0,
+                 derived=round(rounds / wall, 2)),
+            dict(name=f"{tag}/prefetch_ratio", us_per_call=0.0,
+                 derived=round(walls[False] / walls[True], 2)),
+            dict(name=f"{tag}/block_MB", us_per_call=0.0,
+                 derived=round(_block_mb(ds), 2)),
+            dict(name=f"{tag}/population_MB", us_per_call=0.0,
+                 derived=round((C * PER_CLIENT * (D * 4 + 4)
+                                + C * (PER_CLIENT + 1) * 4) / 1e6, 2)),
+        ]
+        del ds, exp
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+    rows.append(dict(name="scale/peak_rss_MB", us_per_call=0.0,
+                     derived=round(rss, 1)))
+    return rows
+
+
+def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
+                     quick: bool = False) -> str:
+    try:
+        commit = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True).strip()
+    except Exception:  # noqa: BLE001 — no git in CI tarballs
+        commit = "unknown"
+    results: Dict[str, Dict] = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if parts[0] != "scale":
+            continue
+        if len(parts) == 2:
+            results[parts[1]] = r["derived"]
+        else:
+            results.setdefault(parts[1], {})[parts[2]] = r["derived"]
+    doc = {
+        "bench": "scale",
+        "commit": commit,
+        "config": {"clients_per_round": K,
+                   "rounds": 2 if quick else ROUNDS,
+                   "local_steps": STEPS, "batch_size": BATCH,
+                   "examples_per_client": PER_CLIENT, "features": D,
+                   "cohort_sizes": {f"{c:.0e}".replace("e+0", "e"): s
+                                    for c, s in (SIZES_QUICK if quick
+                                                 else SIZES).items()},
+                   "model": f"mlp({D},32,4)",
+                   "n_devices": jax.local_device_count(),
+                   "n_cpus": os.cpu_count(),
+                   "unit": "clients_per_sec (prefetch on; prefetch_ratio "
+                           "is off-wall over on-wall and needs a spare "
+                           "host core or real H2D DMA to exceed 1 — see "
+                           "n_cpus; *_MB rows are memory watermarks)"},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    all_rows = scale_rows()
+    for row in all_rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    print(f"# wrote {write_bench_json(all_rows)}")

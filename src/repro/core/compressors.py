@@ -123,6 +123,33 @@ def _terngrad_leaf(u, key):
     return s * jnp.sign(u) * b.astype(u.dtype)
 
 
+# ---------------------------------------------------------------------------
+# stochastic uniform quantization, split into quantize/dequantize halves
+# so the integer wire codec (fed.codecs.QuantCodec) ships the SAME levels
+# the in-body roundtrip used to simulate in f32
+# ---------------------------------------------------------------------------
+
+def stochastic_quantize(u, key, *, levels: int):
+    """One leaf → (signed integer levels, scale).
+
+    ``q ∈ [-levels, levels]`` int32 and the f32 scale ``s = max|u| + eps``;
+    :func:`stochastic_dequantize` reproduces ``_qsgd_leaf`` (and, at
+    ``levels=1``, ``_terngrad_leaf``) bit-for-bit — folding ``sign(u)``
+    into the integer is exact, and ``s > |u|`` keeps the floor at 0 for
+    the ternary case so the Bernoulli draw matches terngrad's.
+    """
+    s = jnp.max(jnp.abs(u)) + _EPS
+    y = jnp.abs(u) / s * levels
+    lo = jnp.floor(y)
+    q = lo + jax.random.bernoulli(key, y - lo).astype(u.dtype)
+    return (jnp.sign(u) * q).astype(jnp.int32), s.astype(jnp.float32)
+
+
+def stochastic_dequantize(q, s, *, levels: int):
+    """Integer levels + scale → the reconstructed f32 leaf values."""
+    return (s / levels) * q.astype(jnp.float32)
+
+
 def _topk_leaf(u, key, *, frac: float):
     del key
     flat = u.reshape(-1)

@@ -4,4 +4,7 @@ from .synthetic import (  # noqa: F401
     partition_dirichlet, partition_iid, partition_labels,
     sample_local_batches,
 )
-from .federated import FederatedDataset, make_federated_dataset  # noqa: F401
+from .federated import (  # noqa: F401
+    CohortedDataset, CohortShard, FederatedDataset, cohort_gather,
+    make_cohorted_dataset, make_federated_dataset,
+)

@@ -9,13 +9,14 @@ from .algorithms import (  # noqa: F401
     list_algorithms, register_algorithm, uplink_bits,
 )
 from .codecs import (  # noqa: F401
-    DenseCodec, MaskCodec, SignCodec, SparseCodec, UplinkCodec, WireMsg,
-    make_codec, mask_count_bits, min_count_dtype, template_of,
+    DenseCodec, MaskCodec, QuantCodec, SignCodec, SparseCodec, UplinkCodec,
+    WireMsg, make_codec, mask_count_bits, min_count_dtype, template_of,
 )
 from .engine import (  # noqa: F401
-    make_client_schedule, make_experiment_program, make_round_body,
-    make_round_engine, make_seeded_experiment_program,
-    make_sharded_sweep_program, make_sweep_program, sweep_device_count,
+    CohortRunner, make_client_schedule, make_cohort_engine,
+    make_experiment_program, make_round_body, make_round_engine,
+    make_seeded_experiment_program, make_sharded_sweep_program,
+    make_sweep_program, sweep_device_count,
 )
 from .api import (  # noqa: F401
     ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,

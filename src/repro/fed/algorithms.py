@@ -61,6 +61,7 @@ Experiment API, examples, and benchmarks pick it up by name.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -73,12 +74,19 @@ from ..core import (FedMRNConfig, NoiseConfig, baseline_record,
                     sample_final_mask, sgd_local_update, tree_masked_noise,
                     tree_num_params)
 from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
-from .codecs import (DenseCodec, MaskCodec, SignCodec, SparseCodec,
-                     UplinkCodec, make_codec, min_count_dtype,
+from ..core.masking import tree_bernoulli_stacked
+from .codecs import (DenseCodec, MaskCodec, QuantCodec, SignCodec,
+                     SparseCodec, UplinkCodec, make_codec, min_count_dtype,
                      template_of)
 
 Pytree = Any
 RoundBody = Callable[..., Tuple[Pytree, Pytree, jax.Array]]
+# the cohort tier's split round body: (stacked msg, agg weights, losses)
+# out of one cohort's clients, and a server apply over the merged
+# aggregate — see Algorithm.make_cohort_body
+CohortBody = Tuple[UplinkCodec, Callable[..., Tuple[Any, jax.Array,
+                                                    jax.Array]],
+                   Callable[..., Tuple[Pytree, Pytree]]]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -189,6 +197,22 @@ class Algorithm:
     codec: Optional[Callable[[FLConfig, Pytree], UplinkCodec]] = None
     init_state: Callable[[FLConfig, Pytree], Pytree] = _no_state
     validate: Callable[[FLConfig], None] = _no_validate
+    # the streaming cohort tier's SPLIT round body (optional):
+    #
+    #   make_cohort_body(loss_fn, cfg, params)
+    #       -> (codec,
+    #           uplink(seed, w, state, batches, cids, weights, round_idx)
+    #               -> (stacked WireMsg, agg_weights (Kc,), losses (Kc,S)),
+    #           apply(seed, w, state, aggregate, round_idx)
+    #               -> (new_w, new_state))
+    #
+    # The engine runs `uplink` once per cohort, folds the messages into
+    # codec partials (codec.partial_aggregate / merge_partials), and
+    # calls `apply` once per round on the finalized aggregate — the
+    # trajectory must match make_round_body over the concatenated
+    # client stack.  None → the family cannot stream (engines raise).
+    make_cohort_body: Optional[
+        Callable[[Callable, FLConfig, Pytree], CohortBody]] = None
     # deprecated (one release): derive-a-codec shims — see class docstring
     uplink_record: Optional[Callable[[FLConfig, Pytree], int]] = None
     uplink_kind: Optional[str] = None
@@ -418,9 +442,47 @@ def _fedmrn_validate(cfg: FLConfig) -> None:
     NoiseConfig(dist=cfg.noise_dist, alpha=cfg.noise_alpha)  # checks dist
 
 
+def _fedmrn_cohort_body(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
+    """Cohort-streaming split of the FedMRN round: PSM train + mask draw
+    per cohort, Eq. (5) applied once on the merged codec partials."""
+    if cfg.error_feedback:
+        raise ValueError(
+            "engine='cohort' streams cohorts through device memory; "
+            "error_feedback keeps a C × P residual stack resident — run "
+            "it on engine='scan'")
+    mrn = cfg.fedmrn_config()
+    codec = _fedmrn_codec(cfg, params)
+
+    def uplink(seed, w, state, batches, cids, weights, round_idx):
+        train_base = jax.random.key(seed + 1)
+
+        def per_client(b, cid):
+            noise_id = jnp.int32(0) if cfg.shared_noise else cid
+            seed_key = client_round_key(seed, round_idx, noise_id)
+            noise = gen_noise(seed_key, w, mrn.noise)
+            train_key = jax.random.fold_in(train_base,
+                                           round_idx * 1000 + cid)
+            u, losses = psm_local_train(loss_fn, w, b, noise, train_key,
+                                        cfg=mrn)
+            num_steps = jax.tree_util.tree_leaves(b)[0].shape[0]
+            mask_key = final_mask_key(train_key, num_steps)
+            m = sample_final_mask(u, noise, mask_key, cfg=mrn)
+            return m, seed_key, losses
+
+        masks, seed_keys, losses = jax.vmap(per_client)(batches, cids)
+        msg = codec.encode_stacked({"mask": masks, "seed": seed_keys})
+        return msg, weights, losses
+
+    def apply(seed, w, state, agg, round_idx):
+        return jax.tree_util.tree_map(mix_add, w, agg), state
+
+    return codec, uplink, apply
+
+
 # compressors whose quantization IS the codec's encode step (no in-body
-# roundtrip): deterministic sign → SignCodec, magnitude top-k → SparseCodec
-_CODEC_COMPRESSORS = ("signsgd", "topk")
+# roundtrip): deterministic sign → SignCodec, magnitude top-k →
+# SparseCodec, stochastic uniform quantizers → QuantCodec
+_CODEC_COMPRESSORS = ("signsgd", "topk", "qsgd", "terngrad")
 
 
 def _fedavg_family_codec(compressor_name: Optional[str]):
@@ -434,9 +496,16 @@ def _fedavg_family_codec(compressor_name: Optional[str]):
             return SignCodec(t, name="signsgd", backend=cfg.backend)
         if compressor_name == "topk":
             return SparseCodec(t, name="topk", frac=cfg.topk_frac)
-        # stochastic quantizers roundtrip inside the body; the f32
-        # transport stands in for the quantized format, whose true cost
-        # the record reports (exact + paper-style, comm.py §5.1.3)
+        if compressor_name == "qsgd":
+            return QuantCodec(t, name="qsgd",
+                              levels=(1 << cfg.qsgd_bits) - 1,
+                              paper_bpp=float(cfg.qsgd_bits))
+        if compressor_name == "terngrad":
+            return QuantCodec(t, name="terngrad", levels=1,
+                              paper_bpp=math.log2(3))
+        # the remaining stochastic compressors roundtrip inside the body;
+        # the f32 transport stands in for the quantized format, whose
+        # true cost the record reports (exact + paper, comm.py §5.1.3)
         P = tree_num_params(params)
         L = len(jax.tree_util.tree_leaves(params))
         rec = baseline_record(compressor_name, P, L,
@@ -465,19 +534,63 @@ def _fedavg_family_body(compressor_name: Optional[str]):
 
             def per_client(b, cid):
                 u, losses = sgd_local_update(loss_fn, w, b, lr=cfg.lr)
+                ckey = jax.random.fold_in(comp_base,
+                                          round_idx * 1000 + cid)
                 if compressor is not None:
-                    u = compressor.roundtrip(
-                        u, jax.random.fold_in(comp_base,
-                                              round_idx * 1000 + cid))
-                return u, losses
+                    u = compressor.roundtrip(u, ckey)
+                return u, ckey, losses
 
-            updates, losses = jax.vmap(per_client)(batches, picked)
-            msg = codec.encode_stacked({"value": updates})
+            updates, ckeys, losses = jax.vmap(per_client)(batches, picked)
+            payload = {"value": updates}
+            if codec.needs_key:
+                # stochastic quantizers draw inside encode — same key
+                # chain the in-body roundtrip used (ckeys dead-code
+                # otherwise)
+                payload["key"] = ckeys
+            msg = codec.encode_stacked(payload)
             agg = codec.aggregate(msg, weights)
             new_w = jax.tree_util.tree_map(mix_add, w, agg)
             return new_w, state, losses, codec.round_bits(msg)
 
         return round_fn
+
+    return build
+
+
+def _fedavg_family_cohort_body(compressor_name: Optional[str]):
+    """Cohort-tier builder for fedavg + the post-training compressors."""
+
+    def build(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
+        mrn = cfg.fedmrn_config()
+        codec = _fedavg_family_codec(compressor_name)(cfg, params)
+        compressor = (None if compressor_name is None
+                      or compressor_name in _CODEC_COMPRESSORS else
+                      make_compressor(compressor_name,
+                                      topk_frac=cfg.topk_frac,
+                                      qsgd_bits=cfg.qsgd_bits,
+                                      noise=mrn.noise))
+
+        def uplink(seed, w, state, batches, cids, weights, round_idx):
+            comp_base = jax.random.key(seed + 3)
+
+            def per_client(b, cid):
+                u, losses = sgd_local_update(loss_fn, w, b, lr=cfg.lr)
+                ckey = jax.random.fold_in(comp_base,
+                                          round_idx * 1000 + cid)
+                if compressor is not None:
+                    u = compressor.roundtrip(u, ckey)
+                return u, ckey, losses
+
+            updates, ckeys, losses = jax.vmap(per_client)(batches, cids)
+            payload = {"value": updates}
+            if codec.needs_key:
+                payload["key"] = ckeys
+            return codec.encode_stacked(payload), weights, losses
+
+        def apply(seed, w, state, agg, round_idx):
+            return jax.tree_util.tree_map(mix_add, w, agg), state
+
+        return codec, uplink, apply
 
     return build
 
@@ -542,6 +655,47 @@ def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
     return round_fn
 
 
+def _fedpm_cohort_body(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
+    """Cohort-streaming FedPM: per-cohort vote counts, Beta(1,1)-smoothed
+    posterior applied once on the merged count."""
+    noise_cfg = NoiseConfig(dist="uniform", alpha=0.1)
+    codec = _fedpm_codec(cfg, params)
+
+    def uplink(seed, w, state, batches, cids, weights, round_idx):
+        w_frozen = gen_noise(jax.random.key(seed), params, noise_cfg)
+        key_base = jax.random.key(seed + 2)
+        scores = state["scores"]
+
+        def per_client(b, cid):
+            ckey = jax.random.fold_in(key_base, round_idx * 1000 + cid)
+            s_final, losses = fedpm_local(loss_fn, w_frozen, scores, b,
+                                          lr=cfg.lr, key=ckey, sample=False)
+            nb = jax.tree_util.tree_leaves(b)[0].shape[0]
+            mask_key = jax.random.fold_in(ckey, nb + 1)
+            probs_k = jax.tree_util.tree_map(jax.nn.sigmoid, s_final)
+            return probs_k, mask_key, losses
+
+        probs_k, mask_keys, losses = jax.vmap(per_client)(batches, cids)
+        # same Bernoulli draw (key/uniform streams) the fused uplink
+        # performs; votes carry unit weight (original FedPM rule)
+        masks = tree_bernoulli_stacked(probs_k, mask_keys)
+        msg = codec.encode_stacked({"mask": masks})
+        return msg, jnp.ones_like(weights), losses
+
+    def apply(seed, w, state, m_sum, round_idx):
+        K = cfg.clients_per_round
+        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (K + 2.0),
+                                       m_sum)
+        new_scores = jax.tree_util.tree_map(
+            lambda p_: jnp.log(p_ / (1 - p_)), probs)
+        w_frozen = gen_noise(jax.random.key(seed), params, noise_cfg)
+        new_w = jax.tree_util.tree_map(
+            lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
+        return new_w, {"scores": new_scores}
+
+    return codec, uplink, apply
+
+
 def _fedsparsify_codec(cfg: FLConfig, params: Pytree) -> SparseCodec:
     return SparseCodec(template_of(params), name="fedsparsify",
                        frac=cfg.sparsify_frac)
@@ -566,6 +720,26 @@ def _fedsparsify_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
     return round_fn
 
 
+def _fedsparsify_cohort_body(loss_fn, cfg: FLConfig,
+                             params: Pytree) -> CohortBody:
+    codec = _fedsparsify_codec(cfg, params)
+
+    def uplink(seed, w, state, batches, cids, weights, round_idx):
+        def per_client(b, cid):
+            return fedsparsify_local(loss_fn, w, b, lr=cfg.lr,
+                                     frac=cfg.sparsify_frac)
+
+        w_locals, losses = jax.vmap(per_client)(batches, cids)
+        return codec.encode_stacked({"value": w_locals}), weights, losses
+
+    def apply(seed, w, state, agg, round_idx):
+        new_w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
+                                       w, agg)
+        return new_w, state
+
+    return codec, uplink, apply
+
+
 # ---------------------------------------------------------------------------
 # validation + built-in registration
 # ---------------------------------------------------------------------------
@@ -587,17 +761,21 @@ def _register_builtins() -> None:
     for name in ("fedmrn", "fedmrns"):
         register_algorithm(Algorithm(
             name=name, make_round_body=_fedmrn_body, codec=_fedmrn_codec,
-            init_state=_fedmrn_state, validate=_fedmrn_validate))
+            init_state=_fedmrn_state, validate=_fedmrn_validate,
+            make_cohort_body=_fedmrn_cohort_body))
     register_algorithm(Algorithm(
         name="fedavg", make_round_body=_fedavg_family_body(None),
-        codec=_fedavg_family_codec(None)))
+        codec=_fedavg_family_codec(None),
+        make_cohort_body=_fedavg_family_cohort_body(None)))
     register_algorithm(Algorithm(
         name="fedpm", make_round_body=_fedpm_body, codec=_fedpm_codec,
-        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)}))
+        init_state=lambda cfg, p: {"scores": _tree_zeros_like(p)},
+        make_cohort_body=_fedpm_cohort_body))
     register_algorithm(Algorithm(
         name="fedsparsify", make_round_body=_fedsparsify_body,
         codec=_fedsparsify_codec,
-        validate=_frac_validate("sparsify_frac")))
+        validate=_frac_validate("sparsify_frac"),
+        make_cohort_body=_fedsparsify_cohort_body))
     for comp in COMPRESSOR_REGISTRY:
         if comp == "none":
             continue
@@ -606,7 +784,8 @@ def _register_builtins() -> None:
             codec=_fedavg_family_codec(comp),
             validate=(_frac_validate("topk_frac") if comp == "topk"
                       else _qsgd_validate if comp == "qsgd"
-                      else _no_validate)))
+                      else _no_validate),
+            make_cohort_body=_fedavg_family_cohort_body(comp)))
 
 
 _register_builtins()

@@ -57,18 +57,22 @@ import numpy as np
 from ..core import tree_num_params
 from ..core.comm import CommRecord
 from ..core.evaluation import make_eval_program
-from ..data.federated import FederatedDataset
+from ..data.federated import CohortedDataset, FederatedDataset
 from .algorithms import (ALGORITHMS, Algorithm, FLConfig, algorithm_codec,
                          get_algorithm, register_algorithm, uplink_bits)
 from .codecs import UplinkCodec
 from .engine import (eval_round_indices, make_client_schedule,
-                     make_seeded_experiment_program,
+                     make_cohort_engine, make_seeded_experiment_program,
                      make_sharded_sweep_program, make_sweep_program,
                      sweep_device_count)
 
 Pytree = Any
 
-ENGINES = ("scan", "batched", "looped")
+ENGINES = ("scan", "cohort", "batched", "looped")
+
+# engine="cohort" shards the population into cohorts of this many clients
+# when the caller passes neither a CohortedDataset nor cohort_size=
+DEFAULT_COHORT_SIZE = 256
 
 # The engine-independent history schema: every engine's to_history() dict
 # has EXACTLY these keys (golden-tested in tests/test_experiment_api.py).
@@ -236,11 +240,16 @@ class ExperimentSpec:
     else ``eval_apply`` (params, x) -> logits, auto-wired into a batched
     on-device eval program over the dataset's test split; else — for the
     host-loop engines only — a Python ``eval_fn``.
+
+    ``data`` is a device-resident :class:`FederatedDataset` (every
+    engine) or a host-resident :class:`CohortedDataset` (the streaming
+    ``engine="cohort"`` only — the other engines need the whole
+    population device-resident).
     """
 
     loss_fn: Callable[[Pytree, Any], jax.Array]
     params: Pytree
-    data: FederatedDataset
+    data: Union[FederatedDataset, CohortedDataset]
     config: FLConfig
     algorithm: Optional[Union[str, Algorithm]] = None
     eval_program: Optional[Callable[[Pytree], jax.Array]] = None
@@ -273,10 +282,11 @@ class Experiment:
     """Run / sweep an :class:`ExperimentSpec` on any engine."""
 
     def __init__(self, spec: ExperimentSpec):
-        if not isinstance(spec.data, FederatedDataset):
+        if not isinstance(spec.data, (FederatedDataset, CohortedDataset)):
             raise ValueError(
                 "ExperimentSpec.data must be a device-resident "
-                "FederatedDataset (see repro.data.make_federated_dataset); "
+                "FederatedDataset (see repro.data.make_federated_dataset) "
+                "or a host-resident CohortedDataset for engine='cohort'; "
                 "legacy host batch callbacks only work through the "
                 "deprecated run_federated shim")
         self.spec = spec
@@ -303,6 +313,8 @@ class Experiment:
                 f"cfg expects {self.cfg.num_clients}")
         self._programs: Dict[Any, Tuple[Callable, Pytree, Pytree]] = {}
         self._eval_prog: Optional[Callable] = None
+        self._runners: Dict[Any, Any] = {}       # cohort engine cache
+        self._cohorted: Dict[int, CohortedDataset] = {}   # per cohort size
 
     # ---- the wire format ----------------------------------------------
 
@@ -386,16 +398,36 @@ class Experiment:
     # ---- run ----------------------------------------------------------
 
     def run(self, *, engine: str = "scan", seed: Optional[int] = None,
-            chunk: Optional[int] = None) -> RunResult:
+            chunk: Optional[int] = None,
+            cohort_size: Optional[int] = None,
+            prefetch: bool = True) -> RunResult:
         """Execute the spec once; returns a frozen :class:`RunResult`.
 
         ``engine="scan"`` (default) fuses the whole experiment into
-        ⌈R/chunk⌉ jitted dispatches; ``"batched"`` dispatches one program
-        per round; ``"looped"`` is the per-client reference loop.
-        ``seed`` overrides ``config.seed`` without rebuilding programs.
+        ⌈R/chunk⌉ jitted dispatches; ``"cohort"`` streams a
+        larger-than-HBM population through the device cohort by cohort
+        (``cohort_size`` clients staged at a time, default
+        min(num_clients, 256); ``prefetch=False`` disables the
+        double-buffered host→device overlap); ``"batched"`` dispatches
+        one program per round; ``"looped"`` is the per-client reference
+        loop.  ``seed`` overrides ``config.seed`` without rebuilding
+        programs.
         """
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
+        if engine == "cohort":
+            cfg = self.cfg if seed is None else dataclasses.replace(
+                self.cfg, seed=int(seed))
+            return self._run_cohort(cfg, cohort_size, prefetch)
+        if cohort_size is not None:
+            raise ValueError(
+                f"cohort_size= only applies to engine='cohort', not "
+                f"{engine!r}")
+        if isinstance(self.spec.data, CohortedDataset):
+            raise ValueError(
+                f"engine={engine!r} needs the whole population "
+                "device-resident (a FederatedDataset); a CohortedDataset "
+                "only runs on engine='cohort'")
         cfg = self.cfg if seed is None else dataclasses.replace(
             self.cfg, seed=int(seed))
         if engine == "scan":
@@ -422,6 +454,51 @@ class Experiment:
         result = self._result_from_metrics(
             cfg, "scan", metrics, schedule, dispatches, time.time() - t0)
         return result
+
+    def _cohorted_data(self, cohort_size: Optional[int]) -> CohortedDataset:
+        """The spec's data as a CohortedDataset (converted + cached)."""
+        if isinstance(self.spec.data, CohortedDataset):
+            if cohort_size is not None:
+                raise ValueError(
+                    "cohort_size= conflicts with a pre-built "
+                    "CohortedDataset — the shard layout is fixed at "
+                    "construction (make_cohorted_dataset / .cohorted)")
+            return self.spec.data
+        size = (min(self.spec.data.num_clients, DEFAULT_COHORT_SIZE)
+                if cohort_size is None else int(cohort_size))
+        if size not in self._cohorted:
+            self._cohorted[size] = self.spec.data.cohorted(size)
+        return self._cohorted[size]
+
+    def _run_cohort(self, cfg: FLConfig, cohort_size: Optional[int],
+                    prefetch: bool) -> RunResult:
+        """The streaming cohort engine, through the same RunResult path.
+
+        The runner cache is keyed like :meth:`_program` (seed normalised
+        out — ``CohortRunner.run`` takes the seed at call time), plus the
+        cohort layout; ``prefetch`` is a run-time toggle, not a cache key.
+        """
+        data = self._cohorted_data(cohort_size)
+        prog = self.eval_program()
+        if prog is None:
+            raise ValueError(
+                "engine='cohort' folds eval into its jitted dispatch "
+                "sequence and needs a pure eval_program (params -> "
+                "metric); pass eval_program or eval_apply to "
+                "ExperimentSpec")
+        key = ("cohort", id(data), dataclasses.replace(cfg, seed=0),
+               self.spec.eval_every, self.spec.client_weights)
+        if key not in self._runners:
+            self._runners[key] = make_cohort_engine(
+                self.spec.loss_fn, cfg, self.spec.params, data,
+                eval_program=prog, eval_every=self.spec.eval_every,
+                client_weights=self.spec.client_weights)
+        runner = self._runners[key]
+        t0 = time.time()
+        metrics, schedule, dispatches = runner.run(seed=cfg.seed,
+                                                   prefetch=prefetch)
+        return self._result_from_metrics(
+            cfg, "cohort", metrics, schedule, dispatches, time.time() - t0)
 
     def _result_from_metrics(self, cfg, engine, metrics, schedule,
                              dispatches, wall_s) -> RunResult:
@@ -481,6 +558,11 @@ class Experiment:
         constants like lr live outside the traced argument set), with
         seeds vmapped/sharded *within* each point.
         """
+        if isinstance(self.spec.data, CohortedDataset):
+            raise ValueError(
+                "sweep() runs the vmapped scan programs, which need the "
+                "whole population device-resident (a FederatedDataset); "
+                "host-loop engine='cohort' runs via run() per seed")
         if sharding not in (None, "none", "devices"):
             raise ValueError(
                 f"unknown sharding {sharding!r} (None or 'devices')")

@@ -60,6 +60,8 @@ import numpy as np
 from ..core import NoiseConfig, gen_noise, mix_add
 from ..core.backend import resolve_backend
 from ..core.comm import CommRecord
+from ..core.compressors import (_KEY_SALT, stochastic_dequantize,
+                                stochastic_quantize)
 from ..core.masking import (tree_bernoulli_stacked, tree_mask_uplink,
                             tree_sample_mask_stacked)
 from ..core.packing import (tree_flat_layout, tree_num_params, tree_pack,
@@ -161,6 +163,11 @@ class UplinkCodec:
     name: str = "codec"
     record: Optional[CommRecord] = None
 
+    # codecs whose encode needs a per-client PRNG key in the payload
+    # (stochastic quantizers) set this to True; engines then thread the
+    # client round key through as ``payload["key"]``
+    needs_key = False
+
     # --- the protocol ---------------------------------------------------
     def encode(self, payload: Pytree) -> WireMsg:
         raise NotImplementedError
@@ -181,6 +188,47 @@ class UplinkCodec:
         P = tree_num_params(params)
         return CommRecord(self.name, P, self.measured_bits(params),
                           self._paper_bits(params), 32 * P)
+
+    # --- hierarchical (cohort) aggregation ------------------------------
+    # The cohort engine never sees the whole client stack at once: each
+    # cohort contributes a PARTIAL (an unnormalized weighted sum plus the
+    # weight mass it covers), partials tree-reduce across cohorts, and
+    # one finalize recovers exactly what ``aggregate`` over the full
+    # stack would have produced:
+    #
+    #   finalize(merge(p_1, …, p_J)) == aggregate(concat(stacks), weights)
+    #
+    # up to f32 summation order.  ``valid`` masks padding slots (cohort
+    # visits are padded to a common K for one compiled program).
+
+    def _wsum(self, stacked: WireMsg, w: jax.Array) -> Pytree:
+        """Unnormalized Σ_k w_k · decode_k over the leading client axis."""
+        raise NotImplementedError
+
+    def partial_aggregate(self, stacked: WireMsg, weights: jax.Array,
+                          *, valid: Optional[jax.Array] = None) -> Dict:
+        """One cohort's contribution: ``{"sum", "weight", "n"}``."""
+        if valid is None:
+            w = weights
+            n = jnp.int32(jnp.shape(weights)[0])
+        else:
+            w = weights * valid.astype(weights.dtype)
+            n = jnp.sum(valid.astype(jnp.int32))
+        return {"sum": self._wsum(stacked, w), "weight": jnp.sum(w), "n": n}
+
+    def merge_partials(self, acc: Dict, part: Dict) -> Dict:
+        out = {}
+        for k in acc:
+            if k == "seed":                # shared noise seed: first wins
+                out[k] = acc[k]
+            else:
+                out[k] = jax.tree_util.tree_map(jnp.add, acc[k], part[k])
+        return out
+
+    def finalize_partial(self, partial: Dict) -> Pytree:
+        """Merged partials → the server update ``aggregate`` would give."""
+        return jax.tree_util.tree_map(
+            lambda s: s / partial["weight"], partial["sum"])
 
     # --- shared machinery ----------------------------------------------
     def encode_stacked(self, payloads: Pytree) -> WireMsg:
@@ -313,6 +361,80 @@ class MaskCodec(UplinkCodec):
         noise = gen_noise(key0, self.template, self.noise)
         return jax.tree_util.tree_map(
             lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_avg)
+
+    # --- hierarchical partials ------------------------------------------
+    def partial_aggregate(self, stacked: WireMsg, weights: jax.Array,
+                          *, valid: Optional[jax.Array] = None) -> Dict:
+        words = stacked.buffers["words"]
+        K = jnp.shape(words)[0]
+        if valid is None:
+            w = weights
+            n = jnp.int32(K)
+        else:
+            w = weights * valid.astype(weights.dtype)
+            n = jnp.sum(valid.astype(jnp.int32))
+        part: Dict[str, Any] = {"weight": jnp.sum(w), "n": n}
+        if self.count_aggregatable and self.count_dtype is not None:
+            # integer count partial: zero the padding rows' packed words,
+            # popcount-sum in count_dtype.  In signed mode a zeroed row
+            # still decodes as all −1 (2·0 − 1), so the raw masked sum is
+            # 2c − K; adding (K − n) restores the true Σ±1 over the n
+            # valid rows — an exact integer adjustment.
+            if valid is not None:
+                words = words * valid[:, None].astype(words.dtype)
+            counts = tree_unpack_counts(words, self.template,
+                                        mode=self.mode,
+                                        dtype=self.count_dtype,
+                                        backend=self.backend)
+            if self.mode == "signed" and valid is not None:
+                fix = (jnp.int32(K) - n).astype(self.count_dtype)
+                counts = jax.tree_util.tree_map(
+                    lambda c: (c + fix).astype(self.count_dtype), counts)
+            part["counts"] = counts
+        else:
+            masks = tree_unpack_stacked(words, self.template,
+                                        mode=self.mode,
+                                        backend=self.backend)
+            if self.noise is not None and not self.shared_noise:
+                # Eq. (5): fold each client's regenerated noise in before
+                # the weighted sum — the partial is already noise-scaled
+                keys = jax.random.wrap_key_data(stacked.buffers["seed"])
+
+                def one(key, m_c):
+                    noise = gen_noise(key, self.template, self.noise)
+                    return jax.tree_util.tree_map(
+                        lambda nl, ml: nl * ml.astype(nl.dtype), noise, m_c)
+
+                part["sum"] = _weighted(w, jax.vmap(one)(keys, masks))
+            else:
+                part["sum"] = _weighted(w, masks)
+        if self.noise is not None and self.shared_noise:
+            # one shared noise tensor scales the final count — carry the
+            # seed (identical across clients; slot 0 is always valid)
+            part["seed"] = stacked.buffers["seed"][0]
+        return part
+
+    def finalize_partial(self, partial: Dict) -> Pytree:
+        per_client_noise = self.noise is not None and not self.shared_noise
+        if "counts" in partial:
+            n = partial["n"].astype(jnp.float32)
+            m = jax.tree_util.tree_map(
+                lambda c: (c.astype(jnp.float32) / n if self.normalize
+                           else c.astype(jnp.float32)),
+                partial["counts"])
+        else:
+            m = partial["sum"]
+            if self.normalize:
+                m = jax.tree_util.tree_map(
+                    lambda s: s / partial["weight"], m)
+            if per_client_noise:
+                return m                    # noise already folded in
+        if self.noise is None:
+            return m
+        key0 = jax.random.wrap_key_data(partial["seed"])
+        noise = gen_noise(key0, self.template, self.noise)
+        return jax.tree_util.tree_map(
+            lambda nl, ml: nl * ml.astype(nl.dtype), noise, m)
 
     def uplink_stacked(self, scores: Pytree, noise_keys, mask_keys,
                        weights: jax.Array, *, probs: bool = False):
@@ -457,16 +579,18 @@ class SignCodec(UplinkCodec):
             scale[i] * l.astype(jnp.float32) for i, l in enumerate(leaves)])
         return {"value": value}
 
-    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+    def _wsum(self, stacked: WireMsg, w: jax.Array) -> Pytree:
         signs = tree_unpack_stacked(stacked.buffers["words"], self.template,
                                     mode="signed", backend=self.backend)
         scale = stacked.buffers["scale"]          # (K, L)
-        wn = weights / jnp.sum(weights)
         leaves, treedef = jax.tree_util.tree_flatten(signs)
-        # Σ_k w'_k s_{k,l} m_{k,l} — fold the scale into the weights
-        out = [jnp.tensordot(wn * scale[:, i], l.astype(jnp.float32),
+        # Σ_k w_k s_{k,l} m_{k,l} — fold the scale into the weights
+        out = [jnp.tensordot(w * scale[:, i], l.astype(jnp.float32),
                              axes=1) for i, l in enumerate(leaves)]
         return jax.tree_util.tree_unflatten(treedef, out)
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        return self._wsum(stacked, weights / jnp.sum(weights))
 
     def template_payload(self, params: Pytree) -> Pytree:
         return {"value": template_of(params)}
@@ -503,16 +627,130 @@ class DenseCodec(UplinkCodec):
             lambda piece, leaf: piece.astype(leaf.dtype),
             split, self.template)}
 
+    def _wsum(self, stacked: WireMsg, w: jax.Array) -> Pytree:
+        return tree_split_flat(
+            jnp.tensordot(w, stacked.buffers["values"], axes=1),
+            self.template)
+
     def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
-        wn = weights / jnp.sum(weights)
-        agg = jnp.tensordot(wn, stacked.buffers["values"], axes=1)
-        return tree_split_flat(agg, self.template)   # f32, like _weighted
+        # f32, like _weighted
+        return self._wsum(stacked, weights / jnp.sum(weights))
 
     def template_payload(self, params: Pytree) -> Pytree:
         return {"value": template_of(params)}
 
     def _paper_bits(self, params: Pytree) -> int:
         return 32 * tree_num_params(params)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class QuantCodec(UplinkCodec):
+    """Stochastic uniform quantization over a REAL integer wire buffer —
+    the qsgd / terngrad formats (qsgd: ``levels = 2^b − 1``; terngrad:
+    ``levels = 1``, i.e. ternary).
+
+    ``payload = {"value": pytree, "key": client PRNG key}``.  Encode
+    replicates the in-body compressor exactly — fold ``_KEY_SALT`` then
+    the leaf index into the key, ``stochastic_quantize`` each leaf — and
+    tight-packs the biased integer levels at ``⌈log2(2·levels+1)⌉`` bits
+    each (fields straddle uint32 word boundaries) plus one f32 scale per
+    leaf, so ``msg.bits`` measures the true integer wire cost (``record``
+    stays None; the paper-style figure keeps the entropy-coded bpp).
+    ``aggregate`` dequantizes and weight-sums; trajectories are
+    bit-identical to the old f32 roundtrip because dequantization
+    reproduces ``_qsgd_leaf`` / ``_terngrad_leaf`` values bit-for-bit.
+    """
+
+    levels: int = 3
+    paper_bpp: float = 2.0
+
+    needs_key = True
+
+    def _layout(self):
+        _, _, sizes, offsets = tree_flat_layout(self.template)
+        return sizes, offsets
+
+    @property
+    def field_bits(self) -> int:
+        """Tight field width: a biased level lives in [0, 2·levels]."""
+        return max(1, (2 * self.levels).bit_length())
+
+    def _field_pos(self, P: int):
+        nb = self.field_bits
+        b0 = jnp.arange(P, dtype=jnp.uint32) * nb
+        w0 = (b0 >> 5).astype(jnp.int32)
+        off = b0 & jnp.uint32(31)
+        # left-shift count for the next word's piece; off == 0 means the
+        # field sits wholly in word w0 (shift guarded to stay < 32)
+        rem = jnp.where(off == 0, jnp.uint32(1), jnp.uint32(32) - off)
+        return w0, off, rem
+
+    def _pack_flat(self, q_flat: jax.Array) -> jax.Array:
+        """(P,) signed levels → tight-packed uint32 words."""
+        P = q_flat.shape[0]
+        W = -(-(P * self.field_bits) // 32)
+        v = (q_flat + self.levels).astype(jnp.uint32)
+        w0, off, rem = self._field_pos(P)
+        lo = v << off
+        hi = jnp.where(off == 0, jnp.uint32(0), v >> rem)
+        # disjoint bit ranges → scatter-adds cannot carry
+        words = jnp.zeros((W + 1,), jnp.uint32)
+        return words.at[w0].add(lo).at[w0 + 1].add(hi)[:W]
+
+    def _unpack_flat(self, words: jax.Array) -> jax.Array:
+        """Tight-packed words → (P,) signed integer levels (int32)."""
+        P = sum(self._layout()[0])
+        ext = jnp.concatenate([words, jnp.zeros((1,), jnp.uint32)])
+        w0, off, rem = self._field_pos(P)
+        part = (ext[w0] >> off) | jnp.where(
+            off == 0, jnp.uint32(0), ext[w0 + 1] << rem)
+        fmask = jnp.uint32((1 << self.field_bits) - 1)
+        return (part & fmask).astype(jnp.int32) - self.levels
+
+    def encode(self, payload: Pytree) -> WireMsg:
+        kq = jax.random.fold_in(payload["key"], _KEY_SALT)
+        leaves = jax.tree_util.tree_leaves(payload["value"])
+        qs, scales = [], []
+        for i, leaf in enumerate(leaves):
+            q, s = stochastic_quantize(leaf, jax.random.fold_in(kq, i),
+                                       levels=self.levels)
+            qs.append(q.reshape(-1))
+            scales.append(s)
+        return WireMsg(self.name, {
+            "words": self._pack_flat(jnp.concatenate(qs)),
+            "scale": jnp.stack(scales)})
+
+    def _dequant_flat(self, words: jax.Array, scale: jax.Array) -> jax.Array:
+        """One client's buffers → the dequantized flat (P,) f32 update."""
+        q = self._unpack_flat(words)
+        sizes, offsets = self._layout()
+        parts = [stochastic_dequantize(q[off:off + n], scale[i],
+                                       levels=self.levels)
+                 for i, (n, off) in enumerate(zip(sizes, offsets))]
+        return jnp.concatenate(parts)
+
+    def decode(self, msg: WireMsg) -> Pytree:
+        flat = self._dequant_flat(msg.buffers["words"],
+                                  msg.buffers["scale"])
+        split = tree_split_flat(flat, self.template)
+        return {"value": jax.tree_util.tree_map(
+            lambda piece, leaf: piece.astype(leaf.dtype),
+            split, self.template)}
+
+    def _wsum(self, stacked: WireMsg, w: jax.Array) -> Pytree:
+        dense = jax.vmap(self._dequant_flat)(stacked.buffers["words"],
+                                             stacked.buffers["scale"])
+        return tree_split_flat(jnp.tensordot(w, dense, axes=1),
+                               self.template)
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        return self._wsum(stacked, weights / jnp.sum(weights))
+
+    def template_payload(self, params: Pytree) -> Pytree:
+        return {"value": template_of(params), "key": jax.random.key(0)}
+
+    def _paper_bits(self, params: Pytree) -> int:
+        return int(self.paper_bpp * tree_num_params(params))
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -556,12 +794,14 @@ class SparseCodec(UplinkCodec):
             lambda piece, leaf: piece.astype(leaf.dtype),
             split, self.template)}
 
-    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
-        wn = weights / jnp.sum(weights)
+    def _wsum(self, stacked: WireMsg, w: jax.Array) -> Pytree:
         dense = jax.vmap(self._decode_flat)(stacked.buffers["indices"],
                                             stacked.buffers["values"])
-        return tree_split_flat(jnp.tensordot(wn, dense, axes=1),
+        return tree_split_flat(jnp.tensordot(w, dense, axes=1),
                                self.template)
+
+    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+        return self._wsum(stacked, weights / jnp.sum(weights))
 
     def template_payload(self, params: Pytree) -> Pytree:
         return {"value": template_of(params)}

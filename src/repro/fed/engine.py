@@ -47,8 +47,11 @@ stacked over ALL clients, fedpm global scores); ``{}`` when stateless.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
+from concurrent.futures import ThreadPoolExecutor
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -60,7 +63,7 @@ from .algorithms import (  # noqa: F401  (re-exported: legacy import site)
     fedsparsify_local, get_algorithm, list_algorithms, register_algorithm,
     uplink_bits,
 )
-from .codecs import make_codec
+from .codecs import MaskCodec, make_codec, min_count_dtype
 
 Pytree = Any
 
@@ -436,3 +439,246 @@ def make_sharded_sweep_program(
         )(seeds, w, state, metrics, r0, schedule_chunks)
 
     return run_sweep, state0, metrics0
+
+
+# ---------------------------------------------------------------------------
+# the streaming cohort tier: larger-than-HBM populations
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Visit:
+    """One (round, cohort) dispatch of the cohort engine's plan."""
+
+    round_idx: int
+    cohort: int
+    cids: np.ndarray        # (Kpad,) int32 global ids, padded w/ repeats
+    locs: np.ndarray        # (Kpad,) int32 cohort-local rows
+    weights: np.ndarray     # (Kpad,) f32 raw client weights
+    n_valid: int            # real clients in this visit (rest masked)
+    new_block: bool         # first visit touching this staged cohort
+    round_end: bool         # last visit of its round (apply/eval follow)
+
+
+class CohortRunner:
+    """The cohort engine built by :func:`make_cohort_engine`.
+
+    Each round's selected clients are grouped by cohort; every group runs
+    through one jitted visit program (stage-block gather → the family's
+    cohort uplink → ``codec.partial_aggregate``), partials tree-merge
+    across the round's cohorts, and one jitted apply turns the finalized
+    aggregate into the server update.  Cohort blocks are staged
+    host→device on a single background thread (``prefetch=True``) so the
+    next cohort's transfer hides behind the current cohort's compute;
+    ``prefetch=False`` is the strict-serial ablation (stage → compute →
+    stage, a ``block_until_ready`` between).
+    """
+
+    def __init__(self, loss_fn, cfg: FLConfig, params: Pytree, data, *,
+                 eval_program=None, eval_every: int = 1,
+                 client_weights=None):
+        from ..data.federated import CohortedDataset, cohort_gather
+        if not isinstance(data, CohortedDataset):
+            raise ValueError(
+                "engine='cohort' needs a CohortedDataset — build one with "
+                "make_cohorted_dataset or FederatedDataset.cohorted(size)")
+        algo = get_algorithm(cfg.algorithm)
+        if algo.make_cohort_body is None:
+            raise ValueError(
+                f"algorithm {cfg.algorithm!r} declares no cohort body "
+                "(Algorithm.make_cohort_body) — run it on engine='scan'")
+        cw = None if client_weights is None else list(client_weights)
+        if cw is not None and len(cw) != cfg.num_clients:
+            raise ValueError(
+                f"client_weights has {len(cw)} entries, "
+                f"cfg expects {cfg.num_clients}")
+        codec, uplink_fn, apply_fn = algo.make_cohort_body(
+            loss_fn, cfg, params)
+        if cw is not None and isinstance(codec, MaskCodec) \
+                and codec.count_dtype is not None:
+            raise ValueError(
+                "int_mask_agg requires uniform client weights "
+                "(client_weights=None)")
+        if cw is None and isinstance(codec, MaskCodec) \
+                and codec.count_aggregatable and codec.count_dtype is None:
+            # uniform weights + count-aggregatable format: cross-cohort
+            # partials become ⌈log2(K+1)⌉-bit integer popcount sums (the
+            # hierarchical half of ROADMAP direction 2) instead of f32
+            codec = dataclasses.replace(
+                codec, count_dtype=min_count_dtype(cfg.clients_per_round))
+        self.cfg = cfg
+        self.data = data
+        self.codec = codec
+        self._params = params
+        self._state0 = algo.init_state(cfg, params)
+        self._weights_all = np.asarray(
+            [1.0] * cfg.num_clients if cw is None else cw, np.float32)
+        self._eval = None if eval_program is None else jax.jit(eval_program)
+        self._eval_every = eval_every
+        # per-client measured wire bits — linear in K, so K × this equals
+        # the scan engine's per-round codec.round_bits(stacked msg)
+        self._bits_per_client = float(
+            codec.wire_bits(params).uplink_bits)
+
+        steps, batch, seed_b = cfg.local_steps, cfg.batch_size, data.batch_seed
+
+        @jax.jit
+        def visit(seed, w, state, block, cids, locs, wts, n_valid, r):
+            valid = jnp.arange(cids.shape[0], dtype=jnp.int32) < n_valid
+            batches = cohort_gather(block, r, cids, locs, steps=steps,
+                                    batch=batch, batch_seed=seed_b)
+            msg, agg_w, losses = uplink_fn(seed, w, state, batches, cids,
+                                           wts, r)
+            part = codec.partial_aggregate(msg, agg_w, valid=valid)
+            loss_sum = jnp.sum(jnp.where(valid, losses[:, -1], 0.0))
+            return part, loss_sum
+
+        @jax.jit
+        def apply_round(seed, w, state, part, r):
+            agg = codec.finalize_partial(part)
+            return apply_fn(seed, w, state, agg, r)
+
+        self._visit = visit
+        self._merge = jax.jit(codec.merge_partials)
+        self._apply = apply_round
+
+    # ---- round plan ----------------------------------------------------
+
+    def plan(self, schedule: np.ndarray) -> List[_Visit]:
+        """Group the ``(R, K)`` schedule into padded cohort visits.
+
+        Within a round, cohorts are visited in ascending id; every visit
+        is padded to the plan-wide max visit size (one compiled program
+        shape) by repeating its first member with the padding masked out
+        via ``n_valid``.
+        """
+        co, lo = self.data.cohort_of, self.data.local_of
+        rounds = []
+        kpad = 1
+        for r in range(schedule.shape[0]):
+            per: Dict[int, list] = {}
+            for cid in schedule[r]:
+                per.setdefault(int(co[cid]), []).append(int(cid))
+            rounds.append(sorted(per.items()))
+            kpad = max(kpad, max(len(v) for _, v in per.items()))
+        visits = []
+        prev_j = None
+        for r, groups in enumerate(rounds):
+            for g, (j, members) in enumerate(groups):
+                cids = np.asarray(
+                    members + [members[0]] * (kpad - len(members)),
+                    np.int32)
+                visits.append(_Visit(
+                    round_idx=r, cohort=j, cids=cids, locs=lo[cids],
+                    weights=self._weights_all[cids], n_valid=len(members),
+                    new_block=(j != prev_j),
+                    round_end=(g == len(groups) - 1)))
+                prev_j = j
+        return visits
+
+    # ---- the streaming loop --------------------------------------------
+
+    def run(self, *, seed: Optional[int] = None,
+            schedule: Optional[np.ndarray] = None,
+            prefetch: bool = True) -> Tuple[Dict[str, np.ndarray],
+                                            np.ndarray, int]:
+        """Stream the whole experiment; returns ``(metrics, schedule,
+        num_dispatches)`` with scan-engine metric layout (``(R,)`` loss /
+        NaN-padded acc / uplink_bits buffers)."""
+        cfg = self.cfg
+        if seed is None:
+            seed = cfg.seed
+        if schedule is None:
+            schedule = make_client_schedule(cfg, seed)
+        visits = self.plan(schedule)
+        seed_dev = jnp.int32(seed)
+        w, state = self._params, self._state0
+        R = cfg.rounds
+        loss_sums = [jnp.float32(0.0)] * R
+        accs: List[Any] = [np.nan] * R
+        eval_rounds = set(eval_round_indices(cfg, self._eval_every))
+        dispatches = 0
+
+        stage_points = [i for i, v in enumerate(visits) if v.new_block]
+        executor = ThreadPoolExecutor(max_workers=1) if prefetch else None
+        try:
+            if prefetch:
+                sp_iter = iter(stage_points)
+                next(sp_iter)                       # visits[0] stages now
+                fut = executor.submit(self.data.stage, visits[0].cohort)
+                nxt = next(sp_iter, None)
+            block = None
+            part = None
+            for i, v in enumerate(visits):
+                if v.new_block:
+                    if prefetch:
+                        block = fut.result()
+                        if nxt is not None:
+                            fut = executor.submit(self.data.stage,
+                                                  visits[nxt].cohort)
+                            nxt = next(sp_iter, None)
+                    else:
+                        block = self.data.stage(v.cohort)
+                p, loss_sum = self._visit(
+                    seed_dev, w, state, block, jnp.asarray(v.cids),
+                    jnp.asarray(v.locs), jnp.asarray(v.weights),
+                    jnp.int32(v.n_valid), jnp.int32(v.round_idx))
+                dispatches += 1
+                part = p if part is None else self._merge(part, p)
+                r = v.round_idx
+                loss_sums[r] = loss_sums[r] + loss_sum
+                if v.round_end:
+                    w, state = self._apply(seed_dev, w, state, part,
+                                           jnp.int32(r))
+                    part = None
+                    dispatches += 1
+                    if self._eval is not None and r in eval_rounds:
+                        accs[r] = self._eval(w)
+                        dispatches += 1
+                elif not prefetch:
+                    # strict serial: nothing overlaps the next stage
+                    jax.block_until_ready(loss_sum)
+        finally:
+            if executor is not None:
+                executor.shutdown(wait=True)
+
+        K = cfg.clients_per_round
+        metrics = {
+            "loss": np.asarray(jnp.stack(loss_sums)) / np.float32(K),
+            "acc": np.asarray([float(a) for a in accs], np.float32),
+            "uplink_bits": np.full((R,), K * self._bits_per_client,
+                                   np.float32),
+        }
+        self.final_params = w
+        self.final_state = state
+        return metrics, schedule, dispatches
+
+
+def make_cohort_engine(
+    loss_fn: Callable[[Pytree, Any], jax.Array],
+    cfg: FLConfig,
+    params: Pytree,
+    data,                                   # CohortedDataset
+    *,
+    eval_program: Optional[Callable[[Pytree], jax.Array]] = None,
+    eval_every: int = 1,
+    client_weights: Optional[Any] = None,
+) -> CohortRunner:
+    """Build the streaming cohort engine over a ``CohortedDataset``.
+
+    The larger-than-HBM tier: the population's examples and index
+    matrices stay host-resident, cohorts are double-buffered onto the
+    device while the previous cohort's fused visit program runs, and
+    each round's server update comes from hierarchical two-level
+    aggregation — per-cohort codec partials (integer popcount sums in
+    ``min_count_dtype`` for the count-aggregatable mask formats), then a
+    tree-merge across cohorts and ONE finalize + apply.  Trajectories
+    match the scan engine at fixed seed (same schedule, batch keys, and
+    per-client key derivations; f32 summation order differs only across
+    cohort boundaries).
+
+    Returns a :class:`CohortRunner`; call
+    ``runner.run(seed=..., prefetch=...)``.
+    """
+    return CohortRunner(loss_fn, cfg, params, data,
+                        eval_program=eval_program, eval_every=eval_every,
+                        client_weights=client_weights)

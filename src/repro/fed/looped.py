@@ -181,17 +181,24 @@ def run_federated_looped(
                                        w, agg)
 
         else:  # fedavg + post-training compressors
-            updates = []
+            updates, ckeys = [], []
             for cid in picked:
                 batches = client_batch_fn(rnd, int(cid))
                 u, ls = local_sgd(w, batches)
+                ckey = jax.random.fold_in(jax.random.key(cfg.seed + 3),
+                                          rnd * 1000 + int(cid))
                 if compressor is not None:
-                    u = comp_fn(u, jax.random.fold_in(
-                        jax.random.key(cfg.seed + 3),
-                        rnd * 1000 + int(cid)))
+                    u = comp_fn(u, ckey)
                 updates.append(u)
+                ckeys.append(ckey)
                 losses.append(float(ls[-1]))
-            msg = encode({"value": stack_client_batches(updates)})
+            payload = {"value": stack_client_batches(updates)}
+            if codec.needs_key:
+                # quantization happens inside encode (same keys the
+                # in-body roundtrip would have used)
+                payload["key"] = jax.random.wrap_key_data(jnp.stack(
+                    [jax.random.key_data(k) for k in ckeys]))
+            msg = encode(payload)
             w = jax.tree_util.tree_map(mix_add, w,
                                        aggregate(msg, weights_dev))
 

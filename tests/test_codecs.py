@@ -3,6 +3,7 @@ semantics (incl. the integer mask-count path), measured wire accounting
 vs the legacy estimates, the deprecated-field derivation shim, and the
 pack→unpack hypothesis property (ref ≡ pallas-interpret bitwise)."""
 import dataclasses
+import math
 import os
 import warnings
 
@@ -26,7 +27,7 @@ from repro.core import (NoiseConfig, client_round_key, fedmrn_record,
                         gen_noise, tree_num_params)
 from repro.core.packing import pack_rows, tree_unpack_counts, unpack_rows
 from repro.fed import (ALGORITHMS, Algorithm, DenseCodec, MaskCodec,
-                       SignCodec, SparseCodec, WireMsg, FLConfig,
+                       QuantCodec, SignCodec, SparseCodec, WireMsg, FLConfig,
                        algorithm_codec, make_codec, mask_count_bits,
                        min_count_dtype, register_algorithm, template_of,
                        uplink_bits)
@@ -239,13 +240,24 @@ def test_experiment_codec_types():
     for name, cls in [("fedmrn", MaskCodec), ("fedmrns", MaskCodec),
                       ("fedpm", MaskCodec), ("fedavg", DenseCodec),
                       ("signsgd", SignCodec), ("topk", SparseCodec),
-                      ("fedsparsify", SparseCodec), ("qsgd", DenseCodec)]:
+                      ("fedsparsify", SparseCodec), ("qsgd", QuantCodec),
+                      ("terngrad", QuantCodec)]:
         codec = algorithm_codec(FLConfig(algorithm=name), TREE)
         assert isinstance(codec, cls), name
-    # quantizers that roundtrip in-body keep their exact cost report
+    # quantizers ship REAL integer wire buffers (no baseline record):
+    # measured bits = the tightly bit-packed field words + one f32 scale
+    # per leaf; the paper-style figure stays b·P / log2(3)·P
+    L = len(jax.tree_util.tree_leaves(TREE))
     qs = algorithm_codec(FLConfig(algorithm="qsgd", qsgd_bits=2), TREE)
-    assert qs.record is not None
-    assert qs.wire_bits(TREE).uplink_bits == qs.record.uplink_bits
+    assert qs.record is None and qs.levels == 3       # 2^b - 1
+    rec = qs.wire_bits(TREE)
+    assert rec.uplink_bits == 32 * ((3 * P + 31) // 32) + 32 * L
+    assert rec.uplink_bits_paper == 2 * P
+    tg = algorithm_codec(FLConfig(algorithm="terngrad"), TREE)
+    assert tg.levels == 1
+    rec = tg.wire_bits(TREE)
+    assert rec.uplink_bits == 32 * ((2 * P + 31) // 32) + 32 * L
+    assert rec.uplink_bits_paper == int(math.log2(3) * P)
 
 
 # ---------------------------------------------------------------------------

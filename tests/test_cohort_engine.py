@@ -1,0 +1,189 @@
+"""Streaming cohort engine (ISSUE 7): cohort ≡ scan trajectory parity at
+fixed seed, prefetch on/off determinism, hierarchical count aggregation,
+large-population smoke, and the engine/dataset mismatch guards."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import (CohortedDataset, make_cohorted_dataset,
+                        make_federated_dataset, make_image_task,
+                        make_partition)
+from repro.fed import (Experiment, ExperimentSpec, FLConfig, MaskCodec,
+                       make_cohort_engine, run_federated)
+from repro.models.cnn import mlp_apply, mlp_eval_program, mlp_init, mlp_loss
+
+KEY = jax.random.key(0)
+
+
+def _spec(algorithm, rounds=4, n_clients=8, **cfg_kw):
+    task = make_image_task(0, n=800, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, n_clients)
+    params = mlp_init(KEY, d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm=algorithm, num_clients=n_clients,
+                   clients_per_round=4, rounds=rounds, local_steps=4,
+                   batch_size=16, lr=0.1, noise_alpha=3e-2, **cfg_kw)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7)
+    prog = mlp_eval_program(jnp.asarray(task.x), jnp.asarray(task.y))
+    return ExperimentSpec(loss_fn=mlp_loss, params=params, data=ds,
+                          config=cfg, eval_program=prog)
+
+
+def _assert_parity(a, b, loss_atol=1e-5):
+    np.testing.assert_array_equal(a.schedule, b.schedule)
+    assert a.eval_rounds == b.eval_rounds
+    np.testing.assert_allclose(a.acc, b.acc, atol=1e-6)
+    np.testing.assert_allclose(a.local_loss, b.local_loss, atol=loss_atol)
+    # measured wire bits: K × per-client bits == scan's per-round
+    # codec.round_bits(stacked) — every codec buffer is linear in K
+    np.testing.assert_array_equal(a.uplink_bits_round, b.uplink_bits_round)
+
+
+# ---------------------------------------------------------------------------
+# the acceptance criterion: cohort ≡ scan at fixed seed, every family
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("algorithm,kw", [
+    ("fedmrn", {}), ("fedmrns", {}), ("fedpm", {}), ("fedavg", {}),
+    # shared noise → the integer count partial path (incl. the signed
+    # padded-row adjustment) is what merges across cohorts
+    ("fedmrn", {"shared_noise": True}), ("fedmrns", {"shared_noise": True}),
+    ("qsgd", {"qsgd_bits": 2}), ("terngrad", {}), ("fedsparsify", {}),
+    ("signsgd", {})])
+def test_cohort_scan_trajectory_parity(algorithm, kw):
+    exp = Experiment(_spec(algorithm, **kw))
+    rs = exp.run(engine="scan")
+    # cohort_size=3 over 8 clients: every round straddles cohorts, so the
+    # hierarchical merge path (partial → tree-add → finalize) is exercised
+    rc = exp.run(engine="cohort", cohort_size=3)
+    _assert_parity(rs, rc)
+
+
+def test_cohort_size_invariance_and_single_cohort():
+    """The trajectory is independent of the shard layout; one big cohort
+    degenerates to the no-merge path."""
+    exp = Experiment(_spec("fedmrn"))
+    r3 = exp.run(engine="cohort", cohort_size=3)
+    r8 = exp.run(engine="cohort", cohort_size=8)    # whole population
+    _assert_parity(r3, r8, loss_atol=1e-6)
+
+
+def test_cohort_prefetch_off_is_bitwise_identical():
+    """prefetch=False (strict serial) must be a pure perf ablation."""
+    exp = Experiment(_spec("fedmrn"))
+    on = exp.run(engine="cohort", cohort_size=3, prefetch=True)
+    off = exp.run(engine="cohort", cohort_size=3, prefetch=False)
+    np.testing.assert_array_equal(np.asarray(on.acc), np.asarray(off.acc))
+    np.testing.assert_array_equal(np.asarray(on.local_loss),
+                                  np.asarray(off.local_loss))
+
+
+def test_cohort_runs_prebuilt_cohorted_dataset():
+    """An explicitly host-resident CohortedDataset reproduces the same
+    trajectory as the auto-converted FederatedDataset."""
+    spec = _spec("fedmrn")
+    task = make_image_task(0, n=800, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+    cds = make_cohorted_dataset(task.x, task.y, parts, cohort_size=3,
+                                batch_seed=7)
+    assert isinstance(cds, CohortedDataset)
+    exp_fed = Experiment(spec)
+    exp_coh = Experiment(dataclasses.replace(spec, data=cds))
+    _assert_parity(exp_fed.run(engine="cohort", cohort_size=3),
+                   exp_coh.run(engine="cohort"), loss_atol=1e-6)
+
+
+def test_cohort_through_run_federated_shim():
+    spec = _spec("fedmrn")
+    with pytest.warns(DeprecationWarning):
+        hist = run_federated(spec.loss_fn, spec.params, spec.data, None,
+                             spec.config, eval_program=spec.eval_program,
+                             engine="cohort")
+    rs = Experiment(spec).run(engine="scan")
+    np.testing.assert_allclose(hist["acc"], rs.acc, atol=1e-6)
+    assert hist["engine"] == "cohort"
+
+
+# ---------------------------------------------------------------------------
+# hierarchical integer aggregation (the tentpole's count half)
+# ---------------------------------------------------------------------------
+
+def test_cohort_auto_upgrades_mask_counts_to_int8():
+    """Uniform weights + count-aggregatable mask format (shared noise):
+    cross-cohort partials ride in min_count_dtype(K), not f32."""
+    spec = _spec("fedmrn", shared_noise=True)
+    data = spec.data.cohorted(3)
+    runner = make_cohort_engine(spec.loss_fn, spec.config, spec.params,
+                                data, eval_program=spec.eval_program)
+    assert isinstance(runner.codec, MaskCodec)
+    assert runner.codec.count_dtype == jnp.int8      # K=4 fits ±127
+    metrics, schedule, _ = runner.run()
+    assert np.isfinite(metrics["loss"]).all()
+
+
+def test_cohort_dispatch_count():
+    """dispatches = Σ per-round cohort visits + R applies + evals."""
+    exp = Experiment(_spec("fedmrn"))
+    rc = exp.run(engine="cohort", cohort_size=3)
+    co = np.asarray(rc.schedule) // 3
+    visits = sum(len(np.unique(row)) for row in co)
+    evals = len(rc.eval_rounds)
+    assert rc.num_dispatches == visits + rc.config.rounds + evals
+
+
+# ---------------------------------------------------------------------------
+# larger-than-HBM smoke: 1e5 synthetic clients stream through
+# ---------------------------------------------------------------------------
+
+def test_cohort_streams_100k_clients():
+    C, per, d = 100_000, 4, 16
+    rng = np.random.RandomState(0)
+    x = rng.randn(C * per, d).astype(np.float32)
+    y = rng.randint(0, 4, C * per).astype(np.int32)
+    parts = np.arange(C * per, dtype=np.int32).reshape(C, per)
+    ds = make_cohorted_dataset(x, y, parts, cohort_size=8192,
+                               x_test=x[:256], y_test=y[:256], batch_seed=7)
+    assert len(ds.shards) == 13                      # ⌈1e5 / 8192⌉
+    params = mlp_init(KEY, d_in=d, d_hidden=16, n_classes=4)
+    cfg = FLConfig(algorithm="fedmrn", num_clients=C, clients_per_round=32,
+                   rounds=2, local_steps=2, batch_size=4, lr=0.1,
+                   noise_alpha=3e-2)
+    exp = Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
+                                    data=ds, config=cfg,
+                                    eval_apply=mlp_apply, eval_every=2))
+    r = exp.run(engine="cohort")
+    assert np.isfinite(r.local_loss).all() and np.isfinite(r.final_acc)
+    # only the visited cohorts' blocks were staged, never the population
+    assert r.num_dispatches < 3 * cfg.rounds * cfg.clients_per_round
+
+
+# ---------------------------------------------------------------------------
+# guards
+# ---------------------------------------------------------------------------
+
+def test_cohort_rejects_error_feedback():
+    exp = Experiment(_spec("fedmrn", error_feedback=True))
+    with pytest.raises(ValueError, match="error_feedback"):
+        exp.run(engine="cohort", cohort_size=3)
+
+
+def test_cohorted_dataset_rejected_by_device_engines():
+    spec = _spec("fedmrn")
+    cds = spec.data.cohorted(3)
+    exp = Experiment(dataclasses.replace(spec, data=cds))
+    for engine in ("scan", "batched", "looped"):
+        with pytest.raises(ValueError, match="cohort"):
+            exp.run(engine=engine)
+    with pytest.raises(ValueError, match="FederatedDataset"):
+        exp.sweep(seeds=2)
+
+
+def test_cohort_size_conflicts_with_prebuilt_dataset():
+    spec = _spec("fedmrn")
+    exp = Experiment(dataclasses.replace(spec, data=spec.data.cohorted(3)))
+    with pytest.raises(ValueError, match="cohort_size"):
+        exp.run(engine="cohort", cohort_size=4)
+    with pytest.raises(ValueError, match="cohort_size"):
+        Experiment(spec).run(engine="scan", cohort_size=4)

@@ -1,0 +1,149 @@
+"""Population skew (ISSUE 7 satellite): make_federated_dataset under
+extreme client-size imbalance, the cohort tier's per-shard Lmax padding
+win, and the cohort-vs-whole-population gather equivalence property."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    # hypothesis is a pinned requirement (requirements.txt) and the
+    # property tests are tier-1 in CI: REPRO_REQUIRE_HYPOTHESIS=1 there
+    # makes a missing install a hard failure instead of a skip.
+    if os.environ.get("REPRO_REQUIRE_HYPOTHESIS", "") not in ("", "0"):
+        raise
+    HAVE_HYPOTHESIS = False
+
+from repro.data import (cohort_gather, make_cohorted_dataset,
+                        make_federated_dataset)
+
+
+def _skewed(sizes, d=6, seed=0):
+    """A population whose client c owns ``sizes[c]`` consecutive rows."""
+    n = int(np.sum(sizes))
+    rng = np.random.RandomState(seed)
+    x = rng.randn(n, d).astype(np.float32)
+    y = rng.randint(0, 4, n).astype(np.int32)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    parts = [np.arange(offs[c], offs[c + 1], dtype=np.int32)
+             for c in range(len(sizes))]
+    return x, y, parts
+
+
+# ---------------------------------------------------------------------------
+# extreme skew through the device-resident dataset
+# ---------------------------------------------------------------------------
+
+def test_extreme_skew_pads_to_largest_client():
+    sizes = [500, 1, 1, 2, 300, 3, 1, 7]
+    x, y, parts = _skewed(sizes)
+    ds = make_federated_dataset(x, y, parts, batch_seed=3)
+    assert ds.client_idx.shape == (8, 500)          # global Lmax padding
+    np.testing.assert_array_equal(np.asarray(ds.client_len), sizes)
+
+
+def test_skewed_gather_stays_inside_partitions():
+    """Size-1 clients only ever sample their single example; every other
+    client stays inside its slice."""
+    sizes = [200, 1, 5, 1, 100]
+    x, y, parts = _skewed(sizes)
+    ds = make_federated_dataset(x, y, parts, batch_seed=3)
+    xs, ys = ds.gather_batches(jnp.int32(0), jnp.arange(5, dtype=jnp.int32),
+                               steps=3, batch=4)
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    for c in range(5):
+        got = np.asarray(xs[c]).reshape(-1, x.shape[1])
+        owned = x[offs[c]:offs[c + 1]]
+        for row in got:
+            assert (row == owned).all(axis=1).any()
+    np.testing.assert_array_equal(np.asarray(xs[1]),
+                                  np.broadcast_to(x[200], xs[1].shape))
+
+
+def test_cohort_shards_shrink_index_padding():
+    """Grouping like-sized clients: per-cohort Lmax padding is a fraction
+    of the whole-population C × global-Lmax index matrix."""
+    sizes = [400, 395, 2, 3, 1, 4, 2, 1]           # big pair, small tail
+    x, y, parts = _skewed(sizes)
+    cds = make_cohorted_dataset(x, y, parts, cohort_size=2, batch_seed=3)
+    lmaxes = [s.lmax for s in cds.shards]
+    assert lmaxes == [400, 3, 4, 2]                # per-shard, not global
+    global_cells = len(sizes) * max(sizes)
+    shard_cells = sum(s.idx.shape[0] * s.idx.shape[1] for s in cds.shards)
+    assert shard_cells < 0.3 * global_cells
+    # staged blocks pad to the LARGEST shard only (one compiled shape)
+    assert cds.pad_len == 400
+    blk = cds.stage(3)
+    assert blk["client_idx"].shape == (cds.pad_clients, cds.pad_len)
+
+
+def test_cohorted_conversion_preserves_membership():
+    sizes = [50, 1, 9, 30, 2, 60]
+    x, y, parts = _skewed(sizes)
+    ds = make_federated_dataset(x, y, parts, batch_seed=3)
+    cds = ds.cohorted(4)
+    assert cds.num_clients == 6 and len(cds.shards) == 2
+    offs = np.concatenate([[0], np.cumsum(sizes)])
+    for cid in range(6):
+        j, loc = int(cds.cohort_of[cid]), int(cds.local_of[cid])
+        shard = cds.shards[j]
+        local = np.asarray(shard.idx[loc][:shard.lens[loc]])
+        rows = np.asarray(shard.ex_idx)[local]      # local → global rows
+        assert set(rows.tolist()) == set(range(offs[cid], offs[cid + 1]))
+
+
+# ---------------------------------------------------------------------------
+# the equivalence property: cohort-partitioned gather == whole-population
+# gather at a fixed seed (what makes cohort ≡ scan trajectories possible)
+# ---------------------------------------------------------------------------
+
+def _assert_gather_equivalence(sizes, cohort_size, picked, round_idx,
+                               steps=2, batch=3, batch_seed=11):
+    x, y, parts = _skewed(sizes)
+    ds = make_federated_dataset(x, y, parts, batch_seed=batch_seed)
+    cds = make_cohorted_dataset(x, y, parts, cohort_size=cohort_size,
+                                batch_seed=batch_seed)
+    picked_dev = jnp.asarray(picked, jnp.int32)
+    ref_x, ref_y = ds.gather_batches(jnp.int32(round_idx), picked_dev,
+                                     steps=steps, batch=batch)
+    for k, cid in enumerate(picked):
+        j = int(cds.cohort_of[cid])
+        bx, by = cohort_gather(
+            cds.stage(j), jnp.int32(round_idx),
+            jnp.asarray([cid], jnp.int32),
+            jnp.asarray([cds.local_of[cid]], jnp.int32),
+            steps=steps, batch=batch, batch_seed=batch_seed)
+        np.testing.assert_array_equal(np.asarray(bx[0]),
+                                      np.asarray(ref_x[k]))
+        np.testing.assert_array_equal(np.asarray(by[0]),
+                                      np.asarray(ref_y[k]))
+
+
+def test_cohort_gather_equals_population_gather_fixed_cases():
+    _assert_gather_equivalence([7, 1, 30, 2, 5, 12], 2, [0, 3, 5], 4)
+    _assert_gather_equivalence([1, 1, 1, 900], 3, [0, 1, 2, 3], 0)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(st.data())
+    def test_cohort_gather_equivalence_property(data):
+        sizes = data.draw(st.lists(st.integers(1, 40), min_size=2,
+                                   max_size=10), label="sizes")
+        C = len(sizes)
+        cohort_size = data.draw(st.integers(1, C), label="cohort_size")
+        k = data.draw(st.integers(1, C), label="k")
+        picked = data.draw(
+            st.lists(st.integers(0, C - 1), min_size=k, max_size=k,
+                     unique=True), label="picked")
+        round_idx = data.draw(st.integers(0, 5), label="round")
+        _assert_gather_equivalence(sizes, cohort_size, picked, round_idx)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_cohort_gather_equivalence_property():
+        pass
