@@ -1,9 +1,10 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-cohort test-sharded bench-engine \
+.PHONY: test test-fast test-cohort test-sharded test-service bench-engine \
     bench-engine-smoke bench-kernels bench-kernels-smoke bench-scale \
-    bench-scale-smoke bench quickstart examples-smoke
+    bench-scale-smoke bench-service bench-service-smoke bench quickstart \
+    examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -22,6 +23,11 @@ test-fast:
 test-cohort:
 	$(PY) -m pytest -x -q tests/test_cohort_engine.py \
 	    tests/test_federated_skew.py
+
+# wire-true service tier: serde round-trips, loopback sync ≡ scan parity,
+# measured bytes-on-wire, async staleness goldens (CI job: test-service)
+test-service:
+	$(PY) -m pytest -x -q tests/test_service.py
 
 # multi-device tier: 8 fake CPU devices so the pod client mesh axis and
 # the shard_map seed mesh genuinely partition (CI job: test-multidevice)
@@ -56,6 +62,15 @@ bench-scale:
 # small populations (C <= 1e4) — keeps the BENCH_scale.json emitter green
 bench-scale-smoke:
 	$(PY) -m benchmarks.run --only scale --quick
+
+# loopback-HTTP coordinator bench: service vs scan rounds/sec, measured
+# bytes-on-wire, sync vs async latency; writes BENCH_service.json
+bench-service:
+	$(PY) -m benchmarks.run --only service
+
+# few rounds — keeps the BENCH_service.json emitter green in CI
+bench-service-smoke:
+	$(PY) -m benchmarks.run --only service --quick
 
 bench:
 	$(PY) -m benchmarks.run --quick

@@ -4,7 +4,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``derived`` is the
 table-specific metric (accuracy for Tables/Figs, bits-per-param for the
 comm table, useful-compute ratio for the roofline).
 
-The ``engine``/``kernels``/``scale`` sections additionally write
+The ``engine``/``kernels``/``scale``/``service`` sections additionally write
 machine-readable results (per-engine rates + config + commit) to
 ``BENCH_<name>.json`` at the repo root, so the bench trajectory is
 tracked across commits instead of living only in stdout.  On every
@@ -53,13 +53,13 @@ def main() -> None:
                     help="fewer rounds / smaller populations (CI mode)")
     ap.add_argument("--only", default=None,
                     help="table1|fig4|fig5|fig6|comm|engine|kernels|"
-                         "scale|roofline")
+                         "scale|service|roofline")
     args = ap.parse_args()
 
     _warn_stale_bench_files()
 
     from . import (engine_bench, fl_suite, kernel_bench, roofline_report,
-                   scale_bench)
+                   scale_bench, service_bench)
 
     rounds = 6 if args.quick else 15
     sections = {
@@ -75,6 +75,7 @@ def main() -> None:
             + engine_bench.wire_rows(n_rounds=5 if args.quick else 20)),
         "kernels": lambda: kernel_bench.kernel_rows(smoke=args.quick),
         "scale": lambda: scale_bench.scale_rows(quick=args.quick),
+        "service": lambda: service_bench.service_rows(quick=args.quick),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:
@@ -100,6 +101,10 @@ def main() -> None:
             elif name == "scale":
                 path = scale_bench.write_bench_json(rows,
                                                     quick=args.quick)
+                print(f"# wrote {path}", file=sys.stderr)
+            elif name == "service":
+                path = service_bench.write_bench_json(rows,
+                                                      quick=args.quick)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001
             print(f"{name}/ERROR,0.0,{type(e).__name__}")

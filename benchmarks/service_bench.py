@@ -1,0 +1,172 @@
+"""Wire-true service benchmark: what the HTTP boundary costs.
+
+Runs the SAME federation through the in-process scan engine and the
+loopback coordinator (``fed/service``) and reports:
+
+  service/sync/rounds_per_sec       loopback-HTTP rounds per wall-second
+                                    (K worker threads, real sockets)
+  service/sync/scan_rounds_per_sec  the scan engine on the identical
+                                    federation — the zero-transport bound
+  service/sync/overhead_x           scan wall over service wall: what the
+                                    process boundary + serde + threading
+                                    costs relative to fused in-process
+                                    rounds (< 1.0 means service is that
+                                    fraction of scan speed)
+  service/wire/measured_uplink_B    bytes of WireMsg payload that crossed
+                                    the socket over the whole run
+  service/wire/claimed_uplink_B     Σ WireMsg.bits/8 — the codec's claim;
+                                    measured MUST equal claimed (the
+                                    wire-true acceptance criterion)
+  service/wire/framing_B            frame bytes beyond the payload
+  service/async/rounds_per_sec      async mode with an injected straggler
+                                    (one worker slot defers every POST by
+                                    one round, beta = 0.5)
+  service/async/latency_ratio       async wall over sync wall at the same
+                                    straggler fraction — the round-close
+                                    rule's win: sync waits for the
+                                    straggler, async closes at min_fresh
+
+``write_bench_json`` emits machine-readable ``BENCH_service.json`` at
+the repo root (same commit/config/results shape as BENCH_scale.json).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from repro.data import make_federated_dataset, make_image_task, make_partition
+from repro.fed import (Experiment, ExperimentSpec, FLConfig, ServiceConfig,
+                       algorithm_codec)
+from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
+
+ALGO = "fedmrn"
+CLIENTS = 16
+K = 4               # clients per round (worker threads on the service)
+ROUNDS = 6
+STEPS = 2           # local steps
+BATCH = 16
+D_IN, HW = 64, 8
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_service.json")
+
+
+def _experiment(rounds: int) -> Experiment:
+    task = make_image_task(0, n=800, hw=HW, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, CLIENTS)
+    params = mlp_init(jax.random.key(0), d_in=D_IN, d_hidden=32,
+                      n_classes=4)
+    cfg = FLConfig(algorithm=ALGO, num_clients=CLIENTS,
+                   clients_per_round=K, rounds=rounds, local_steps=STEPS,
+                   batch_size=BATCH, lr=0.1, noise_alpha=3e-2)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7,
+                                x_test=task.x[:256], y_test=task.y[:256])
+    return Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
+                                     data=ds, config=cfg,
+                                     eval_apply=mlp_apply,
+                                     eval_every=rounds))
+
+
+def _best_wall(fn, reps: int) -> float:
+    fn()                                    # compile / warm-up
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        fn()
+        best = min(best, time.time() - t0)
+    return best
+
+
+def service_rows(quick: bool = False) -> List[Dict]:
+    rounds = 3 if quick else ROUNDS
+    reps = 2 if quick else 3
+    exp = _experiment(rounds)
+    async_cfg = ServiceConfig(mode="async", staleness_beta=0.5,
+                              straggler_slots=(K - 1,))
+
+    wall_scan = _best_wall(lambda: exp.run(engine="scan"), reps)
+    wall_sync = _best_wall(lambda: exp.run(engine="service"), reps)
+    rep = exp.service_report            # the last sync run's accounting
+    claimed = rep.n_uplinks * algorithm_codec(
+        exp.cfg, exp.spec.params).measured_bits(exp.spec.params)
+    wall_async = _best_wall(
+        lambda: exp.run(engine="service", service=async_cfg), reps)
+
+    return [
+        dict(name="service/sync/rounds_per_sec",
+             us_per_call=wall_sync / rounds * 1e6,
+             derived=round(rounds / wall_sync, 2)),
+        dict(name="service/sync/scan_rounds_per_sec",
+             us_per_call=wall_scan / rounds * 1e6,
+             derived=round(rounds / wall_scan, 2)),
+        dict(name="service/sync/overhead_x", us_per_call=0.0,
+             derived=round(wall_scan / wall_sync, 3)),
+        dict(name="service/wire/measured_uplink_B", us_per_call=0.0,
+             derived=rep.uplink_payload_bits // 8),
+        dict(name="service/wire/claimed_uplink_B", us_per_call=0.0,
+             derived=claimed // 8),
+        dict(name="service/wire/framing_B", us_per_call=0.0,
+             derived=rep.uplink_framing_bits // 8),
+        dict(name="service/async/rounds_per_sec",
+             us_per_call=wall_async / rounds * 1e6,
+             derived=round(rounds / wall_async, 2)),
+        dict(name="service/async/latency_ratio", us_per_call=0.0,
+             derived=round(wall_async / wall_sync, 3)),
+    ]
+
+
+def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
+                     quick: bool = False) -> str:
+    try:
+        commit = subprocess.check_output(
+            ["git", "rev-parse", "HEAD"],
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+            text=True).strip()
+    except Exception:  # noqa: BLE001 — no git in CI tarballs
+        commit = "unknown"
+    results: Dict[str, Dict] = {}
+    for r in rows:
+        parts = r["name"].split("/")
+        if parts[0] != "service":
+            continue
+        if len(parts) == 2:
+            results[parts[1]] = r["derived"]
+        else:
+            results.setdefault(parts[1], {})[parts[2]] = r["derived"]
+    doc = {
+        "bench": "service",
+        "commit": commit,
+        "config": {"algorithm": ALGO, "num_clients": CLIENTS,
+                   "clients_per_round": K,
+                   "rounds": 3 if quick else ROUNDS,
+                   "local_steps": STEPS, "batch_size": BATCH,
+                   "straggler_slots": [K - 1], "staleness_beta": 0.5,
+                   "model": f"mlp({D_IN},32,4)",
+                   "n_devices": jax.local_device_count(),
+                   "n_cpus": os.cpu_count(),
+                   "unit": "rounds_per_sec over loopback HTTP with K "
+                           "client threads; wire rows are whole-run "
+                           "bytes (measured MUST equal claimed); "
+                           "latency_ratio is async-wall over sync-wall "
+                           "at one injected straggler"},
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "results": results,
+    }
+    path = os.path.abspath(path)
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    all_rows = service_rows()
+    for row in all_rows:
+        print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    print(f"# wrote {write_bench_json(all_rows)}")

@@ -10,7 +10,7 @@ from .algorithms import (  # noqa: F401
 )
 from .codecs import (  # noqa: F401
     DenseCodec, MaskCodec, QuantCodec, SignCodec, SparseCodec, UplinkCodec,
-    WireMsg, make_codec, mask_count_bits, min_count_dtype, template_of,
+    WireMsg, mask_count_bits, min_count_dtype, template_of,
 )
 from .engine import (  # noqa: F401
     CohortRunner, make_client_schedule, make_cohort_engine,
@@ -21,5 +21,8 @@ from .engine import (  # noqa: F401
 from .api import (  # noqa: F401
     ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,
     SweepPoint, SweepResult,
+)
+from .service import (  # noqa: F401
+    ServiceConfig, ServiceReport, make_service_engine,
 )
 from .simulation import run_federated  # noqa: F401

@@ -18,9 +18,6 @@ know about one federated-learning family:
                                    the measured comm cost
   validate(cfg)                 raise ValueError on a nonsense config
 
-``uplink_record`` / ``uplink_kind`` are DEPRECATED: a codec is derived
-from them for one release (:func:`repro.fed.codecs.make_codec`).
-
 The round body is PURE and takes the experiment ``seed`` as a *traced*
 int32 scalar (not a closure constant): that is what lets a multi-seed
 sweep ``vmap`` the whole experiment program over a seed axis with one
@@ -76,7 +73,7 @@ from ..core import (FedMRNConfig, NoiseConfig, baseline_record,
 from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
 from ..core.masking import tree_bernoulli_stacked
 from .codecs import (DenseCodec, MaskCodec, QuantCodec, SignCodec,
-                     SparseCodec, UplinkCodec, make_codec, min_count_dtype,
+                     SparseCodec, UplinkCodec, min_count_dtype,
                      template_of)
 
 Pytree = Any
@@ -182,14 +179,9 @@ class Algorithm:
     ``codec(cfg, params)`` returns the family's
     :class:`~repro.fed.codecs.UplinkCodec` — the typed wire format the
     round body routes client outputs through and the single source of
-    comm accounting (``codec.wire_bits(params) -> CommRecord``).
-
-    ``uplink_record`` and ``uplink_kind`` are DEPRECATED (kept one
-    release): when ``codec`` is None, :func:`repro.fed.codecs.make_codec`
-    derives one from them — ``uplink_kind == "mask"`` → a binary
-    :class:`MaskCodec` (so the pod path still defaults such families to
-    shared-noise count aggregation), else :class:`DenseCodec`, with
-    ``uplink_record``'s bits preserved as the cost report.
+    comm accounting (``codec.wire_bits(params) -> CommRecord``); every
+    algorithm MUST declare one (a plugin that only wants a cost report
+    wraps it in a :class:`DenseCodec` ``record=`` override).
     """
 
     name: str
@@ -213,9 +205,6 @@ class Algorithm:
     # client stack.  None → the family cannot stream (engines raise).
     make_cohort_body: Optional[
         Callable[[Callable, FLConfig, Pytree], CohortBody]] = None
-    # deprecated (one release): derive-a-codec shims — see class docstring
-    uplink_record: Optional[Callable[[FLConfig, Pytree], int]] = None
-    uplink_kind: Optional[str] = None
 
 
 ALGORITHMS: Dict[str, Algorithm] = {}
@@ -225,11 +214,10 @@ def register_algorithm(algo: Algorithm, *, overwrite: bool = False) -> Algorithm
     """Add ``algo`` to the registry (raises on duplicate names)."""
     if not algo.name:
         raise ValueError("algorithm needs a non-empty name")
-    if algo.codec is None and algo.uplink_record is None:
+    if algo.codec is None:
         raise ValueError(
             f"algorithm {algo.name!r} must declare codec= (an UplinkCodec "
-            "factory; see repro.fed.codecs) or the deprecated "
-            "uplink_record=")
+            "factory (cfg, params) -> UplinkCodec; see repro.fed.codecs)")
     if algo.name in ALGORITHMS and not overwrite:
         raise ValueError(
             f"algorithm {algo.name!r} already registered "
@@ -253,14 +241,14 @@ def list_algorithms() -> Tuple[str, ...]:
 
 def algorithm_codec(cfg: FLConfig, params: Pytree) -> UplinkCodec:
     """The registered algorithm's uplink codec for this config/model."""
-    return make_codec(get_algorithm(cfg.algorithm), cfg, params)
+    return get_algorithm(cfg.algorithm).codec(cfg, params)
 
 
 def uplink_bits(cfg: FLConfig, params: Pytree) -> int:
     """Exact per-client uplink cost of one round (for history accounting).
 
-    Measured from the codec's encoded buffer sizes (or the deprecated
-    ``uplink_record`` figure for legacy plugins without a codec).
+    Measured from the codec's encoded buffer sizes (or its ``record``
+    override when the wire buffers stand in for another format).
     """
     return int(algorithm_codec(cfg, params).wire_bits(params).uplink_bits)
 

@@ -68,7 +68,7 @@ from .engine import (eval_round_indices, make_client_schedule,
 
 Pytree = Any
 
-ENGINES = ("scan", "cohort", "batched", "looped")
+ENGINES = ("scan", "cohort", "service", "batched", "looped")
 
 # engine="cohort" shards the population into cohorts of this many clients
 # when the caller passes neither a CohortedDataset nor cohort_size=
@@ -313,8 +313,9 @@ class Experiment:
                 f"cfg expects {self.cfg.num_clients}")
         self._programs: Dict[Any, Tuple[Callable, Pytree, Pytree]] = {}
         self._eval_prog: Optional[Callable] = None
-        self._runners: Dict[Any, Any] = {}       # cohort engine cache
+        self._runners: Dict[Any, Any] = {}   # cohort/service engine cache
         self._cohorted: Dict[int, CohortedDataset] = {}   # per cohort size
+        self.service_report = None   # last engine="service" wire report
 
     # ---- the wire format ----------------------------------------------
 
@@ -400,7 +401,8 @@ class Experiment:
     def run(self, *, engine: str = "scan", seed: Optional[int] = None,
             chunk: Optional[int] = None,
             cohort_size: Optional[int] = None,
-            prefetch: bool = True) -> RunResult:
+            prefetch: bool = True,
+            service: Optional[Any] = None) -> RunResult:
         """Execute the spec once; returns a frozen :class:`RunResult`.
 
         ``engine="scan"`` (default) fuses the whole experiment into
@@ -408,13 +410,22 @@ class Experiment:
         larger-than-HBM population through the device cohort by cohort
         (``cohort_size`` clients staged at a time, default
         min(num_clients, 256); ``prefetch=False`` disables the
-        double-buffered host→device overlap); ``"batched"`` dispatches
-        one program per round; ``"looped"`` is the per-client reference
+        double-buffered host→device overlap); ``"service"`` spawns a
+        loopback HTTP coordinator plus K client threads that exchange
+        framed ``WireMsg`` bytes (``service=`` takes a
+        :class:`repro.fed.service.ServiceConfig` — sync barrier or async
+        staleness-weighted rounds; the measured wire accounting lands on
+        ``Experiment.service_report``); ``"batched"`` dispatches one
+        program per round; ``"looped"`` is the per-client reference
         loop.  ``seed`` overrides ``config.seed`` without rebuilding
         programs.
         """
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (one of {ENGINES})")
+        if service is not None and engine != "service":
+            raise ValueError(
+                f"service= only applies to engine='service', not "
+                f"{engine!r}")
         if engine == "cohort":
             cfg = self.cfg if seed is None else dataclasses.replace(
                 self.cfg, seed=int(seed))
@@ -423,6 +434,10 @@ class Experiment:
             raise ValueError(
                 f"cohort_size= only applies to engine='cohort', not "
                 f"{engine!r}")
+        if engine == "service":
+            cfg = self.cfg if seed is None else dataclasses.replace(
+                self.cfg, seed=int(seed))
+            return self._run_service(cfg, service)
         if isinstance(self.spec.data, CohortedDataset):
             raise ValueError(
                 f"engine={engine!r} needs the whole population "
@@ -499,6 +514,40 @@ class Experiment:
                                                    prefetch=prefetch)
         return self._result_from_metrics(
             cfg, "cohort", metrics, schedule, dispatches, time.time() - t0)
+
+    def _run_service(self, cfg: FLConfig, service) -> RunResult:
+        """The wire-true coordinator engine (loopback HTTP, ISSUE 8).
+
+        The runner (jitted client step + server aggregation programs)
+        is cached like the cohort runner; ``service`` — a
+        :class:`repro.fed.service.ServiceConfig` — is a run-time knob
+        (transport + sync/async round semantics), never a cache key.
+        The run's measured wire accounting (:class:`ServiceReport`,
+        incl. the MEASURED downlink ``CommRecord``) lands on
+        ``self.service_report``.
+        """
+        from .service import make_service_engine
+        prog = self.eval_program()
+        if prog is None:
+            raise ValueError(
+                "engine='service' evaluates on the coordinator and "
+                "needs a pure eval_program (params -> metric); pass "
+                "eval_program or eval_apply to ExperimentSpec")
+        key = ("service", dataclasses.replace(cfg, seed=0),
+               self.spec.eval_every, self.spec.client_weights)
+        if key not in self._runners:
+            self._runners[key] = make_service_engine(
+                self.spec.loss_fn, cfg, self.spec.params, self.spec.data,
+                eval_program=prog, eval_every=self.spec.eval_every,
+                client_weights=self.spec.client_weights)
+        runner = self._runners[key]
+        t0 = time.time()
+        metrics, schedule, dispatches = runner.run(seed=cfg.seed,
+                                                   service=service)
+        self.service_report = runner.report
+        return self._result_from_metrics(
+            cfg, "service", metrics, schedule, dispatches,
+            time.time() - t0)
 
     def _result_from_metrics(self, cfg, engine, metrics, schedule,
                              dispatches, wall_s) -> RunResult:

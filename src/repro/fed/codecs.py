@@ -41,16 +41,14 @@ Built-ins:
   :class:`SparseCodec`  top-k values + int32 indices (top-k /
                         FedSparsify).
 
-``Algorithm.codec`` (a ``(cfg, params) -> UplinkCodec`` factory)
-replaces the deprecated ``uplink_record`` / ``uplink_kind`` fields;
-:func:`make_codec` derives a codec from the legacy fields for one
-release (parity-tested in ``tests/test_codecs.py``).
+Every :class:`~repro.fed.algorithms.Algorithm` declares a ``codec``
+factory (``(cfg, params) -> UplinkCodec``); engines reach it through
+:func:`repro.fed.algorithms.algorithm_codec`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from typing import Any, Dict, Optional
 
 import jax
@@ -809,35 +807,3 @@ class SparseCodec(UplinkCodec):
     def _paper_bits(self, params: Pytree) -> int:
         return 32 * sum(self._layout()[2])       # values only, no indices
 
-
-# ---------------------------------------------------------------------------
-# deriving codecs from the deprecated Algorithm fields
-# ---------------------------------------------------------------------------
-
-def make_codec(algorithm, cfg, params: Pytree) -> UplinkCodec:
-    """The one entry point engines use to get an algorithm's codec.
-
-    ``algorithm.codec`` (a ``(cfg, params) -> UplinkCodec`` factory) wins;
-    otherwise a codec is DERIVED from the deprecated ``uplink_record`` /
-    ``uplink_kind`` fields — ``"mask"`` → a binary :class:`MaskCodec`,
-    else :class:`DenseCodec`, with ``uplink_record``'s figure preserved
-    as the cost report.  The derivation ships for one release; declare a
-    ``codec=`` factory instead.
-    """
-    if getattr(algorithm, "codec", None) is not None:
-        return algorithm.codec(cfg, params)
-    warnings.warn(
-        f"Algorithm {algorithm.name!r} declares no codec; deriving one "
-        "from the deprecated uplink_record/uplink_kind fields. Declare "
-        "codec=(cfg, params) -> UplinkCodec instead (repro.fed.codecs).",
-        DeprecationWarning, stacklevel=2)
-    record = None
-    if getattr(algorithm, "uplink_record", None) is not None:
-        bits = int(algorithm.uplink_record(cfg, params))
-        P = tree_num_params(params)
-        record = CommRecord(algorithm.name, P, bits, bits, 32 * P)
-    template = template_of(params)
-    if getattr(algorithm, "uplink_kind", None) == "mask":
-        return MaskCodec(template, name=algorithm.name, record=record,
-                         backend=getattr(cfg, "backend", None))
-    return DenseCodec(template, name=algorithm.name, record=record)

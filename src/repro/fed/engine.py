@@ -63,7 +63,7 @@ from .algorithms import (  # noqa: F401  (re-exported: legacy import site)
     fedsparsify_local, get_algorithm, list_algorithms, register_algorithm,
     uplink_bits,
 )
-from .codecs import MaskCodec, make_codec, min_count_dtype
+from .codecs import MaskCodec, min_count_dtype
 
 Pytree = Any
 
@@ -85,7 +85,7 @@ def _normalized_seeded_body(algo: Algorithm, loss_fn, cfg: FLConfig,
                             params: Pytree):
     """The registry body wrapped to the uniform 4-output contract."""
     body = algo.make_round_body(loss_fn, cfg, params)
-    codec = make_codec(algo, cfg, params)
+    codec = algo.codec(cfg, params)
     fallback = float(cfg.clients_per_round
                      * codec.wire_bits(params).uplink_bits)
 

@@ -34,7 +34,7 @@ from ..core import (NoiseConfig, client_local_update, gen_noise,
                     make_compressor, mix_add, sgd_local_update,
                     tree_num_params)
 from .algorithms import _CODEC_COMPRESSORS
-from .codecs import WireMsg, make_codec
+from .codecs import WireMsg
 from .engine import (FLConfig, fedpm_local, fedsparsify_local,
                      get_algorithm, make_client_schedule,
                      stack_client_batches, uplink_bits)
@@ -72,7 +72,7 @@ def run_federated_looped(
         schedule = make_client_schedule(cfg)
     w = init_params
     mrn_cfg = cfg.fedmrn_config()
-    codec = make_codec(get_algorithm(cfg.algorithm), cfg, init_params)
+    codec = get_algorithm(cfg.algorithm).codec(cfg, init_params)
     history: Dict[str, Any] = {
         "algorithm": cfg.algorithm, "engine": "looped",
         "acc": [], "round": [],

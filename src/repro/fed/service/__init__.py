@@ -1,0 +1,26 @@
+"""The wire-true FL coordinator (ISSUE 8, ROADMAP direction 1).
+
+``WireMsg`` over a REAL process boundary: a stdlib-HTTP coordinator
+(:mod:`.server`) aggregates framed uplinks through the codec partial
+protocol, client seats (:mod:`.client`) pull the serialized model and
+POST encoded updates, and :mod:`.serde` frames every byte that crosses
+the socket — deterministically and bit-exactly, so measured
+bytes-on-wire equal ``WireMsg.bits / 8``.  ``Experiment.run(
+engine="service")`` drives it over loopback (:mod:`.runner`); see
+``README.md`` here for endpoints, frame layout, and the async
+staleness-weighted round semantics.
+"""
+from .client import ServiceClient, ServiceError, run_worker
+from .runner import ServiceReport, ServiceRunner, make_service_engine
+from .serde import (dumps_msg, dumps_tree, framing_bits, loads_msg,
+                    loads_tree, pack_frame, payload_bits,
+                    tree_payload_bits, unpack_frame)
+from .server import Coordinator, ServiceConfig, make_http_server
+
+__all__ = [
+    "Coordinator", "ServiceClient", "ServiceConfig", "ServiceError",
+    "ServiceReport", "ServiceRunner", "dumps_msg", "dumps_tree",
+    "framing_bits", "loads_msg", "loads_tree", "make_http_server",
+    "make_service_engine", "pack_frame", "payload_bits", "run_worker",
+    "tree_payload_bits", "unpack_frame",
+]

@@ -1,0 +1,164 @@
+"""The service client: HTTP transport + the per-slot worker loop.
+
+:class:`ServiceClient` is a minimal stdlib ``urllib`` transport with
+per-request timeouts and bounded exponential-backoff retries (transient
+connection errors happen on loopback too — the coordinator thread may
+still be binding when the first worker wakes).
+
+:func:`run_worker` is one client seat of the federation: poll status
+until the coordinator reaches a new round, pull + deserialize the
+global model, look up this slot's client id in the round's published
+schedule, run the algorithm's jitted local step (gather batches →
+uplink encode, identical key derivations to the scan engine), and POST
+the framed ``WireMsg``.  A slot listed in
+``ServiceConfig.straggler_slots`` computes its uplink on time but
+withholds the POST until the coordinator has moved past the round — the
+message then lands one round late and exercises the async staleness
+path with a deterministic lag of 1.
+"""
+from __future__ import annotations
+
+import time
+import urllib.error
+import urllib.request
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import json
+
+import numpy as np
+
+from . import serde
+from .server import ServiceConfig
+
+
+class ServiceError(RuntimeError):
+    """A request failed after exhausting its retries."""
+
+
+class ServiceClient:
+    """Typed loopback transport over the coordinator's HTTP plane."""
+
+    def __init__(self, base_url: str, *, timeout_s: float = 30.0,
+                 retries: int = 3, backoff_s: float = 0.05):
+        self.base_url = base_url.rstrip("/")
+        self.timeout_s = timeout_s
+        self.retries = retries
+        self.backoff_s = backoff_s
+
+    # ---- transport with retry/backoff ---------------------------------
+
+    def _request(self, path: str, data: Optional[bytes] = None,
+                 method: str = "GET") -> Tuple[int, bytes]:
+        req = urllib.request.Request(
+            self.base_url + path, data=data, method=method,
+            headers={"Content-Type": "application/octet-stream"}
+            if data is not None else {})
+        delay = self.backoff_s
+        last: Optional[Exception] = None
+        for attempt in range(self.retries + 1):
+            try:
+                with urllib.request.urlopen(
+                        req, timeout=self.timeout_s) as resp:
+                    return resp.status, resp.read()
+            except urllib.error.HTTPError as e:
+                # an HTTP status is an ANSWER (409 stale round, 410
+                # done...), not a transport failure — never retried
+                return e.code, e.read()
+            except (urllib.error.URLError, ConnectionError,
+                    TimeoutError, OSError) as e:
+                last = e
+                if attempt == self.retries:
+                    break
+                time.sleep(delay)
+                delay *= 2.0
+        raise ServiceError(
+            f"{method} {path} failed after {self.retries + 1} attempts: "
+            f"{last}")
+
+    # ---- endpoints -----------------------------------------------------
+
+    def status(self) -> Dict[str, Any]:
+        code, body = self._request("/v1/status")
+        if code != 200:
+            raise ServiceError(f"status -> {code}: {body[:200]!r}")
+        return json.loads(body)
+
+    def metrics(self) -> Dict[str, Any]:
+        code, body = self._request("/v1/metrics")
+        if code != 200:
+            raise ServiceError(f"metrics -> {code}: {body[:200]!r}")
+        return json.loads(body)
+
+    def get_model(self, params_template: Any,
+                  state_template: Any) -> Tuple[Any, Any, Dict[str, Any]]:
+        code, body = self._request("/v1/model")
+        if code != 200:
+            raise ServiceError(f"model -> {code}: {body[:200]!r}")
+        tree, meta = serde.loads_tree(
+            body, {"params": params_template, "state": state_template})
+        return tree["params"], tree["state"], meta
+
+    def post_uplink(self, round_idx: int, body: bytes) -> Dict[str, Any]:
+        code, resp = self._request(f"/v1/round/{round_idx}/uplink",
+                                   data=body, method="POST")
+        out = json.loads(resp) if resp else {}
+        out["http_status"] = code
+        return out
+
+
+# ---------------------------------------------------------------------------
+# the worker loop (one federation seat)
+# ---------------------------------------------------------------------------
+
+def run_worker(slot: int, client: ServiceClient, service: ServiceConfig,
+               *, params_template: Any, state_template: Any,
+               client_step: Callable[[Any, Any, int, int, float],
+                                     Tuple[Any, float, float]],
+               weights_all: np.ndarray) -> int:
+    """Participate until the coordinator reports ``done``.
+
+    ``client_step(w, state, round_idx, cid, weight)`` is the runner's
+    jitted local program returning ``(msg_bytes_payload, agg_weight,
+    last_loss)`` — actually ``(WireMsg, float, float)``; framing happens
+    here so the transport layer owns every byte that crosses the wire.
+    Returns the number of uplinks this worker POSTed.
+    """
+    posted = 0
+    deferred: Optional[Tuple[int, bytes]] = None
+    last_round = -1
+    while True:
+        st = client.status()
+        if st["done"]:
+            # a still-deferred straggler message has nowhere to land:
+            # the run is over, drop it (conservation: R*K - lag losses)
+            return posted
+        r = st["round"]
+        if deferred is not None and r > deferred[0]:
+            resp = client.post_uplink(*deferred)
+            deferred = None
+            if resp["http_status"] == 200:
+                posted += 1
+            if resp.get("round", r) != r or st["done"]:
+                continue
+        if r <= last_round:
+            time.sleep(service.poll_s)
+            continue
+        w, state, meta = client.get_model(params_template, state_template)
+        if meta["round"] != r or meta["done"]:
+            continue                   # raced a round close — re-pull
+        cid = int(meta["cids"][slot])
+        msg, agg_weight, loss = client_step(w, state, r, cid,
+                                            float(weights_all[cid]))
+        body = serde.dumps_msg(msg, round=r, cid=cid,
+                               weight=float(agg_weight),
+                               loss=float(loss))
+        last_round = r
+        if slot in service.straggler_slots:
+            deferred = (r, body)
+            continue
+        resp = client.post_uplink(r, body)
+        if resp["http_status"] == 200:
+            posted += 1
+        elif resp["http_status"] not in (409, 410):
+            raise ServiceError(f"uplink round {r} slot {slot} -> "
+                               f"{resp}")

@@ -1,0 +1,245 @@
+"""``engine="service"``: coordinator + K loopback client threads.
+
+:class:`ServiceRunner` is the cohort tier's natural K=1 degenerate run
+over a REAL process boundary: every client seat runs the algorithm's
+``make_cohort_body`` uplink at cohort size 1 (identical per-client key
+derivations to the scan engine), frames the resulting ``WireMsg``
+through :mod:`repro.fed.service.serde`, and POSTs it over loopback
+HTTP; the coordinator aggregates through the codec partial protocol and
+steps the global model.  Synchronous trajectories therefore match
+scan/cohort to 1e-6 at a fixed seed while every reported uplink bit has
+actually crossed a socket.
+
+The jitted pieces are compiled ONCE per experiment (the runner is
+cached on the :class:`~repro.fed.api.Experiment` like the cohort
+runner) and shared by all worker threads; ``ServiceConfig`` only
+changes transport/round semantics, never compiled programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.comm import CommRecord
+from ..algorithms import FLConfig, get_algorithm
+from ..codecs import MaskCodec
+from ..engine import eval_round_indices, make_client_schedule
+from . import serde
+from .client import ServiceClient, run_worker
+from .server import Coordinator, ServiceConfig, make_http_server
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceReport:
+    """Measured wire accounting of one service run.
+
+    ``comm`` is the codec's :class:`CommRecord` with ``downlink_bits``
+    REPLACED by the measured per-request params payload (satellite:
+    downlink is no longer the analytic ``32 * P`` claim — though the two
+    agree exactly, which ``tests/test_service.py`` asserts).  Framing
+    and non-params state ride ``downlink_overhead_bits``.
+    """
+
+    mode: str
+    comm: CommRecord
+    n_uplinks: int
+    uplink_payload_bits: int        # Σ framed WireMsg buffer bits
+    uplink_framing_bits: int        # Σ frame bytes beyond the buffers
+    downlink_requests: int
+    downlink_params_bits: int       # measured params payload per request
+    downlink_total_bits: int        # whole model frame per request
+    downlink_overhead_bits: int     # frame + algorithm state, per request
+    staleness: Tuple[Tuple[Dict[str, Any], ...], ...]
+    base_url: str
+
+
+class ServiceRunner:
+    """Build once per experiment; ``run()`` serves one federation."""
+
+    def __init__(self, loss_fn, cfg: FLConfig, params: Pytree, data, *,
+                 eval_program=None, eval_every: int = 1,
+                 client_weights=None):
+        from ...data.federated import FederatedDataset
+        if not isinstance(data, FederatedDataset):
+            raise ValueError(
+                "engine='service' needs a FederatedDataset (client "
+                "seats gather their batches from the shared population)")
+        algo = get_algorithm(cfg.algorithm)
+        if algo.make_cohort_body is None:
+            raise ValueError(
+                f"algorithm {cfg.algorithm!r} declares no cohort body "
+                "(Algorithm.make_cohort_body) — the service client "
+                "needs the uplink/apply split; run it on engine='scan'")
+        cw = None if client_weights is None else list(client_weights)
+        if cw is not None and len(cw) != cfg.num_clients:
+            raise ValueError(
+                f"client_weights has {len(cw)} entries, "
+                f"cfg expects {cfg.num_clients}")
+        codec, uplink_fn, apply_fn = algo.make_cohort_body(
+            loss_fn, cfg, params)
+        # NO count_dtype auto-upgrade here (unlike the cohort engine):
+        # staleness weighting needs f32 per-client weights on every path
+        self.cfg = cfg
+        self.data = data
+        self.codec = codec
+        self._params = params
+        self._state0 = algo.init_state(cfg, params)
+        self._weights_all = np.asarray(
+            [1.0] * cfg.num_clients if cw is None else cw, np.float32)
+        self._eval = None if eval_program is None else jax.jit(eval_program)
+        self._eval_every = eval_every
+        self.report: Optional[ServiceReport] = None
+
+        steps, batch = cfg.local_steps, cfg.batch_size
+
+        @jax.jit
+        def client_step(seed, w, state, r, cid, weight):
+            cids = jnp.reshape(cid, (1,)).astype(jnp.int32)
+            wts = jnp.reshape(weight, (1,)).astype(jnp.float32)
+            batches = data.gather_batches(r, cids, steps=steps,
+                                          batch=batch)
+            msg, agg_w, losses = uplink_fn(seed, w, state, batches, cids,
+                                           wts, r)
+            return msg, agg_w[0], losses[0, -1]
+
+        @jax.jit
+        def partial_fn(msg, weights):
+            return codec.partial_aggregate(msg, weights)
+
+        @jax.jit
+        def apply_fn_j(seed, w, state, agg, r):
+            return apply_fn(seed, w, state, agg, r)
+
+        self._client_step = client_step
+        self._partial = partial_fn
+        self._merge = jax.jit(codec.merge_partials)
+        self._finalize = jax.jit(codec.finalize_partial)
+        self._apply = apply_fn_j
+
+    # ---- one federation -------------------------------------------------
+
+    def run(self, *, seed: Optional[int] = None,
+            schedule: Optional[np.ndarray] = None,
+            service: Optional[ServiceConfig] = None
+            ) -> Tuple[Dict[str, np.ndarray], np.ndarray, int]:
+        """Serve the experiment over loopback HTTP; returns ``(metrics,
+        schedule, num_dispatches)`` in scan metric layout."""
+        cfg = self.cfg
+        service = service or ServiceConfig()
+        if seed is None:
+            seed = cfg.seed
+        if schedule is None:
+            schedule = make_client_schedule(cfg, seed)
+        K = cfg.clients_per_round
+        bad = [s for s in service.straggler_slots if not 0 <= s < K]
+        if bad:
+            raise ValueError(f"straggler_slots {bad} out of range 0..{K-1}")
+
+        # compile the shared client program BEFORE the worker threads
+        # race to call it (single-threaded warm-up, result discarded)
+        seed_dev = jnp.int32(seed)
+        warm = self._client_step(
+            seed_dev, self._params, self._state0, jnp.int32(0),
+            jnp.int32(int(schedule[0][0])),
+            jnp.float32(self._weights_all[int(schedule[0][0])]))
+        jax.block_until_ready(warm[1])
+
+        coord = Coordinator(
+            codec=self.codec, partial_fn=self._partial,
+            merge_fn=self._merge, finalize_fn=self._finalize,
+            apply_fn=self._apply, eval_fn=self._eval,
+            eval_rounds=eval_round_indices(cfg, self._eval_every),
+            params=self._params, state=self._state0, schedule=schedule,
+            seed=seed, service=service, algorithm=cfg.algorithm)
+        httpd = make_http_server(coord)
+        base_url = "http://%s:%d" % httpd.server_address[:2]
+        server_thread = threading.Thread(target=httpd.serve_forever,
+                                         name="fl-coordinator",
+                                         daemon=True)
+        server_thread.start()
+
+        def client_step_host(w, state, r, cid, weight):
+            msg, agg_w, loss = self._client_step(
+                seed_dev, w, state, jnp.int32(r), jnp.int32(cid),
+                jnp.float32(weight))
+            return msg, float(agg_w), float(loss)
+
+        errors: List[BaseException] = []
+        posted = [0] * K
+
+        def seat(slot: int) -> None:
+            try:
+                client = ServiceClient(base_url,
+                                       timeout_s=service.timeout_s,
+                                       retries=service.retries,
+                                       backoff_s=service.backoff_s)
+                posted[slot] = run_worker(
+                    slot, client, service,
+                    params_template=self._params,
+                    state_template=self._state0,
+                    client_step=client_step_host,
+                    weights_all=self._weights_all)
+            except BaseException as e:          # surfaced to the caller
+                errors.append(e)
+                with coord._cv:
+                    coord.done = True
+                    coord._cv.notify_all()
+
+        workers = [threading.Thread(target=seat, args=(k,),
+                                    name=f"fl-client-{k}", daemon=True)
+                   for k in range(K)]
+        try:
+            for t in workers:
+                t.start()
+            coord.wait_done()
+            for t in workers:
+                t.join(timeout=service.timeout_s)
+        finally:
+            httpd.shutdown()
+            httpd.server_close()
+            server_thread.join(timeout=5.0)
+        if errors:
+            raise errors[0]
+
+        comm = dataclasses.replace(
+            self.codec.wire_bits(self._params),
+            downlink_bits=coord.downlink_params_bits)
+        self.report = ServiceReport(
+            mode=service.mode, comm=comm, n_uplinks=coord.n_uplinks,
+            uplink_payload_bits=coord.uplink_payload_bits,
+            uplink_framing_bits=coord.uplink_framing_bits,
+            downlink_requests=coord.downlink_requests,
+            downlink_params_bits=coord.downlink_params_bits,
+            downlink_total_bits=coord.downlink_total_bits,
+            downlink_overhead_bits=(coord.downlink_total_bits
+                                    - coord.downlink_params_bits),
+            staleness=tuple(tuple(dict(s) for s in row)
+                            for row in coord.staleness_log),
+            base_url=base_url)
+        self.final_params = coord.w
+        self.final_state = coord.state
+        metrics = {
+            "loss": np.asarray(coord.loss, np.float32),
+            "acc": np.asarray(coord.acc, np.float32),
+            "uplink_bits": np.asarray(coord.uplink_bits, np.float32),
+        }
+        # K client_step dispatches per round + the coordinator's own
+        dispatches = coord.dispatches + int(np.sum(posted))
+        return metrics, schedule, dispatches
+
+
+def make_service_engine(loss_fn, cfg: FLConfig, params: Pytree, data, *,
+                        eval_program=None, eval_every: int = 1,
+                        client_weights=None) -> ServiceRunner:
+    """Build the wire-true service engine (see :class:`ServiceRunner`)."""
+    return ServiceRunner(loss_fn, cfg, params, data,
+                         eval_program=eval_program,
+                         eval_every=eval_every,
+                         client_weights=client_weights)

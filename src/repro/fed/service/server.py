@@ -1,0 +1,387 @@
+"""The FL coordinator: rounds, pooling, aggregation, HTTP plane.
+
+:class:`Coordinator` owns the global model and the round counter and
+aggregates decoded uplinks through the codec's hierarchical partial
+protocol (``partial_aggregate`` / ``merge_partials`` /
+``finalize_partial`` — PR 7), so the server never materializes a
+per-client dense update.  The HTTP layer (:func:`make_http_server`,
+stdlib ``http.server`` on a loopback ``ThreadingHTTPServer``) is a thin
+byte shuttle over it:
+
+========================  =================================================
+``GET  /v1/model``         current round's frame: global params +
+                           algorithm state + meta (round, seed, this
+                           round's client schedule, done flag)
+``POST /v1/round/{r}/uplink``  one framed ``WireMsg`` (+ cid/weight/loss
+                           meta); 409 on a round the server won't take
+``GET  /v1/status``        tiny JSON: round, pool depth, done
+``GET  /v1/metrics``       full JSON metrics incl. measured wire bytes
+========================  =================================================
+
+Round semantics
+---------------
+
+* **sync** — a barrier: the round closes when all K scheduled clients'
+  uplinks for the CURRENT round have landed; an uplink tagged with any
+  other round is refused (409), so the pool always aggregates exactly
+  the scan engine's cohort and trajectories match to 1e-6.
+* **async** — no barrier: an uplink for ANY round ``r' <= r`` is pooled
+  and the round closes once ``min_fresh`` current-round uplinks have
+  landed.  At close every pooled message is weighted by
+  ``client_weight * staleness_beta ** (r - r')`` — stale gradients decay
+  geometrically (weight proportional to beta^lag), folded into the same
+  per-client weight vector the codec already takes.
+
+Stale messages were encoded against an OLDER round's model and — for
+the shared-noise mask formats — an older round's noise seed, so the
+pool is aggregated per sending round: one partial chain per distinct
+``r'`` (each finalized with its own seed), then combined across groups
+by weight mass (or summed for non-normalizing codecs such as fedpm's
+count aggregate).  With a single group this reduces to exactly the
+synchronous path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..codecs import MaskCodec, WireMsg
+from . import serde
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of one service run (transport + round semantics only —
+    everything the jitted programs depend on lives in ``FLConfig``, so
+    one compiled runner serves any ``ServiceConfig``)."""
+
+    mode: str = "sync"                  # "sync" | "async"
+    staleness_beta: float = 0.5         # async: stale weight = beta**lag
+    min_fresh: Optional[int] = None     # async: fresh uplinks closing a
+                                        # round (default K - #stragglers)
+    straggler_slots: Tuple[int, ...] = ()   # async: worker slots that
+                                        # defer their POST one round
+    host: str = "127.0.0.1"
+    port: int = 0                       # 0 = ephemeral loopback port
+    timeout_s: float = 30.0             # per-request client timeout
+    retries: int = 3                    # client retry attempts
+    backoff_s: float = 0.05             # first retry delay (doubles)
+    poll_s: float = 0.002               # client round-poll interval
+
+    def validate(self) -> None:
+        if self.mode not in ("sync", "async"):
+            raise ValueError(f"ServiceConfig.mode {self.mode!r} is not "
+                             "'sync' or 'async'")
+        if not 0.0 < self.staleness_beta <= 1.0:
+            raise ValueError("staleness_beta must be in (0, 1]")
+        if self.mode == "sync" and self.straggler_slots:
+            raise ValueError("straggler_slots requires mode='async'")
+
+
+@dataclasses.dataclass
+class _PoolEntry:
+    cid: int
+    msg_round: int
+    msg: WireMsg
+    weight: float              # the client's aggregation weight
+    loss: float                # last local step's loss (metrics only)
+    wire_bits: float           # codec.round_bits of this one message
+
+
+class Coordinator:
+    """Round state machine; thread-safe, transport-agnostic.
+
+    The jitted callables come from the runner (built once per
+    experiment): ``partial_fn(msg, weights)``, ``merge_fn(a, b)``,
+    ``finalize_fn(partial)``, ``apply_fn(seed, w, state, agg, r)`` and
+    optionally ``eval_fn(w)``.  Tests drive a ``Coordinator`` directly
+    (scripted arrival orders make staleness deterministic); the HTTP
+    layer only shuttles bytes into :meth:`handle_uplink`.
+    """
+
+    def __init__(self, *, codec, partial_fn, merge_fn, finalize_fn,
+                 apply_fn, eval_fn=None, eval_rounds=(), params, state,
+                 schedule: np.ndarray, seed: int, service: ServiceConfig,
+                 algorithm: str = ""):
+        service.validate()
+        if service.mode == "async" and isinstance(codec, MaskCodec) \
+                and codec.count_dtype is not None:
+            raise ValueError(
+                "async staleness weighting needs f32 per-client weights "
+                "— integer count aggregation (count_dtype) cannot carry "
+                "beta**lag scales")
+        self.codec = codec
+        self.service = service
+        self.algorithm = algorithm
+        self._partial = partial_fn
+        self._merge = merge_fn
+        self._finalize = finalize_fn
+        self._apply = apply_fn
+        self._eval = eval_fn
+        self._eval_rounds = set(eval_rounds)
+        self.schedule = np.asarray(schedule, np.int32)
+        self.rounds, self.clients_per_round = self.schedule.shape
+        self.seed = int(seed)
+        self._seed_dev = jnp.int32(seed)
+        self.round = 0
+        self.done = False
+        self.w = params
+        self.state = state
+        self.dispatches = 0
+        self._cv = threading.Condition()
+        self._pool: List[_PoolEntry] = []
+        fresh_needed = self.clients_per_round
+        if service.mode == "async":
+            fresh_needed = (service.min_fresh if service.min_fresh
+                            is not None else self.clients_per_round
+                            - len(service.straggler_slots))
+        if not 0 < fresh_needed <= self.clients_per_round:
+            raise ValueError(
+                f"min_fresh={fresh_needed} must be in 1..K="
+                f"{self.clients_per_round}")
+        self._fresh_needed = fresh_needed
+        # metrics (scan layout) + wire accounting
+        R = self.rounds
+        self.loss = np.full((R,), np.nan, np.float32)
+        self.acc = np.full((R,), np.nan, np.float32)
+        self.uplink_bits = np.zeros((R,), np.float32)
+        self.staleness_log: List[List[Dict[str, Any]]] = [[] for _ in
+                                                          range(R)]
+        self.n_uplinks = 0
+        self.uplink_payload_bits = 0
+        self.uplink_framing_bits = 0
+        self.downlink_requests = 0
+        self.downlink_bits_served = 0
+        self._publish()
+
+    # ---- downlink ------------------------------------------------------
+
+    def _publish(self) -> None:
+        """(Re)serialize the model blob this round serves."""
+        r = min(self.round, self.rounds - 1)
+        meta = {"round": self.round, "rounds": self.rounds,
+                "seed": self.seed, "algorithm": self.algorithm,
+                "done": self.done,
+                "cids": [int(c) for c in self.schedule[r]]}
+        blob = serde.dumps_tree({"params": self.w, "state": self.state},
+                                **meta)
+        self.model_blob = blob
+        self.downlink_params_bits = serde.tree_payload_bits(self.w)
+        self.downlink_total_bits = len(blob) * 8
+
+    def get_model(self) -> bytes:
+        with self._cv:
+            self.downlink_requests += 1
+            self.downlink_bits_served += self.downlink_total_bits
+            return self.model_blob
+
+    # ---- uplink --------------------------------------------------------
+
+    def handle_uplink(self, r: int, body: bytes) -> Tuple[int,
+                                                          Dict[str, Any]]:
+        """Decode + pool one framed uplink; returns (http_status, json)."""
+        try:
+            msg, meta = serde.loads_msg(body)
+        except (ValueError, TypeError, KeyError) as e:
+            return 400, {"error": f"bad frame: {e}"}
+        if int(meta.get("round", -1)) != r:
+            return 400, {"error": "frame meta round does not match URL"}
+        payload = msg.bits
+        entry = _PoolEntry(
+            cid=int(meta.get("cid", -1)), msg_round=r, msg=msg,
+            weight=float(meta.get("weight", 1.0)),
+            loss=float(meta.get("loss", np.nan)),
+            wire_bits=self._entry_bits(msg))
+        with self._cv:
+            if self.done:
+                return 410, {"error": "experiment finished"}
+            if r > self.round:
+                return 409, {"error": "future round", "round": self.round}
+            if self.service.mode == "sync" and r < self.round:
+                return 409, {"error": "stale round (sync barrier)",
+                             "round": self.round}
+            self.n_uplinks += 1
+            self.uplink_payload_bits += payload
+            self.uplink_framing_bits += len(body) * 8 - payload
+            self._pool.append(entry)
+            if self._round_complete():
+                self._close_round()
+                self._cv.notify_all()
+            return 200, {"accepted": True, "round": self.round}
+
+    def _entry_bits(self, msg: WireMsg) -> float:
+        # clients post stacked messages with a unit leading axis, so
+        # round_bits counts K=1 (honouring record-override codecs)
+        return float(self.codec.round_bits(msg))
+
+    def _round_complete(self) -> bool:
+        fresh = sum(1 for e in self._pool if e.msg_round == self.round)
+        return fresh >= self._fresh_needed
+
+    # ---- round close ---------------------------------------------------
+
+    def _stack(self, entries: List[_PoolEntry]) -> WireMsg:
+        # each client posts a stacked message with a UNIT leading axis
+        # (uplink_fn runs at K=1 on the client), so a pool concatenates
+        keys = sorted(entries[0].msg.buffers)
+        bufs = {k: jnp.concatenate([jnp.asarray(e.msg.buffers[k])
+                                    for e in entries], axis=0)
+                for k in keys}
+        return WireMsg(entries[0].msg.codec, bufs)
+
+    def _close_round(self) -> None:
+        """Aggregate the pool and step the global model (lock held)."""
+        r = self.round
+        beta = self.service.staleness_beta
+        entries = sorted(self._pool, key=lambda e: (e.msg_round, e.cid))
+        self._pool = []
+        # group by the round each message was computed against: shared
+        # noise / seeds are per-round, so each group finalizes with its
+        # own seed before groups combine by weight mass
+        groups: List[List[_PoolEntry]] = []
+        for e in entries:
+            if groups and groups[-1][0].msg_round == e.msg_round:
+                groups[-1].append(e)
+            else:
+                groups.append([e])
+        updates, masses = [], []
+        for group in groups:
+            lag = r - group[0].msg_round
+            scale = beta ** lag
+            # one singleton partial per pooled message (K=1 — a single
+            # compiled shape however the pool splits), tree-merged, one
+            # finalize per sending round (its own shared-noise seed)
+            part = None
+            for e in group:
+                w = jnp.asarray([e.weight * scale], jnp.float32)
+                p = self._partial(self._stack([e]), w)
+                part = p if part is None else self._merge(part, p)
+                self.dispatches += 1
+                self.staleness_log[r].append(
+                    {"cid": e.cid, "round_sent": e.msg_round, "lag": lag,
+                     "scale": scale})
+            upd = self._finalize(part)
+            self.dispatches += 1
+            updates.append(upd)
+            masses.append(float(np.sum([e.weight * scale
+                                        for e in group])))
+        if len(updates) == 1:
+            agg = updates[0]
+        elif getattr(self.codec, "normalize", True):
+            total = sum(masses)
+            agg = jax.tree_util.tree_map(
+                lambda *us: sum(m / total * u
+                                for m, u in zip(masses, us)), *updates)
+        else:
+            agg = jax.tree_util.tree_map(lambda *us: sum(us), *updates)
+        self.w, self.state = self._apply(self._seed_dev, self.w,
+                                         self.state, agg, jnp.int32(r))
+        self.dispatches += 1
+        self.loss[r] = np.nanmean([e.loss for e in entries])
+        self.uplink_bits[r] = sum(e.wire_bits for e in entries)
+        if self._eval is not None and r in self._eval_rounds:
+            self.acc[r] = float(self._eval(self.w))
+            self.dispatches += 1
+        self.round += 1
+        if self.round >= self.rounds:
+            self.done = True
+        self._publish()
+
+    # ---- monitoring ----------------------------------------------------
+
+    def status(self) -> Dict[str, Any]:
+        with self._cv:
+            return {"round": self.round, "rounds": self.rounds,
+                    "done": self.done, "mode": self.service.mode,
+                    "pool": len(self._pool)}
+
+    def metrics(self) -> Dict[str, Any]:
+        with self._cv:
+            return {
+                "round": self.round, "done": self.done,
+                "mode": self.service.mode,
+                "algorithm": self.algorithm,
+                "n_uplinks": self.n_uplinks,
+                "uplink_payload_bits": self.uplink_payload_bits,
+                "uplink_framing_bits": self.uplink_framing_bits,
+                "downlink_requests": self.downlink_requests,
+                "downlink_bits_served": self.downlink_bits_served,
+                "downlink_params_bits": self.downlink_params_bits,
+                "downlink_total_bits": self.downlink_total_bits,
+                "loss": [float(x) for x in self.loss],
+                "acc": [float(x) for x in self.acc],
+                "uplink_bits_round": [float(x) for x in self.uplink_bits],
+                "staleness": self.staleness_log,
+            }
+
+    def wait_done(self, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self.done, timeout=timeout)
+
+
+# ---------------------------------------------------------------------------
+# the HTTP plane
+# ---------------------------------------------------------------------------
+
+_UPLINK_RE = re.compile(r"^/v1/round/(\d+)/uplink$")
+
+
+class _Handler(BaseHTTPRequestHandler):
+    protocol_version = "HTTP/1.1"
+
+    @property
+    def coord(self) -> Coordinator:
+        return self.server.coordinator          # type: ignore[attr-defined]
+
+    def log_message(self, fmt, *args):          # silence per-request spam
+        pass
+
+    def _send(self, code: int, body: bytes,
+              ctype: str = "application/json") -> None:
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_json(self, code: int, obj: Dict[str, Any]) -> None:
+        self._send(code, json.dumps(obj).encode("utf-8"))
+
+    def do_GET(self) -> None:
+        if self.path == "/v1/model":
+            self._send(200, self.coord.get_model(),
+                       ctype="application/octet-stream")
+        elif self.path == "/v1/status":
+            self._send_json(200, self.coord.status())
+        elif self.path == "/v1/metrics":
+            self._send_json(200, self.coord.metrics())
+        else:
+            self._send_json(404, {"error": f"no route {self.path}"})
+
+    def do_POST(self) -> None:
+        m = _UPLINK_RE.match(self.path)
+        if not m:
+            self._send_json(404, {"error": f"no route {self.path}"})
+            return
+        length = int(self.headers.get("Content-Length", 0))
+        body = self.rfile.read(length)
+        code, obj = self.coord.handle_uplink(int(m.group(1)), body)
+        self._send_json(code, obj)
+
+
+def make_http_server(coord: Coordinator) -> ThreadingHTTPServer:
+    """Bind the coordinator on loopback; caller runs ``serve_forever``
+    in a thread and ``shutdown()``s it when the run finishes."""
+    httpd = ThreadingHTTPServer((coord.service.host, coord.service.port),
+                                _Handler)
+    httpd.daemon_threads = True
+    httpd.coordinator = coord                   # type: ignore[attr-defined]
+    return httpd

@@ -52,7 +52,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from ..sharding.rules import param_shardings
 from .algorithms import (ALGORITHMS, Algorithm, FLConfig, get_algorithm,
                          register_algorithm)
-from .codecs import MaskCodec, make_codec
+from .codecs import MaskCodec
 from .engine import normalize_round_outputs
 
 Pytree = Any
@@ -214,7 +214,7 @@ def make_pod_round(
         raise ValueError(
             "int_mask_agg requires uniform client weights "
             "(client_weights=None)")
-    codec = make_codec(algo, cfg, p_specs)
+    codec = algo.codec(cfg, p_specs)
     count_ok = (isinstance(codec, MaskCodec) and codec.count_aggregatable)
     if int_mask_agg is None:
         # pod default: mask families whose server sum is a pure count

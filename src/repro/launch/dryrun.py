@@ -106,7 +106,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     b_shard = batch_shardings(specs["batch"], mesh)
 
     if sharded:
-        from ..fed import FLConfig, MaskCodec, get_algorithm, make_codec
+        from ..fed import FLConfig, MaskCodec, get_algorithm
         from ..fed.codecs import mask_count_bits, min_count_dtype
         from ..fed.sharded import (PodRoundSpec, client_axis_of,
                                    make_pod_round, pod_batch_specs,
@@ -116,8 +116,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         # mask-codec families default to shared noise on the pod path:
         # the cross-client collective then carries integer mask counts
         # (int_mask_agg auto-enables inside make_pod_round)
-        probe_codec = make_codec(algo, FLConfig(algorithm=fed_algo),
-                                 p_specs)
+        probe_codec = algo.codec(FLConfig(algorithm=fed_algo), p_specs)
         is_mask = isinstance(probe_codec, MaskCodec)
         flc = FLConfig(algorithm=fed_algo, num_clients=C,
                        clients_per_round=C, local_steps=2,
@@ -136,7 +135,7 @@ def lower_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         rec["algorithm"] = fed_algo
         # the codec as the pod program runs it (flc carries the pod
         # shared-noise default, so fedmrn IS count-aggregatable here)
-        pod_codec = make_codec(algo, flc, p_specs)
+        pod_codec = algo.codec(flc, p_specs)
         rec["codec"] = type(pod_codec).__name__
         rec["uplink"] = pod_codec.wire_bits(p_specs).row()
         if is_mask and pod_codec.count_aggregatable:
@@ -251,6 +250,57 @@ def run_and_save(arch, shape_name, *, multi_pod, sharded=False,
     return rec
 
 
+def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2) -> dict:
+    """Loopback smoke of the wire-true coordinator (deliverable of the
+    service subsystem): run a tiny federation of ``fed_algo`` over real
+    HTTP on a probe MLP and print measured-vs-analytic wire accounting.
+
+    Every figure on the "measured" side was counted from bytes that
+    actually crossed a socket; the "analytic" side is the codec's
+    :meth:`CommRecord` claim.  The two must agree exactly (the
+    acceptance criterion ``tests/test_service.py`` enforces).
+    """
+    from ..data import make_federated_dataset, make_image_task, make_partition
+    from ..fed import Experiment, ExperimentSpec, FLConfig, algorithm_codec
+    from ..models.cnn import mlp_apply, mlp_init, mlp_loss
+
+    task = make_image_task(0, n=400, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, 8)
+    params = mlp_init(jax.random.key(0), d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm=fed_algo, num_clients=8, clients_per_round=4,
+                   rounds=rounds, local_steps=2, batch_size=16, lr=0.1)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7,
+                                x_test=task.x[:128], y_test=task.y[:128])
+    exp = Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
+                                    data=ds, config=cfg,
+                                    eval_apply=mlp_apply))
+    t0 = time.time()
+    res = exp.run(engine="service")
+    wall = time.time() - t0
+    rep = exp.service_report
+    codec = algorithm_codec(cfg, params)
+    analytic_up = codec.measured_bits(params)
+    print(f"service smoke: {fed_algo} K={cfg.clients_per_round} "
+          f"R={cfg.rounds} on {rep.base_url} ({wall:.1f}s) "
+          f"final_acc={res.final_acc:.3f}")
+    print(f"  uplink    measured {rep.uplink_payload_bits:>10d} b payload "
+          f"(+{rep.uplink_framing_bits} b framing) over "
+          f"{rep.n_uplinks} messages")
+    print(f"            analytic {rep.n_uplinks * analytic_up:>10d} b "
+          f"({analytic_up} b/client x {rep.n_uplinks})  "
+          f"{'OK' if rep.uplink_payload_bits == rep.n_uplinks * analytic_up else 'MISMATCH'}")
+    print(f"  downlink  measured {rep.downlink_params_bits:>10d} b params "
+          f"per request (+{rep.downlink_overhead_bits} b state+framing), "
+          f"{rep.downlink_requests} requests")
+    print(f"            analytic {rep.comm.downlink_bits:>10d} b  "
+          f"{'OK' if rep.downlink_params_bits == rep.comm.downlink_bits else 'MISMATCH'}")
+    return {"algorithm": fed_algo, "final_acc": res.final_acc,
+            "measured_uplink_bits": rep.uplink_payload_bits,
+            "analytic_uplink_bits": rep.n_uplinks * analytic_up,
+            "measured_downlink_bits": rep.downlink_params_bits,
+            "wall_s": wall}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None)
@@ -262,6 +312,10 @@ def main():
                     action="store_true",
                     help="lower the registry-driven pod round instead of "
                          "plain steps (--fedmrn is the legacy alias)")
+    ap.add_argument("--serve", action="store_true",
+                    help="loopback smoke of the wire-true coordinator "
+                         "(engine='service') on a probe MLP: measured vs "
+                         "analytic uplink/downlink bits for --algo")
     ap.add_argument("--list-algorithms", action="store_true",
                     help="print the simulation-engine algorithm registry "
                          "(name + per-client uplink bits/param on the "
@@ -277,6 +331,10 @@ def main():
     args = ap.parse_args()
     fed_algo = args.algo or args.fed_mode or "fedmrn"
 
+    if args.serve:
+        serve_smoke(fed_algo)
+        return
+
     if args.list_algorithms:
         # the simulation registry — every name here is runnable through
         # the Experiment API AND lowerable on the pod path (--sharded
@@ -285,7 +343,7 @@ def main():
         # downlink) on a small CNN probe model.
         import dataclasses as _dc
 
-        from ..fed import FLConfig, get_algorithm, list_algorithms, make_codec
+        from ..fed import FLConfig, get_algorithm, list_algorithms
         from ..models.cnn import cnn_init
         probe = cnn_init(jax.random.key(0), n_classes=8, channels=(8, 16))
         cfg0 = FLConfig()
@@ -296,7 +354,7 @@ def main():
         for name in list_algorithms():
             algo = get_algorithm(name)
             cfg = _dc.replace(cfg0, algorithm=name)
-            codec = make_codec(algo, cfg, probe)
+            codec = algo.codec(cfg, probe)
             row = codec.wire_bits(probe).row()
             print(f"{name:12s} {type(codec).__name__:12s} "
                   f"{row['uplink_bpp']:8.3f} "

@@ -1,11 +1,10 @@
 """Typed uplink codecs (ISSUE 5): encode→decode roundtrips, aggregate
 semantics (incl. the integer mask-count path), measured wire accounting
-vs the legacy estimates, the deprecated-field derivation shim, and the
+vs the legacy estimates, the codec= registration contract, and the
 pack→unpack hypothesis property (ref ≡ pallas-interpret bitwise)."""
 import dataclasses
 import math
 import os
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -28,9 +27,8 @@ from repro.core import (NoiseConfig, client_round_key, fedmrn_record,
 from repro.core.packing import pack_rows, tree_unpack_counts, unpack_rows
 from repro.fed import (ALGORITHMS, Algorithm, DenseCodec, MaskCodec,
                        QuantCodec, SignCodec, SparseCodec, WireMsg, FLConfig,
-                       algorithm_codec, make_codec, mask_count_bits,
-                       min_count_dtype, register_algorithm, template_of,
-                       uplink_bits)
+                       algorithm_codec, mask_count_bits, min_count_dtype,
+                       register_algorithm, template_of, uplink_bits)
 
 KEY = jax.random.key(0)
 
@@ -261,30 +259,38 @@ def test_experiment_codec_types():
 
 
 # ---------------------------------------------------------------------------
-# the deprecated uplink_record / uplink_kind derivation shim
+# the codec= registration contract (the derivation shim is GONE)
 # ---------------------------------------------------------------------------
 
-def test_make_codec_derives_from_deprecated_fields():
-    legacy_dense = Algorithm(
-        name="legacy_dense", make_round_body=lambda *a: None,
-        uplink_record=lambda cfg, p: 16 * tree_num_params(p))
-    legacy_mask = Algorithm(
-        name="legacy_mask", make_round_body=lambda *a: None,
-        uplink_record=lambda cfg, p: tree_num_params(p),
-        uplink_kind="mask")
-    cfg = FLConfig()
-    with pytest.warns(DeprecationWarning, match="codec"):
-        d = make_codec(legacy_dense, cfg, TREE)
-    assert isinstance(d, DenseCodec)
-    assert d.wire_bits(TREE).uplink_bits == 16 * P   # record preserved
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        m = make_codec(legacy_mask, cfg, TREE)
-    assert isinstance(m, MaskCodec) and m.count_aggregatable
-    assert m.wire_bits(TREE).uplink_bits == P
+def test_algorithm_has_no_deprecated_wire_fields():
+    """`uplink_record`/`uplink_kind` were removed with the make_codec
+    shim — a plugin passing them must fail loudly at construction, not
+    silently lose its cost report."""
+    fields = {f.name for f in dataclasses.fields(Algorithm)}
+    assert "uplink_record" not in fields and "uplink_kind" not in fields
+    with pytest.raises(TypeError):
+        Algorithm(name="legacy", make_round_body=lambda *a: None,
+                  uplink_record=lambda cfg, p: 1)
+    import repro.fed.codecs as codecs_mod
+    assert not hasattr(codecs_mod, "make_codec")
 
 
-def test_register_requires_codec_or_record():
+def test_custom_record_codec_preserves_cost_report():
+    """What the shim used to derive, a plugin now declares directly: a
+    DenseCodec with a record override keeps the claimed figure."""
+    from repro.core.comm import CommRecord
+    bits = 16 * P
+    codec = DenseCodec(template_of(TREE), name="legacy_dense",
+                       record=CommRecord("legacy_dense", P, bits, bits,
+                                         32 * P))
+    assert codec.wire_bits(TREE).uplink_bits == bits
+    stacked = codec.encode_stacked(
+        {"value": jax.tree_util.tree_map(
+            lambda l: jnp.zeros((3,) + l.shape), TREE)})
+    assert codec.round_bits(stacked) == 3 * bits   # K x record, not f32
+
+
+def test_register_requires_codec():
     with pytest.raises(ValueError, match="codec"):
         register_algorithm(Algorithm(name="no_wire",
                                      make_round_body=lambda *a: None))

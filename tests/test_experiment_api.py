@@ -10,11 +10,13 @@ import numpy as np
 import pytest
 
 from repro.core import sgd_local_update, tree_num_params
+from repro.core.comm import CommRecord
 from repro.data import (make_federated_dataset, make_image_task,
                         make_partition, sample_local_batches)
-from repro.fed import (ALGORITHMS, Algorithm, Experiment, ExperimentSpec,
-                       FLConfig, HISTORY_KEYS, get_algorithm,
-                       list_algorithms, register_algorithm, run_federated)
+from repro.fed import (ALGORITHMS, Algorithm, DenseCodec, Experiment,
+                       ExperimentSpec, FLConfig, HISTORY_KEYS,
+                       get_algorithm, list_algorithms, register_algorithm,
+                       run_federated, template_of)
 from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
 
 KEY = jax.random.key(0)
@@ -73,7 +75,9 @@ def test_unknown_algorithm_raises_with_listing():
 
 def _toy_algorithm(name="toy_halfsgd"):
     """Third-party style plugin: FedAvg with a half-strength server step,
-    built WITHOUT touching engine internals."""
+    built WITHOUT touching engine internals.  Its codec is a DenseCodec
+    with a ``record`` override claiming a 16 bpp wire format (what the
+    removed ``uplink_record`` field used to express)."""
 
     def make_body(loss_fn, cfg, params):
         def round_fn(seed, w, state, batches, picked, round_idx, weights):
@@ -89,8 +93,13 @@ def _toy_algorithm(name="toy_halfsgd"):
 
         return round_fn
 
-    return Algorithm(name=name, make_round_body=make_body,
-                     uplink_record=lambda cfg, p: 16 * tree_num_params(p))
+    def toy_codec(cfg, p):
+        P = tree_num_params(p)
+        return DenseCodec(template_of(p), name=name,
+                          record=CommRecord(name, P, 16 * P, 16 * P,
+                                            32 * P))
+
+    return Algorithm(name=name, make_round_body=make_body, codec=toy_codec)
 
 
 def test_custom_algorithm_registry_roundtrip():

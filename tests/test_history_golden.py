@@ -68,7 +68,7 @@ def test_golden_file_matches_history_keys_constant():
     assert set(GOLDEN) == set(HISTORY_KEYS)
 
 
-@pytest.mark.parametrize("engine", ["scan", "batched", "looped"])
+@pytest.mark.parametrize("engine", ["scan", "batched", "looped", "service"])
 def test_engine_history_matches_golden_schema(experiment, engine):
     hist = experiment.run(engine=engine).to_history()
     assert _schema_of(hist) == GOLDEN, (

@@ -218,9 +218,13 @@ def test_pod_runs_custom_plugin():
 
         return round_fn
 
+    from repro.core.comm import CommRecord
+    from repro.fed import DenseCodec, template_of
     register_algorithm(Algorithm(
         name="toy_pod", make_round_body=make_body,
-        uplink_record=lambda cfg, p: 1))
+        codec=lambda cfg, p: DenseCodec(
+            template_of(p), name="toy_pod",
+            record=CommRecord("toy_pod", 0, 1, 1, 1))))
     try:
         loss_fn, params, ds, cfg = _setup("toy_pod", rounds=1)
         pod_step, gather, state = _pod_program(cfg, loss_fn, params, ds)
