@@ -1,10 +1,10 @@
 # Repro harness targets.  PYTHONPATH=src is baked into every target.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test test-fast test-cohort test-sharded test-service bench-engine \
-    bench-engine-smoke bench-kernels bench-kernels-smoke bench-scale \
-    bench-scale-smoke bench-service bench-service-smoke bench quickstart \
-    examples-smoke
+.PHONY: test test-fast test-cohort test-sharded test-service test-faults \
+    bench-engine bench-engine-smoke bench-kernels bench-kernels-smoke \
+    bench-scale bench-scale-smoke bench-service bench-service-smoke bench \
+    quickstart examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
 test:
@@ -28,6 +28,12 @@ test-cohort:
 # measured bytes-on-wire, async staleness goldens (CI job: test-service)
 test-service:
 	$(PY) -m pytest -x -q tests/test_service.py
+
+# availability + fault-injection tier: dropout traces on every engine,
+# degraded codec partials, service FaultPlan drops/corrupts/crashes/hangs
+# with exact accounting (CI job: test-faults)
+test-faults:
+	$(PY) -m pytest -x -q tests/test_availability.py tests/test_faults.py
 
 # multi-device tier: 8 fake CPU devices so the pod client mesh axis and
 # the shard_map seed mesh genuinely partition (CI job: test-multidevice)

@@ -25,6 +25,15 @@ loopback coordinator (``fed/service``) and reports:
                                     straggler fraction — the round-close
                                     rule's win: sync waits for the
                                     straggler, async closes at min_fresh
+  service/degraded/rounds_per_sec   sync mode under a FaultPlan (one
+                                    dropped + one corrupt uplink) with
+                                    quorum = K-1: rounds still close at
+                                    the survivor threshold
+  service/degraded/bad_frames       coordinator-rejected frames in that
+                                    run (the corrupt POST, answered 400)
+  service/degraded/participation    Σ aggregated uplinks across rounds —
+                                    must equal the report's n_uplinks
+                                    (exact accounting, never silent loss)
 
 ``write_bench_json`` emits machine-readable ``BENCH_service.json`` at
 the repo root (same commit/config/results shape as BENCH_scale.json).
@@ -41,8 +50,8 @@ import jax
 import numpy as np
 
 from repro.data import make_federated_dataset, make_image_task, make_partition
-from repro.fed import (Experiment, ExperimentSpec, FLConfig, ServiceConfig,
-                       algorithm_codec)
+from repro.fed import (Experiment, ExperimentSpec, FLConfig, FaultPlan,
+                       ServiceConfig, algorithm_codec)
 from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
 
 ALGO = "fedmrn"
@@ -98,6 +107,20 @@ def service_rows(quick: bool = False) -> List[Dict]:
     wall_async = _best_wall(
         lambda: exp.run(engine="service", service=async_cfg), reps)
 
+    # one dropped + one corrupt uplink; quorum = K-1 lets the dropped
+    # round close on survivors instead of hanging the barrier
+    degraded_cfg = ServiceConfig(
+        mode="sync", quorum=K - 1, run_timeout_s=120.0,
+        faults=FaultPlan(drop_uplinks=((0, 0),),
+                         corrupt_uplinks=((1, 1),)))
+    wall_deg = _best_wall(
+        lambda: exp.run(engine="service", service=degraded_cfg), reps)
+    rep_deg = exp.service_report
+    assert rep_deg.n_uplinks == sum(rep_deg.participation), (
+        "degraded-run accounting drifted: aggregated uplinks "
+        f"{rep_deg.n_uplinks} != Σ participation "
+        f"{sum(rep_deg.participation)}")
+
     return [
         dict(name="service/sync/rounds_per_sec",
              us_per_call=wall_sync / rounds * 1e6,
@@ -118,6 +141,13 @@ def service_rows(quick: bool = False) -> List[Dict]:
              derived=round(rounds / wall_async, 2)),
         dict(name="service/async/latency_ratio", us_per_call=0.0,
              derived=round(wall_async / wall_sync, 3)),
+        dict(name="service/degraded/rounds_per_sec",
+             us_per_call=wall_deg / rounds * 1e6,
+             derived=round(rounds / wall_deg, 2)),
+        dict(name="service/degraded/bad_frames", us_per_call=0.0,
+             derived=int(rep_deg.rejected.get("bad_frame", 0))),
+        dict(name="service/degraded/participation", us_per_call=0.0,
+             derived=int(sum(rep_deg.participation))),
     ]
 
 
@@ -147,6 +177,9 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
                    "rounds": 3 if quick else ROUNDS,
                    "local_steps": STEPS, "batch_size": BATCH,
                    "straggler_slots": [K - 1], "staleness_beta": 0.5,
+                   "degraded": {"quorum": K - 1,
+                                "drop_uplinks": [[0, 0]],
+                                "corrupt_uplinks": [[1, 1]]},
                    "model": f"mlp({D_IN},32,4)",
                    "n_devices": jax.local_device_count(),
                    "n_cpus": os.cpu_count(),

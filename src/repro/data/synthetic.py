@@ -73,6 +73,11 @@ def partition_iid(seed: int, n: int, num_clients: int) -> List[np.ndarray]:
 def partition_dirichlet(seed: int, labels: np.ndarray, num_clients: int,
                         alpha: float = 0.3) -> List[np.ndarray]:
     """Non-IID-1: per-label client proportions ~ Dir(alpha)."""
+    if len(labels) < num_clients:
+        # the repair loop below cannot give every client a sample
+        raise ValueError(
+            f"cannot partition {len(labels)} samples over "
+            f"{num_clients} clients — every client needs at least one")
     rng = np.random.RandomState(seed)
     n_classes = int(labels.max()) + 1
     out: List[List[int]] = [[] for _ in range(num_clients)]
@@ -83,10 +88,17 @@ def partition_dirichlet(seed: int, labels: np.ndarray, num_clients: int,
         cuts = (np.cumsum(props) * len(idx)).astype(int)[:-1]
         for cid, part in enumerate(np.split(idx, cuts)):
             out[cid].extend(part.tolist())
-    # guarantee every client has at least one sample
+    # guarantee every client has at least one sample; donors must keep
+    # one themselves or popping would re-empty a just-repaired client
     for cid in range(num_clients):
         if not out[cid]:
-            donor = max(range(num_clients), key=lambda i: len(out[i]))
+            donors = [i for i in range(num_clients) if len(out[i]) > 1]
+            if not donors:
+                raise ValueError(
+                    f"alpha={alpha} left client {cid} empty and no "
+                    "client has a sample to spare — use more samples or "
+                    "fewer clients")
+            donor = max(donors, key=lambda i: len(out[i]))
             out[cid].append(out[donor].pop())
     return [np.sort(np.array(o, dtype=np.int64)) for o in out]
 

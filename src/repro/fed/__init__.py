@@ -22,6 +22,12 @@ from .api import (  # noqa: F401
     ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,
     SweepPoint, SweepResult,
 )
+from .availability import (  # noqa: F401
+    AvailabilityTrace, FaultPlan, make_availability,
+)
+from .scenarios import (  # noqa: F401
+    alpha_curve, dropout_curve, make_synthetic_spec,
+)
 from .service import (  # noqa: F401
     ServiceConfig, ServiceReport, make_service_engine,
 )

@@ -119,6 +119,15 @@ class FLConfig:
     topk_frac: float = 0.03
     sparsify_frac: float = 0.03    # fedsparsify keeps top 3% of weights
     qsgd_bits: int = 2
+    # client availability (ROADMAP 4(b)): a seeded per-round dropout
+    # trace derived from the run seed; engines mask dropped clients out
+    # of the aggregate (exactly the K−d survivors are averaged).
+    availability: str = "always"   # "always" | "bernoulli" | "markov"
+    dropout: float = 0.0           # drop prob / Markov stationary rate
+    churn: float = 0.5             # markov: state-flip speed in (0, 1]
+    # Ji et al. 2020 dynamic sampling: re-draw dropped scheduled clients
+    # from the round's still-available spares before masking
+    avail_resample: bool = False
     # kernel backend for masking/packing: "ref" | "pallas" | None (auto)
     backend: Optional[str] = None
 
@@ -145,6 +154,15 @@ class FLConfig:
             raise ValueError(
                 f"clients_per_round={self.clients_per_round} must be in "
                 f"[1, num_clients={self.num_clients}]")
+        if self.availability not in ("always", "bernoulli", "markov"):
+            raise ValueError(
+                f"availability {self.availability!r} is not 'always', "
+                "'bernoulli' or 'markov'")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(
+                f"dropout must be in [0, 1), got {self.dropout}")
+        if not 0.0 < self.churn <= 1.0:
+            raise ValueError(f"churn must be in (0, 1], got {self.churn}")
 
 
 # ---------------------------------------------------------------------------
@@ -195,8 +213,11 @@ class Algorithm:
     #       -> (codec,
     #           uplink(seed, w, state, batches, cids, weights, round_idx)
     #               -> (stacked WireMsg, agg_weights (Kc,), losses (Kc,S)),
-    #           apply(seed, w, state, aggregate, round_idx)
-    #               -> (new_w, new_state))
+    #           apply(seed, w, state, aggregate, round_idx,
+    #                 n_valid=None)          # merged partial weight mass
+    #               -> (new_w, new_state))   # (degraded-round engines
+    #                                        #  pass it; fedpm's smoothing
+    #                                        #  denominator needs it)
     #
     # The engine runs `uplink` once per cohort, folds the messages into
     # codec partials (codec.partial_aggregate / merge_partials), and
@@ -461,7 +482,7 @@ def _fedmrn_cohort_body(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
         msg = codec.encode_stacked({"mask": masks, "seed": seed_keys})
         return msg, weights, losses
 
-    def apply(seed, w, state, agg, round_idx):
+    def apply(seed, w, state, agg, round_idx, n_valid=None):
         return jax.tree_util.tree_map(mix_add, w, agg), state
 
     return codec, uplink, apply
@@ -575,7 +596,7 @@ def _fedavg_family_cohort_body(compressor_name: Optional[str]):
                 payload["key"] = ckeys
             return codec.encode_stacked(payload), weights, losses
 
-        def apply(seed, w, state, agg, round_idx):
+        def apply(seed, w, state, agg, round_idx, n_valid=None):
             return jax.tree_util.tree_map(mix_add, w, agg), state
 
         return codec, uplink, apply
@@ -619,20 +640,22 @@ def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
             return probs_k, mask_key, losses
 
         probs_k, mask_keys, losses = jax.vmap(per_client)(batches, picked)
-        K = picked.shape[0]
         # ---- uplink: the fused mask draw + pack + vote count -----------
-        # the posterior counts VOTES — one per client, ``client_weights``
-        # ignored (the original FedPM rule): weighted counts could exceed
-        # K, push probs past 1 and NaN the logit below
+        # the posterior counts VOTES — one per surviving client,
+        # ``client_weights`` magnitudes ignored (the original FedPM
+        # rule): weighted counts could exceed K, push probs past 1 and
+        # NaN the logit below.  A zero weight marks a DROPPED client
+        # (availability trace) and casts no vote.
+        votes = (weights > 0).astype(jnp.float32)
         msg, m_sum = codec.uplink_stacked(probs_k, None, mask_keys,
-                                          jnp.ones_like(weights),
-                                          probs=True)
+                                          votes, probs=True)
+        nv = jnp.sum(votes)
         # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
-        # accumulated in f32 regardless of param dtype.  The raw K-client
+        # accumulated in f32 regardless of param dtype.  The raw nv-client
         # mean hits exactly 0/1 whenever all clients agree, and logit of
         # the clipped value (±9.2) saturates next round's sigmoid scores —
-        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(K+1).
-        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (K + 2.0),
+        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(nv+1).
+        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (nv + 2.0),
                                        m_sum)
         new_scores = jax.tree_util.tree_map(
             lambda p_: jnp.log(p_ / (1 - p_)), probs)      # sigmoid^-1
@@ -670,8 +693,12 @@ def _fedpm_cohort_body(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
         msg = codec.encode_stacked({"mask": masks})
         return msg, jnp.ones_like(weights), losses
 
-    def apply(seed, w, state, m_sum, round_idx):
-        K = cfg.clients_per_round
+    def apply(seed, w, state, m_sum, round_idx, n_valid=None):
+        # the smoothing denominator is the number of VOTES aggregated —
+        # under availability/quorum degradation the engines pass the
+        # merged partial's weight mass (ones × valid) as ``n_valid``
+        K = (jnp.float32(cfg.clients_per_round) if n_valid is None
+             else n_valid)
         probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (K + 2.0),
                                        m_sum)
         new_scores = jax.tree_util.tree_map(
@@ -720,7 +747,7 @@ def _fedsparsify_cohort_body(loss_fn, cfg: FLConfig,
         w_locals, losses = jax.vmap(per_client)(batches, cids)
         return codec.encode_stacked({"value": w_locals}), weights, losses
 
-    def apply(seed, w, state, agg, round_idx):
+    def apply(seed, w, state, agg, round_idx, n_valid=None):
         new_w = jax.tree_util.tree_map(lambda p, a: a.astype(p.dtype),
                                        w, agg)
         return new_w, state

@@ -60,6 +60,8 @@ from ..core.evaluation import make_eval_program
 from ..data.federated import CohortedDataset, FederatedDataset
 from .algorithms import (ALGORITHMS, Algorithm, FLConfig, algorithm_codec,
                          get_algorithm, register_algorithm, uplink_bits)
+from .availability import (AvailabilityTrace, check_engine_support,
+                           make_availability, require_survivors)
 from .codecs import UplinkCodec
 from .engine import (eval_round_indices, make_client_schedule,
                      make_cohort_engine, make_seeded_experiment_program,
@@ -78,8 +80,9 @@ DEFAULT_COHORT_SIZE = 256
 # has EXACTLY these keys (golden-tested in tests/test_experiment_api.py).
 HISTORY_KEYS = frozenset({
     "algorithm", "engine", "acc", "round", "local_loss",
-    "uplink_bits_per_client", "uplink_bits_round", "params", "schedule",
-    "num_dispatches", "wall_s", "final_acc",
+    "uplink_bits_per_client", "uplink_bits_round", "params",
+    "participation_round", "schedule", "num_dispatches", "wall_s",
+    "final_acc",
 })
 
 
@@ -110,6 +113,9 @@ class RunResult:
     schedule: np.ndarray                   # (R, K) int32 client selection
     num_dispatches: int
     wall_s: float
+    participation_round: Tuple[int, ...] = ()   # surviving clients per
+    #   round; K everywhere unless an availability trace / fault plan
+    #   degraded a round
 
     @property
     def final_acc(self) -> float:
@@ -130,6 +136,8 @@ class RunResult:
             "uplink_bits_per_client": self.uplink_bits_per_client,
             "uplink_bits_round": list(self.uplink_bits_round),
             "params": self.num_params,
+            "participation_round": [int(p)
+                                    for p in self.participation_round],
             "schedule": self.schedule,
             "num_dispatches": self.num_dispatches,
             "wall_s": self.wall_s,
@@ -151,7 +159,11 @@ class RunResult:
             num_params=int(hist["params"]),
             schedule=np.asarray(hist["schedule"]),
             num_dispatches=int(hist["num_dispatches"]),
-            wall_s=float(hist["wall_s"]))
+            wall_s=float(hist["wall_s"]),
+            participation_round=tuple(
+                int(p) for p in hist.get(
+                    "participation_round",
+                    [cfg.clients_per_round] * cfg.rounds)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -258,6 +270,9 @@ class ExperimentSpec:
     eval_batch_size: int = 256
     eval_every: int = 1
     client_weights: Optional[Tuple[float, ...]] = None
+    # explicit availability trace; None derives one from the config's
+    # availability/dropout/churn knobs (still None for "always")
+    availability: Optional[AvailabilityTrace] = None
 
     def __post_init__(self):
         if self.client_weights is not None:
@@ -364,6 +379,34 @@ class Experiment:
         jitted = jax.jit(prog)
         return lambda p: float(jitted(p))
 
+    # ---- availability --------------------------------------------------
+
+    def _availability(self, cfg: FLConfig,
+                      seed: Optional[int] = None
+                      ) -> Optional[AvailabilityTrace]:
+        """The run's availability trace: the spec's explicit trace, else
+        one derived from the config knobs (None when always-available)."""
+        if self.spec.availability is not None:
+            return self.spec.availability
+        return make_availability(cfg, seed)
+
+    def _degrade_schedule(self, cfg: FLConfig, engine: str,
+                          schedule: np.ndarray,
+                          trace: Optional[AvailabilityTrace]):
+        """Apply a trace to a schedule: optional dynamic resampling, the
+        ``(R, K)`` valid mask, per-round participation.  Returns
+        ``(schedule, valid, participation)`` — ``(schedule, None, None)``
+        when no trace applies (the bitwise-invariant path)."""
+        if trace is None:
+            return schedule, None, None
+        check_engine_support(cfg, trace, engine)
+        if cfg.avail_resample:
+            schedule = trace.resample_schedule(schedule, cfg.seed)
+        valid = trace.valid_for(schedule)
+        require_survivors(valid, resample_hint=cfg.avail_resample)
+        participation = valid.sum(axis=1).astype(np.int64)
+        return schedule, valid, participation
+
     # ---- program cache ------------------------------------------------
 
     def _program(self, kind: str, cfg: FLConfig, devices: int = 1):
@@ -454,20 +497,31 @@ class Experiment:
         chunk = cfg.rounds if chunk is None else max(1, int(chunk))
         chunk = min(chunk, cfg.rounds)
         schedule = make_client_schedule(cfg)
+        schedule, valid, participation = self._degrade_schedule(
+            cfg, "scan", schedule, self._availability(cfg))
         sched_dev = jnp.asarray(schedule, jnp.int32)
+        valid_dev = None if valid is None else jnp.asarray(valid,
+                                                           jnp.float32)
         seed_dev = jnp.int32(cfg.seed)
         w, state, metrics = self.spec.params, state0, metrics0
         t0 = time.time()
         dispatches = 0
         for r0 in range(0, cfg.rounds, chunk):
             n = min(chunk, cfg.rounds - r0)
-            w, state, metrics = run_chunk(
-                seed_dev, w, state, metrics, jnp.int32(r0),
-                sched_dev[r0:r0 + n], n_rounds=n)
+            if valid_dev is None:
+                w, state, metrics = run_chunk(
+                    seed_dev, w, state, metrics, jnp.int32(r0),
+                    sched_dev[r0:r0 + n], n_rounds=n)
+            else:
+                w, state, metrics = run_chunk(
+                    seed_dev, w, state, metrics, jnp.int32(r0),
+                    sched_dev[r0:r0 + n], valid_dev[r0:r0 + n],
+                    n_rounds=n)
             dispatches += 1
         # the ONLY device→host reads of the whole experiment
         result = self._result_from_metrics(
-            cfg, "scan", metrics, schedule, dispatches, time.time() - t0)
+            cfg, "scan", metrics, schedule, dispatches, time.time() - t0,
+            participation=participation)
         return result
 
     def _cohorted_data(self, cohort_size: Optional[int]) -> CohortedDataset:
@@ -510,10 +564,20 @@ class Experiment:
                 client_weights=self.spec.client_weights)
         runner = self._runners[key]
         t0 = time.time()
-        metrics, schedule, dispatches = runner.run(seed=cfg.seed,
-                                                   prefetch=prefetch)
+        trace = self._availability(cfg)
+        if trace is None:
+            metrics, schedule, dispatches = runner.run(seed=cfg.seed,
+                                                       prefetch=prefetch)
+            participation = None
+        else:
+            schedule, valid, participation = self._degrade_schedule(
+                cfg, "cohort", make_client_schedule(cfg), trace)
+            metrics, schedule, dispatches = runner.run(
+                seed=cfg.seed, schedule=schedule, prefetch=prefetch,
+                valid=valid)
         return self._result_from_metrics(
-            cfg, "cohort", metrics, schedule, dispatches, time.time() - t0)
+            cfg, "cohort", metrics, schedule, dispatches, time.time() - t0,
+            participation=participation)
 
     def _run_service(self, cfg: FLConfig, service) -> RunResult:
         """The wire-true coordinator engine (loopback HTTP, ISSUE 8).
@@ -542,19 +606,34 @@ class Experiment:
                 client_weights=self.spec.client_weights)
         runner = self._runners[key]
         t0 = time.time()
-        metrics, schedule, dispatches = runner.run(seed=cfg.seed,
-                                                   service=service)
+        trace = self._availability(cfg)
+        if trace is None:
+            metrics, schedule, dispatches = runner.run(seed=cfg.seed,
+                                                       service=service)
+        else:
+            schedule, valid, _ = self._degrade_schedule(
+                cfg, "service", make_client_schedule(cfg), trace)
+            metrics, schedule, dispatches = runner.run(
+                seed=cfg.seed, service=service, schedule=schedule,
+                valid=valid, local_steps=trace.local_steps)
         self.service_report = runner.report
+        # the coordinator's measured per-round uplink counts — faults
+        # and quorum-degraded rounds show up here, not just trace drops
+        participation = (list(self.service_report.participation)
+                         if self.service_report.participation else None)
         return self._result_from_metrics(
             cfg, "service", metrics, schedule, dispatches,
-            time.time() - t0)
+            time.time() - t0, participation=participation)
 
     def _result_from_metrics(self, cfg, engine, metrics, schedule,
-                             dispatches, wall_s) -> RunResult:
+                             dispatches, wall_s,
+                             participation=None) -> RunResult:
         loss = np.asarray(metrics["loss"])
         acc = np.asarray(metrics["acc"])
         bits = np.asarray(metrics["uplink_bits"])
         rounds = eval_round_indices(cfg, self.spec.eval_every)
+        if participation is None:
+            participation = [cfg.clients_per_round] * cfg.rounds
         return RunResult(
             algorithm=cfg.algorithm, engine=engine, config=cfg,
             seed=cfg.seed, eval_rounds=tuple(rounds),
@@ -563,12 +642,15 @@ class Experiment:
             uplink_bits_round=tuple(float(b) for b in bits),
             uplink_bits_per_client=uplink_bits(cfg, self.spec.params),
             num_params=tree_num_params(self.spec.params),
-            schedule=schedule, num_dispatches=dispatches, wall_s=wall_s)
+            schedule=schedule, num_dispatches=dispatches, wall_s=wall_s,
+            participation_round=tuple(int(p) for p in participation))
 
     def _run_host_loop(self, cfg: FLConfig, engine: str) -> RunResult:
         from .simulation import _run_batched          # no import cycle:
         from .looped import run_federated_looped      # lazy, one-way
         schedule = make_client_schedule(cfg)
+        schedule, valid, _ = self._degrade_schedule(
+            cfg, engine, schedule, self._availability(cfg))
         batch_fn = self.spec.data.batch_fn(steps=cfg.local_steps,
                                            batch=cfg.batch_size)
         eval_fn = self._host_eval_fn()
@@ -578,7 +660,8 @@ class Experiment:
                   else _run_batched)
         hist = runner(self.spec.loss_fn, self.spec.params, batch_fn,
                       eval_fn, cfg, schedule=schedule,
-                      eval_every=self.spec.eval_every, client_weights=cw)
+                      eval_every=self.spec.eval_every, client_weights=cw,
+                      valid=valid)
         return RunResult.from_history(cfg, engine, hist)
 
     # ---- sweep --------------------------------------------------------
@@ -684,9 +767,30 @@ class Experiment:
         S = len(seeds)
         kind = "sweep_sharded" if devices > 1 else "sweep"
         run_sweep, state0, metrics0 = self._program(kind, cfg, devices)
-        schedules = np.stack(
-            [make_client_schedule(cfg, s) for s in seeds])      # (S, R, K)
+        per_seed = [make_client_schedule(cfg, s) for s in seeds]
+        traces = [self._availability(cfg, s) for s in seeds]
+        valids = None
+        participations = None
+        if any(t is not None for t in traces):
+            # each seed keeps its own trace (seed-salted like the
+            # schedules) — the (S, R, K) valid mask rides the same vmap
+            valids, participations = [], []
+            for i, s in enumerate(seeds):
+                cfg_s = dataclasses.replace(cfg, seed=s)
+                sched, valid, part = self._degrade_schedule(
+                    cfg_s, "scan", per_seed[i], traces[i])
+                if valid is None:                    # mixed grids: pad
+                    valid = np.ones(sched.shape, np.float32)
+                    part = np.full((cfg.rounds,), cfg.clients_per_round,
+                                   np.int64)
+                per_seed[i] = sched
+                valids.append(valid)
+                participations.append(part)
+            valids = np.stack(valids)                           # (S, R, K)
+        schedules = np.stack(per_seed)                          # (S, R, K)
         sched_dev = jnp.asarray(schedules, jnp.int32)
+        valid_dev = (None if valids is None
+                     else jnp.asarray(valids, jnp.float32))
         seeds_dev = jnp.asarray(seeds, jnp.int32)
 
         def bcast(t):
@@ -702,9 +806,15 @@ class Experiment:
         dispatches = 0
         for r0 in range(0, cfg.rounds, n_chunk):
             n = min(n_chunk, cfg.rounds - r0)
-            w, state, metrics = run_sweep(
-                seeds_dev, w, state, metrics, jnp.int32(r0),
-                sched_dev[:, r0:r0 + n], n_rounds=n)
+            if valid_dev is None:
+                w, state, metrics = run_sweep(
+                    seeds_dev, w, state, metrics, jnp.int32(r0),
+                    sched_dev[:, r0:r0 + n], n_rounds=n)
+            else:
+                w, state, metrics = run_sweep(
+                    seeds_dev, w, state, metrics, jnp.int32(r0),
+                    sched_dev[:, r0:r0 + n], valid_dev[:, r0:r0 + n],
+                    n_rounds=n)
             dispatches += 1
         wall = time.time() - t0
         loss = np.asarray(metrics["loss"])                      # (S, R)
@@ -722,7 +832,12 @@ class Experiment:
             uplink_bits_round=tuple(float(b) for b in bits[i]),
             uplink_bits_per_client=bpc, num_params=n_params,
             schedule=schedules[i], num_dispatches=dispatches,
-            wall_s=wall / S) for i, s in enumerate(seeds)]
+            wall_s=wall / S,
+            participation_round=tuple(
+                int(p) for p in (
+                    [cfg.clients_per_round] * cfg.rounds
+                    if participations is None else participations[i]))
+        ) for i, s in enumerate(seeds)]
 
     def _sweep_point_host(self, cfg: FLConfig, seeds: Tuple[int, ...],
                           chunk: Optional[int]) -> List[RunResult]:

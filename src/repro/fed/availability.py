@@ -1,0 +1,343 @@
+"""Client availability traces + service-tier fault injection.
+
+Every engine used to assume ideal clients: uniform availability, no
+dropouts, no hung seats, no corrupt frames.  This module makes degraded
+rounds a first-class, *measured* scenario (ROADMAP direction 4(b)):
+
+:class:`AvailabilityTrace`
+    A seeded per-round × per-client availability matrix plus optional
+    per-client heterogeneous ``local_steps``.  Generators: ``always``
+    (the ideal baseline), ``bernoulli`` (iid per-round dropout) and
+    ``markov`` (on/off churn with a stationary dropout rate).  Traces
+    compose with :func:`~repro.fed.engine.make_client_schedule`:
+    ``valid_for(schedule)`` yields the ``(R, K)`` f32 mask the engines
+    thread into the codec ``partial_aggregate(..., valid=)`` chain, so a
+    round with d dropped clients aggregates exactly the K−d survivors
+    instead of averaging in garbage.  ``resample_schedule`` is the
+    Ji et al. 2020 dynamic-sampling plugin: dropped scheduled clients
+    are replaced by seeded draws from the round's still-available spare
+    clients (``FLConfig.avail_resample``).
+
+:class:`FaultPlan`
+    Injected service-tier faults — uplink drops, delays (generalizing
+    ``straggler_slots``), truncated/corrupt frames (the coordinator must
+    answer 400, never crash), mid-round client crashes and hung seats —
+    exercised against both sync (quorum) and async (staleness-weighted)
+    round modes, with participation/survival counters carried in the
+    history schema and :class:`~repro.fed.service.ServiceReport`.
+
+Everything is derived from seeds with ``np.random.RandomState`` — the
+same trace reproduces bit-for-bit across engines, which is what the
+dropped-run ≡ survivors-only-run parity tests lean on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .algorithms import FLConfig
+
+# decorrelates the trace RNG from the schedule RNG at equal seeds
+_TRACE_SEED_SALT = 1_000_003
+
+AVAILABILITY_KINDS = ("always", "bernoulli", "markov")
+
+
+@dataclasses.dataclass(frozen=True)
+class AvailabilityTrace:
+    """A seeded ``(rounds, num_clients)`` availability matrix.
+
+    ``avail[r, c]`` is True when client ``c`` can participate in round
+    ``r``.  ``local_steps`` (optional, ``(num_clients,)`` int32) models
+    compute heterogeneity — per-client local step counts; only the
+    service engine honours it (the fused engines bake ``local_steps``
+    into compiled shapes and refuse such a trace).
+    """
+
+    kind: str
+    avail: np.ndarray
+    local_steps: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        a = np.asarray(self.avail, bool)
+        if a.ndim != 2:
+            raise ValueError(
+                f"avail must be (rounds, num_clients), got shape {a.shape}")
+        object.__setattr__(self, "avail", a)
+        if self.local_steps is not None:
+            ls = np.asarray(self.local_steps, np.int32)
+            if ls.shape != (a.shape[1],):
+                raise ValueError(
+                    f"local_steps must be ({a.shape[1]},), got {ls.shape}")
+            if (ls <= 0).any():
+                raise ValueError("local_steps entries must be positive")
+            object.__setattr__(self, "local_steps", ls)
+
+    # ---- shape ---------------------------------------------------------
+
+    @property
+    def rounds(self) -> int:
+        return self.avail.shape[0]
+
+    @property
+    def num_clients(self) -> int:
+        return self.avail.shape[1]
+
+    # ---- generators ----------------------------------------------------
+
+    @classmethod
+    def always(cls, rounds: int, num_clients: int,
+               local_steps: Optional[np.ndarray] = None
+               ) -> "AvailabilityTrace":
+        """Every client available every round (the ideal baseline)."""
+        return cls("always", np.ones((rounds, num_clients), bool),
+                   local_steps)
+
+    @classmethod
+    def bernoulli(cls, seed: int, rounds: int, num_clients: int,
+                  dropout: float,
+                  local_steps: Optional[np.ndarray] = None
+                  ) -> "AvailabilityTrace":
+        """iid per-(round, client) dropout with probability ``dropout``."""
+        if not 0.0 <= dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {dropout}")
+        rng = np.random.RandomState(seed)
+        avail = rng.random_sample((rounds, num_clients)) >= dropout
+        return cls("bernoulli", avail, local_steps)
+
+    @classmethod
+    def markov(cls, seed: int, rounds: int, num_clients: int,
+               dropout: float, churn: float = 0.5,
+               local_steps: Optional[np.ndarray] = None
+               ) -> "AvailabilityTrace":
+        """Two-state on/off churn per client.
+
+        The chain's stationary unavailable probability is ``dropout``
+        (so long-run participation matches the Bernoulli trace at the
+        same rate) and ``churn`` in (0, 1] sets how fast states flip:
+        P(up→down) = churn·dropout, P(down→up) = churn·(1−dropout).
+        Initial states are drawn from the stationary distribution.
+        """
+        if not 0.0 <= dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {dropout}")
+        if not 0.0 < churn <= 1.0:
+            raise ValueError(f"churn must be in (0, 1], got {churn}")
+        rng = np.random.RandomState(seed)
+        p_down = churn * dropout
+        p_up = churn * (1.0 - dropout)
+        avail = np.empty((rounds, num_clients), bool)
+        up = rng.random_sample(num_clients) >= dropout
+        for r in range(rounds):
+            avail[r] = up
+            u = rng.random_sample(num_clients)
+            up = np.where(up, u >= p_down, u < p_up)
+        return cls("markov", avail, local_steps)
+
+    @classmethod
+    def heterogeneous_steps(cls, seed: int, num_clients: int, *,
+                            choices: Tuple[int, ...] = (1, 2, 4)
+                            ) -> np.ndarray:
+        """Seeded per-client local step counts (service engine only)."""
+        if not choices or any(int(c) <= 0 for c in choices):
+            raise ValueError(f"choices must be positive ints, {choices!r}")
+        rng = np.random.RandomState(seed)
+        return rng.choice(np.asarray(choices, np.int32),
+                          size=num_clients).astype(np.int32)
+
+    # ---- composition with the (R, K) schedule --------------------------
+
+    def _check_schedule(self, schedule: np.ndarray) -> np.ndarray:
+        schedule = np.asarray(schedule, np.int32)
+        if schedule.ndim != 2 or schedule.shape[0] > self.rounds:
+            raise ValueError(
+                f"schedule {schedule.shape} does not fit trace "
+                f"({self.rounds} rounds)")
+        if schedule.min() < 0 or schedule.max() >= self.num_clients:
+            raise ValueError(
+                f"schedule references clients outside 0.."
+                f"{self.num_clients - 1}")
+        return schedule
+
+    def valid_for(self, schedule: np.ndarray) -> np.ndarray:
+        """The ``(R, K)`` f32 validity mask of a client schedule —
+        ``1.0`` where the scheduled client is available that round."""
+        schedule = self._check_schedule(schedule)
+        rows = np.arange(schedule.shape[0])[:, None]
+        return self.avail[rows, schedule].astype(np.float32)
+
+    def participation(self, schedule: np.ndarray) -> np.ndarray:
+        """Per-round survivor counts, ``(R,)`` int."""
+        return self.valid_for(schedule).sum(axis=1).astype(np.int64)
+
+    def resample_schedule(self, schedule: np.ndarray,
+                          seed: int) -> np.ndarray:
+        """Dynamic sampling (Ji et al. 2020): replace each round's
+        dropped scheduled clients with seeded draws from that round's
+        available, not-yet-scheduled clients.  Rounds with too few
+        spares keep the unreplaced dropped entries (they stay masked
+        invalid by ``valid_for``)."""
+        schedule = self._check_schedule(schedule).copy()
+        rng = np.random.RandomState(seed + _TRACE_SEED_SALT)
+        for r in range(schedule.shape[0]):
+            row = schedule[r]
+            dead = [k for k, c in enumerate(row) if not self.avail[r, c]]
+            if not dead:
+                continue
+            taken = set(int(c) for c in row)
+            spares = [c for c in np.flatnonzero(self.avail[r])
+                      if int(c) not in taken]
+            if not spares:
+                continue
+            picks = rng.choice(np.asarray(spares, np.int32),
+                               size=min(len(dead), len(spares)),
+                               replace=False)
+            for k, c in zip(dead, picks):
+                row[k] = c
+        return schedule
+
+
+def make_availability(cfg: FLConfig,
+                      seed: Optional[int] = None
+                      ) -> Optional[AvailabilityTrace]:
+    """Build the trace ``cfg`` describes (None for ``"always"``).
+
+    The trace seed is ``seed`` (default ``cfg.seed``) salted so the
+    availability stream never aliases the schedule RNG at equal seeds.
+    """
+    if cfg.availability == "always":
+        return None
+    base = (cfg.seed if seed is None else int(seed)) + _TRACE_SEED_SALT
+    if cfg.availability == "bernoulli":
+        return AvailabilityTrace.bernoulli(base, cfg.rounds,
+                                           cfg.num_clients, cfg.dropout)
+    if cfg.availability == "markov":
+        return AvailabilityTrace.markov(base, cfg.rounds, cfg.num_clients,
+                                        cfg.dropout, cfg.churn)
+    raise ValueError(
+        f"unknown availability {cfg.availability!r} "
+        f"(one of {AVAILABILITY_KINDS})")
+
+
+def check_engine_support(cfg: FLConfig,
+                         trace: Optional[AvailabilityTrace],
+                         engine: str) -> None:
+    """Refuse config/engine combinations that would silently mis-count
+    dropped clients instead of masking them."""
+    if trace is None:
+        return
+    if trace.rounds < cfg.rounds or trace.num_clients != cfg.num_clients:
+        raise ValueError(
+            f"availability trace is ({trace.rounds}, {trace.num_clients}) "
+            f"but cfg needs ({cfg.rounds}, {cfg.num_clients})")
+    if cfg.int_mask_agg and engine not in ("cohort", "service"):
+        # the scan/batched/looped count aggregate folds wn[0] over the
+        # summed counts — a zeroed dropped-client weight would poison it;
+        # the cohort/service partial chain masks counts correctly
+        raise ValueError(
+            "int_mask_agg cannot mask dropped clients on engine="
+            f"{engine!r} (the count aggregate folds one weight scalar) — "
+            "run availability scenarios on engine='cohort' or 'service'")
+    if cfg.error_feedback:
+        raise ValueError(
+            "error_feedback under partial participation would update "
+            "dropped clients' residual slots — availability traces do "
+            "not support it yet")
+    if trace.local_steps is not None and engine != "service":
+        raise ValueError(
+            "per-client local_steps are served per seat by the service "
+            f"engine only; engine={engine!r} bakes cfg.local_steps into "
+            "compiled shapes")
+
+
+def require_survivors(valid: np.ndarray, *, resample_hint: bool) -> None:
+    """Raise before dispatch when any round would aggregate 0 clients."""
+    valid = np.asarray(valid)
+    empty = np.flatnonzero(valid.sum(axis=-1) == 0)
+    if empty.size:
+        hint = ("" if resample_hint else
+                " — lower dropout or set avail_resample=True")
+        raise ValueError(
+            f"availability trace leaves round(s) {empty[:8].tolist()} "
+            f"with zero surviving clients{hint}")
+
+
+# ---------------------------------------------------------------------------
+# service-tier fault injection
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """Deterministic injected faults, keyed by ``(round, worker slot)``.
+
+    ``drop_uplinks``     the seat computes its update but never POSTs it
+                         (a mid-flight network loss) — the round can only
+                         close at a sync ``quorum`` / async ``min_fresh``.
+    ``delay_uplinks``    ``(round, slot, lag)``: the POST is withheld
+                         until the coordinator is ``lag`` rounds past the
+                         sending round (generalizes ``straggler_slots``).
+    ``corrupt_uplinks``  the seat POSTs a truncated frame; the
+                         coordinator must answer 400 (serde refuses the
+                         bytes) and never crash — the real message is
+                         lost, exactly like a drop plus a reject counter.
+    ``crash_slots``      the seat exits at the start of that round and
+                         never participates again.
+    ``hang_slots``       the seat sleeps ``hang_sleep_s`` at the start of
+                         that round — the regression target of the
+                         hung-worker satellite (``join`` returns with the
+                         thread still alive).
+    """
+
+    drop_uplinks: Tuple[Tuple[int, int], ...] = ()
+    delay_uplinks: Tuple[Tuple[int, int, int], ...] = ()
+    corrupt_uplinks: Tuple[Tuple[int, int], ...] = ()
+    crash_slots: Tuple[Tuple[int, int], ...] = ()
+    hang_slots: Tuple[Tuple[int, int], ...] = ()
+    hang_sleep_s: float = 120.0
+
+    def validate(self, rounds: int, num_slots: int) -> None:
+        def check(name, pairs):
+            for entry in pairs:
+                r, s = entry[0], entry[1]
+                if not (0 <= r < rounds and 0 <= s < num_slots):
+                    raise ValueError(
+                        f"FaultPlan.{name} entry {entry} outside "
+                        f"rounds 0..{rounds - 1} / slots 0.."
+                        f"{num_slots - 1}")
+        check("drop_uplinks", self.drop_uplinks)
+        check("delay_uplinks", self.delay_uplinks)
+        check("corrupt_uplinks", self.corrupt_uplinks)
+        check("crash_slots", self.crash_slots)
+        check("hang_slots", self.hang_slots)
+        for r, s, lag in self.delay_uplinks:
+            if lag < 1:
+                raise ValueError(
+                    f"delay_uplinks lag must be >= 1, got {lag}")
+        if self.hang_sleep_s <= 0:
+            raise ValueError("hang_sleep_s must be positive")
+
+    # ---- lookups (worker loop hot path) --------------------------------
+
+    def drops(self, r: int, slot: int) -> bool:
+        return (r, slot) in self.drop_uplinks
+
+    def delay(self, r: int, slot: int) -> int:
+        for rr, ss, lag in self.delay_uplinks:
+            if rr == r and ss == slot:
+                return lag
+        return 0
+
+    def corrupts(self, r: int, slot: int) -> bool:
+        return (r, slot) in self.corrupt_uplinks
+
+    def crashes(self, r: int, slot: int) -> bool:
+        return (r, slot) in self.crash_slots
+
+    def hangs(self, r: int, slot: int) -> bool:
+        return (r, slot) in self.hang_slots
+
+    def lost_uplinks(self) -> int:
+        """Messages the plan guarantees never aggregate (drops +
+        corrupts) — the balance term the accounting tests close on."""
+        return len(self.drop_uplinks) + len(self.corrupt_uplinks)

@@ -211,14 +211,41 @@ def _make_chunk_body(
 
     def body(seed, carry, inp):
         w, state, metrics = carry
-        r, picked = inp
+        # the 3-element xs carry a per-round availability mask; the
+        # 2-element path is TEXTUALLY today's program (trace-time static
+        # branch → an all-available run stays bitwise identical)
+        if len(inp) == 3:
+            r, picked, valid = inp
+            if cfg.int_mask_agg:
+                # the integer count aggregate folds wn[0] over the summed
+                # counts — a zeroed dropped-client weight poisons it
+                raise ValueError(
+                    "int_mask_agg cannot mask dropped clients on the "
+                    "scan path — run availability scenarios on "
+                    "engine='cohort' or 'service'")
+        else:
+            r, picked = inp
+            valid = None
         batches = data.gather_batches(r, picked, steps=cfg.local_steps,
                                       batch=cfg.batch_size)
         weights = weights_all[picked]
+        if valid is not None:
+            # dropped clients still compute (static shapes) but carry a
+            # zero aggregation weight: the normalizing codecs then
+            # average EXACTLY the survivors (w*1.0 and +0.0 are exact in
+            # f32, so this matches a survivors-only run bitwise)
+            weights = weights * valid
         w, state, losses, wire_bits = round_body(seed, w, state, batches,
                                                  picked, r, weights)
         metrics = dict(metrics)
-        metrics["loss"] = metrics["loss"].at[r].set(jnp.mean(losses[:, -1]))
+        if valid is None:
+            loss_r = jnp.mean(losses[:, -1])
+        else:
+            nv = jnp.sum(valid)
+            loss_r = jnp.sum(valid * losses[:, -1]) / nv
+            # the wire only carries the survivors' uplinks
+            wire_bits = wire_bits * nv / jnp.float32(valid.shape[0])
+        metrics["loss"] = metrics["loss"].at[r].set(loss_r)
         # MEASURED wire cost: summed encoded WireMsg buffer sizes, not a
         # precomputed estimate (a constant in-program — shapes are static)
         metrics["uplink_bits"] = metrics["uplink_bits"].at[r].set(wire_bits)
@@ -230,10 +257,12 @@ def _make_chunk_body(
         return (w, state, metrics), None
 
     def run_chunk(seed, w, state, metrics, r0, schedule_chunk,
-                  n_rounds: int):
+                  n_rounds: int, valid_chunk=None):
         rs = r0 + jnp.arange(n_rounds, dtype=jnp.int32)
+        xs = ((rs, schedule_chunk) if valid_chunk is None
+              else (rs, schedule_chunk, valid_chunk))
         (w, state, metrics), _ = jax.lax.scan(
-            partial(body, seed), (w, state, metrics), (rs, schedule_chunk))
+            partial(body, seed), (w, state, metrics), xs)
         return w, state, metrics
 
     return run_chunk, state0, init_metric_buffers(cfg)
@@ -271,9 +300,10 @@ def make_experiment_program(
         eval_every=eval_every, client_weights=client_weights)
 
     @partial(jax.jit, static_argnames=("n_rounds",))
-    def run_chunk(w, state, metrics, r0, schedule_chunk, *, n_rounds: int):
+    def run_chunk(w, state, metrics, r0, schedule_chunk, valid_chunk=None,
+                  *, n_rounds: int):
         return chunk(jnp.int32(cfg.seed), w, state, metrics, r0,
-                     schedule_chunk, n_rounds)
+                     schedule_chunk, n_rounds, valid_chunk)
 
     return run_chunk, state0, metrics0
 
@@ -301,8 +331,9 @@ def make_seeded_experiment_program(
 
     @partial(jax.jit, static_argnames=("n_rounds",))
     def run_chunk(seed, w, state, metrics, r0, schedule_chunk,
-                  *, n_rounds: int):
-        return chunk(seed, w, state, metrics, r0, schedule_chunk, n_rounds)
+                  valid_chunk=None, *, n_rounds: int):
+        return chunk(seed, w, state, metrics, r0, schedule_chunk, n_rounds,
+                     valid_chunk)
 
     return run_chunk, state0, metrics0
 
@@ -336,11 +367,16 @@ def make_sweep_program(
 
     @partial(jax.jit, static_argnames=("n_rounds",))
     def run_sweep(seeds, w, state, metrics, r0, schedule_chunks,
-                  *, n_rounds: int):
+                  valid_chunks=None, *, n_rounds: int):
+        if valid_chunks is None:
+            return jax.vmap(
+                lambda s, wi, sti, mi, sch: chunk(s, wi, sti, mi, r0, sch,
+                                                  n_rounds)
+            )(seeds, w, state, metrics, schedule_chunks)
         return jax.vmap(
-            lambda s, wi, sti, mi, sch: chunk(s, wi, sti, mi, r0, sch,
-                                              n_rounds)
-        )(seeds, w, state, metrics, schedule_chunks)
+            lambda s, wi, sti, mi, sch, vc: chunk(s, wi, sti, mi, r0, sch,
+                                                  n_rounds, vc)
+        )(seeds, w, state, metrics, schedule_chunks, valid_chunks)
 
     return run_sweep, state0, metrics0
 
@@ -415,28 +451,43 @@ def make_sharded_sweep_program(
 
     @partial(jax.jit, static_argnames=("n_rounds",))
     def run_sweep(seeds, w, state, metrics, r0, schedule_chunks,
-                  *, n_rounds: int):
+                  valid_chunks=None, *, n_rounds: int):
         if seeds.shape[0] % devices:
             raise ValueError(
                 f"{seeds.shape[0]} seeds do not divide over {devices} "
                 "devices (see sweep_device_count)")
 
-        def shard_fn(seeds_l, w_l, state_l, metrics_l, r0_l, sched_l):
-            return jax.vmap(
-                lambda s, wi, sti, mi, sch: chunk(s, wi, sti, mi, r0_l,
-                                                  sch, n_rounds)
-            )(seeds_l, w_l, state_l, metrics_l, sched_l)
-
         # check_rep off: the closed-over dataset/eval constants replicate
         # and no collective ever relates the shards — there is nothing
         # for replication checking to verify, and 0.4.x rejects some
         # closed-over-constant patterns under it.
+        if valid_chunks is None:
+            def shard_fn(seeds_l, w_l, state_l, metrics_l, r0_l, sched_l):
+                return jax.vmap(
+                    lambda s, wi, sti, mi, sch: chunk(s, wi, sti, mi, r0_l,
+                                                      sch, n_rounds)
+                )(seeds_l, w_l, state_l, metrics_l, sched_l)
+
+            return shard_map(
+                shard_fn, mesh=mesh,
+                in_specs=(seed_axis, seed_axis, seed_axis, seed_axis, P(),
+                          seed_axis),
+                out_specs=carry_specs, check_rep=False,
+            )(seeds, w, state, metrics, r0, schedule_chunks)
+
+        def shard_fn_v(seeds_l, w_l, state_l, metrics_l, r0_l, sched_l,
+                       valid_l):
+            return jax.vmap(
+                lambda s, wi, sti, mi, sch, vc: chunk(s, wi, sti, mi, r0_l,
+                                                      sch, n_rounds, vc)
+            )(seeds_l, w_l, state_l, metrics_l, sched_l, valid_l)
+
         return shard_map(
-            shard_fn, mesh=mesh,
+            shard_fn_v, mesh=mesh,
             in_specs=(seed_axis, seed_axis, seed_axis, seed_axis, P(),
-                      seed_axis),
+                      seed_axis, seed_axis),
             out_specs=carry_specs, check_rep=False,
-        )(seeds, w, state, metrics, r0, schedule_chunks)
+        )(seeds, w, state, metrics, r0, schedule_chunks, valid_chunks)
 
     return run_sweep, state0, metrics0
 
@@ -522,8 +573,15 @@ class CohortRunner:
         steps, batch, seed_b = cfg.local_steps, cfg.batch_size, data.batch_seed
 
         @jax.jit
-        def visit(seed, w, state, block, cids, locs, wts, n_valid, r):
+        def visit(seed, w, state, block, cids, locs, wts, n_valid, r,
+                  avail=None):
             valid = jnp.arange(cids.shape[0], dtype=jnp.int32) < n_valid
+            if avail is not None:
+                # availability drops compose with the padding mask: a
+                # dropped client still computes (static shapes) but its
+                # partial weight is zeroed — exactly the K−d survivors
+                # aggregate
+                valid = valid & (avail > 0)
             batches = cohort_gather(block, r, cids, locs, steps=steps,
                                     batch=batch, batch_seed=seed_b)
             msg, agg_w, losses = uplink_fn(seed, w, state, batches, cids,
@@ -535,7 +593,9 @@ class CohortRunner:
         @jax.jit
         def apply_round(seed, w, state, part, r):
             agg = codec.finalize_partial(part)
-            return apply_fn(seed, w, state, agg, r)
+            # the merged partial's weight mass doubles as the survivor
+            # count for bodies that need it (fedpm's Beta smoothing)
+            return apply_fn(seed, w, state, agg, r, part["weight"])
 
         self._visit = visit
         self._merge = jax.jit(codec.merge_partials)
@@ -579,16 +639,36 @@ class CohortRunner:
 
     def run(self, *, seed: Optional[int] = None,
             schedule: Optional[np.ndarray] = None,
-            prefetch: bool = True) -> Tuple[Dict[str, np.ndarray],
-                                            np.ndarray, int]:
+            prefetch: bool = True,
+            valid: Optional[np.ndarray] = None
+            ) -> Tuple[Dict[str, np.ndarray], np.ndarray, int]:
         """Stream the whole experiment; returns ``(metrics, schedule,
         num_dispatches)`` with scan-engine metric layout (``(R,)`` loss /
-        NaN-padded acc / uplink_bits buffers)."""
+        NaN-padded acc / uplink_bits buffers).
+
+        ``valid`` is an optional ``(R, K)`` availability mask aligned to
+        the schedule (1.0 = the scheduled client uplinks this round); a
+        round then aggregates exactly its survivors and the loss /
+        uplink-bits metrics count only them.
+        """
         cfg = self.cfg
         if seed is None:
             seed = cfg.seed
         if schedule is None:
             schedule = make_client_schedule(cfg, seed)
+        participation = None
+        if valid is not None:
+            valid = np.asarray(valid, np.float32)
+            if valid.shape != tuple(schedule.shape):
+                raise ValueError(
+                    f"valid mask shape {valid.shape} does not match "
+                    f"schedule shape {tuple(schedule.shape)}")
+            participation = valid.sum(axis=1).astype(np.int64)
+            if (participation < 1).any():
+                bad = np.nonzero(participation < 1)[0].tolist()
+                raise ValueError(
+                    f"rounds {bad} have zero surviving clients — lower "
+                    "dropout or enable avail_resample")
         visits = self.plan(schedule)
         seed_dev = jnp.int32(seed)
         w, state = self._params, self._state0
@@ -618,10 +698,26 @@ class CohortRunner:
                             nxt = next(sp_iter, None)
                     else:
                         block = self.data.stage(v.cohort)
-                p, loss_sum = self._visit(
-                    seed_dev, w, state, block, jnp.asarray(v.cids),
-                    jnp.asarray(v.locs), jnp.asarray(v.weights),
-                    jnp.int32(v.n_valid), jnp.int32(v.round_idx))
+                if valid is None:
+                    p, loss_sum = self._visit(
+                        seed_dev, w, state, block, jnp.asarray(v.cids),
+                        jnp.asarray(v.locs), jnp.asarray(v.weights),
+                        jnp.int32(v.n_valid), jnp.int32(v.round_idx))
+                else:
+                    # map each visit member back to its schedule slot
+                    # (cids are unique within a round) to pick up its
+                    # availability bit; padding repeats a member's value —
+                    # the n_valid mask kills those rows regardless
+                    row = schedule[v.round_idx]
+                    slot_of = {int(c): k for k, c in enumerate(row)}
+                    avail = np.asarray(
+                        [valid[v.round_idx][slot_of[int(c)]]
+                         for c in v.cids], np.float32)
+                    p, loss_sum = self._visit(
+                        seed_dev, w, state, block, jnp.asarray(v.cids),
+                        jnp.asarray(v.locs), jnp.asarray(v.weights),
+                        jnp.int32(v.n_valid), jnp.int32(v.round_idx),
+                        jnp.asarray(avail))
                 dispatches += 1
                 part = p if part is None else self._merge(part, p)
                 r = v.round_idx
@@ -642,11 +738,17 @@ class CohortRunner:
                 executor.shutdown(wait=True)
 
         K = cfg.clients_per_round
+        if participation is None:
+            loss = np.asarray(jnp.stack(loss_sums)) / np.float32(K)
+            bits = np.full((R,), K * self._bits_per_client, np.float32)
+        else:
+            denom = participation.astype(np.float32)
+            loss = np.asarray(jnp.stack(loss_sums)) / denom
+            bits = denom * np.float32(self._bits_per_client)
         metrics = {
-            "loss": np.asarray(jnp.stack(loss_sums)) / np.float32(K),
+            "loss": loss,
             "acc": np.asarray([float(a) for a in accs], np.float32),
-            "uplink_bits": np.full((R,), K * self._bits_per_client,
-                                   np.float32),
+            "uplink_bits": bits,
         }
         self.final_params = w
         self.final_state = state

@@ -52,6 +52,7 @@ def run_federated_looped(
     eval_every: int = 1,
     client_weights: Optional[List[float]] = None,
     schedule: Optional[np.ndarray] = None,
+    valid: Optional[np.ndarray] = None,
 ) -> Dict[str, Any]:
     from ..core.compressors import REGISTRY as COMPRESSOR_REGISTRY
     builtin = ({"fedmrn", "fedmrns", "fedpm", "fedsparsify", "fedavg"}
@@ -117,10 +118,29 @@ def run_federated_looped(
         if compressor is not None:
             comp_fn = jax.jit(compressor.roundtrip)
 
+    if valid is not None:
+        valid = np.asarray(valid)
+        if valid.shape != tuple(schedule.shape):
+            raise ValueError(
+                f"valid mask shape {valid.shape} does not match schedule "
+                f"shape {tuple(schedule.shape)}")
+    history["participation_round"] = []
     residuals: Dict[int, Pytree] = {}
     t0 = time.time()
     for rnd in range(cfg.rounds):
-        picked = schedule[rnd]
+        # the reference loop GENUINELY excludes dropped clients — no
+        # masked zero-weight rows — which is what the masked fused
+        # engines are parity-tested against
+        if valid is None:
+            picked = schedule[rnd]
+        else:
+            picked = [int(c) for k, c in enumerate(schedule[rnd])
+                      if valid[rnd][k]]
+            if not picked:
+                raise ValueError(
+                    f"round {rnd} has zero surviving clients — lower "
+                    "dropout or enable avail_resample")
+        history["participation_round"].append(len(picked))
         weights = [client_weights[c] for c in picked]
         weights_dev = jnp.asarray(weights, jnp.float32)
         losses = []
@@ -208,9 +228,9 @@ def run_federated_looped(
         if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
-    # one jitted local-update dispatch per (round, client) — the engine
-    # overhead the batched/scan drivers collapse
-    history["num_dispatches"] = cfg.rounds * cfg.clients_per_round
+    # one jitted local-update dispatch per (round, surviving client) —
+    # the engine overhead the batched/scan drivers collapse
+    history["num_dispatches"] = int(sum(history["participation_round"]))
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     return history

@@ -1,0 +1,143 @@
+"""Paper-scenario builders: Dirichlet-skewed specs + degradation curves.
+
+The partitioners in :mod:`repro.data.synthetic` implement the paper's
+federated splits (§5.1.2) but until now only the IID path was wired into
+an :class:`~repro.fed.api.ExperimentSpec` by callers; the Non-IID-1
+Dirichlet partitioner sat dormant.  :func:`make_synthetic_spec` builds a
+complete spec from ``(partition kind, alpha)`` so heterogeneity is one
+argument away, and the two curve helpers turn the availability tier
+(ROADMAP 4(b)) into the plots the robustness story needs:
+
+:func:`dropout_curve`
+    accuracy vs dropout rate — ONE :meth:`Experiment.sweep` call over a
+    ``{"availability": ["bernoulli"], "dropout": [...]}`` grid (the S
+    seeds of each dropout point run as one vmapped scan program).
+
+:func:`alpha_curve`
+    accuracy vs Dirichlet ``alpha`` — alpha changes the DATA partition,
+    not an ``FLConfig`` field, so each alpha is its own spec/sweep; the
+    per-alpha multi-seed sweep is still vmapped.
+
+Both return plain nested dicts (JSON-ready) keyed by the swept value.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..data import (make_federated_dataset, make_image_task, make_partition)
+from ..models.cnn import mlp_apply, mlp_init, mlp_loss
+from .algorithms import FLConfig
+from .api import Experiment, ExperimentSpec
+
+
+def make_synthetic_spec(cfg: FLConfig, *, partition: str = "iid",
+                        alpha: float = 0.3, labels_per_client: int = 3,
+                        n: int = 4000, hw: int = 16, n_classes: int = 8,
+                        noise: float = 0.6, d_hidden: int = 32,
+                        data_seed: int = 0,
+                        batch_seed: int = 7) -> ExperimentSpec:
+    """A complete MLP-on-synthetic-images spec for any partitioner.
+
+    ``partition`` is one of :func:`repro.data.make_partition`'s kinds —
+    ``"iid"``, ``"noniid1"`` (Dirichlet(``alpha``) label skew) or
+    ``"noniid2"`` (``labels_per_client`` labels per client).  The task,
+    model and test split are deterministic in ``data_seed``, so two specs
+    differing only in ``partition``/``alpha`` hold identical samples
+    partitioned differently — exactly what an accuracy-vs-α curve needs.
+    """
+    task = make_image_task(data_seed, n=n, hw=hw, n_classes=n_classes,
+                           noise=noise)
+    parts = make_partition(partition, data_seed, task.y, cfg.num_clients,
+                           alpha=alpha, labels_per_client=labels_per_client)
+    n_test = max(1, n // 8)
+    ds = make_federated_dataset(task.x, task.y, parts,
+                                batch_seed=batch_seed,
+                                x_test=task.x[:n_test],
+                                y_test=task.y[:n_test])
+    params = mlp_init(jax.random.key(data_seed), d_in=hw * hw,
+                      d_hidden=d_hidden, n_classes=n_classes)
+    return ExperimentSpec(loss_fn=mlp_loss, params=params, data=ds,
+                          config=cfg, eval_apply=mlp_apply)
+
+
+def _point_summary(runs) -> Dict[str, Any]:
+    accs = np.asarray([r.final_acc for r in runs], np.float64)
+    return {
+        "final_acc_mean": float(accs.mean()),
+        "final_acc_std": float(accs.std()),
+        "final_acc": [float(a) for a in accs],
+        "participation_round": [list(r.participation_round) for r in runs],
+    }
+
+
+def dropout_curve(spec: ExperimentSpec, *,
+                  dropouts: Sequence[float] = (0.0, 0.2, 0.4, 0.6),
+                  seeds: Any = 3,
+                  availability: str = "bernoulli",
+                  churn: Optional[float] = None,
+                  avail_resample: bool = False) -> Dict[str, Any]:
+    """Accuracy vs dropout from ONE vmapped sweep.
+
+    Every (dropout × seed) trajectory comes out of the same compiled
+    sweep program; the ``dropout=0.0`` point is bitwise the undegraded
+    baseline (the availability mask traces to all-ones), so the curve's
+    left edge doubles as a regression anchor.
+    """
+    cfg = spec.config
+    if availability == "always" or (availability == "bernoulli"
+                                    and churn is not None):
+        raise ValueError(
+            "dropout_curve sweeps a degradation axis — availability must "
+            "be 'bernoulli' (churn=None) or 'markov'")
+    overrides: Dict[str, Sequence[Any]] = {
+        "availability": [availability],
+        "dropout": [float(d) for d in dropouts],
+    }
+    if churn is not None:
+        overrides["churn"] = [float(churn)]
+    if avail_resample:
+        overrides["avail_resample"] = [True]
+    exp = Experiment(spec)
+    res = exp.sweep(seeds=seeds, grid=overrides)
+    curve: Dict[str, Any] = {
+        "algorithm": cfg.algorithm, "availability": availability,
+        "seeds": list(res.seeds), "points": {},
+    }
+    for pt in res.points:
+        d = dict(pt.overrides)["dropout"]
+        curve["points"][f"{d:g}"] = _point_summary(pt.runs)
+    return curve
+
+
+def alpha_curve(cfg: FLConfig, *,
+                alphas: Sequence[float] = (0.1, 0.3, 1.0, 10.0),
+                seeds: Any = 3,
+                dropout: float = 0.0,
+                spec_kw: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    """Accuracy vs Dirichlet ``alpha`` (Non-IID-1), optionally degraded.
+
+    Each alpha rebuilds the partition (same samples, same model init —
+    see :func:`make_synthetic_spec`), then runs a multi-seed vmapped
+    sweep; with ``dropout > 0`` every point also rides a Bernoulli
+    availability trace, giving the heterogeneity × dropout interaction
+    from the same code path as :func:`dropout_curve`.
+    """
+    spec_kw = dict(spec_kw or {})
+    if dropout > 0.0:
+        cfg = dataclasses.replace(cfg, availability="bernoulli",
+                                  dropout=float(dropout))
+    curve: Dict[str, Any] = {
+        "algorithm": cfg.algorithm, "partition": "noniid1",
+        "dropout": float(dropout), "points": {},
+    }
+    for alpha in alphas:
+        spec = make_synthetic_spec(cfg, partition="noniid1",
+                                   alpha=float(alpha), **spec_kw)
+        res = Experiment(spec).sweep(seeds=seeds)
+        curve["seeds"] = list(res.seeds)
+        curve["points"][f"{alpha:g}"] = _point_summary(res.points[0].runs)
+    return curve

@@ -112,53 +112,116 @@ class ServiceClient:
 
 def run_worker(slot: int, client: ServiceClient, service: ServiceConfig,
                *, params_template: Any, state_template: Any,
-               client_step: Callable[[Any, Any, int, int, float],
+               client_step: Callable[[Any, Any, int, int, float, int],
                                      Tuple[Any, float, float]],
-               weights_all: np.ndarray) -> int:
+               weights_all: np.ndarray,
+               local_steps: Any,
+               valid: Optional[np.ndarray] = None,
+               faults: Optional[Any] = None) -> Dict[str, int]:
     """Participate until the coordinator reports ``done``.
 
-    ``client_step(w, state, round_idx, cid, weight)`` is the runner's
-    jitted local program returning ``(msg_bytes_payload, agg_weight,
-    last_loss)`` — actually ``(WireMsg, float, float)``; framing happens
-    here so the transport layer owns every byte that crosses the wire.
-    Returns the number of uplinks this worker POSTed.
+    ``client_step(w, state, round_idx, cid, weight, steps)`` is the
+    runner's jitted local program returning ``(msg, agg_weight,
+    last_loss)`` — a ``(WireMsg, float, float)``; framing happens here
+    so the transport layer owns every byte that crosses the wire.
+
+    ``valid`` is an optional ``(R, K)`` availability mask — a seat whose
+    ``valid[r, slot]`` is 0 sits the round out entirely.  ``faults`` is
+    an optional :class:`repro.fed.FaultPlan`; injected drops / delays /
+    corrupt frames / crashes / hangs are exercised here, each tallied in
+    the returned stats dict (keys: ``posted``, ``skipped``, ``dropped``,
+    ``delayed``, ``corrupted``, ``crashed``, ``hung``).
+
+    Every POST goes through ONE response handler: 200 counts, 409/410
+    are expected races (stale/finished), anything else raises — the
+    deferred straggler path included (it used to swallow errors and
+    consult a stale status snapshot).
     """
-    posted = 0
-    deferred: Optional[Tuple[int, bytes]] = None
+    stats = {"posted": 0, "skipped": 0, "dropped": 0, "delayed": 0,
+             "corrupted": 0, "crashed": 0, "hung": 0}
+
+    def post_now(r_msg: int, body: bytes) -> int:
+        resp = client.post_uplink(r_msg, body)
+        code = resp["http_status"]
+        if code == 200:
+            stats["posted"] += 1
+        elif code not in (409, 410):
+            raise ServiceError(
+                f"uplink round {r_msg} slot {slot} -> {resp}")
+        return code
+
+    # (ready_round, sent_round, body): the POST is withheld until the
+    # coordinator reaches ready_round
+    deferred: list = []
     last_round = -1
     while True:
         st = client.status()
         if st["done"]:
-            # a still-deferred straggler message has nowhere to land:
-            # the run is over, drop it (conservation: R*K - lag losses)
-            return posted
+            # still-deferred messages have nowhere to land: the run is
+            # over, drop them (conservation: R*K − lag losses)
+            return stats
         r = st["round"]
-        if deferred is not None and r > deferred[0]:
-            resp = client.post_uplink(*deferred)
-            deferred = None
-            if resp["http_status"] == 200:
-                posted += 1
-            if resp.get("round", r) != r or st["done"]:
-                continue
+        if deferred and r >= deferred[0][0]:
+            ready = [d for d in deferred if r >= d[0]]
+            deferred = [d for d in deferred if r < d[0]]
+            for _, r_sent, body in ready:
+                post_now(r_sent, body)
+            # the POST may itself close rounds (or the run) — RE-FETCH
+            # status instead of trusting the pre-POST snapshot
+            st = client.status()
+            if st["done"]:
+                return stats
+            r = st["round"]
         if r <= last_round:
             time.sleep(service.poll_s)
+            continue
+        if faults is not None and faults.crashes(r, slot):
+            stats["crashed"] = 1
+            return stats
+        if faults is not None and faults.hangs(r, slot):
+            # the hung-seat scenario: sleep well past the runner's join
+            # timeout, then resume (the run usually finished without us)
+            stats["hung"] += 1
+            last_round = r
+            time.sleep(faults.hang_sleep_s)
+            continue
+        if valid is not None and not valid[r][slot]:
+            stats["skipped"] += 1
+            last_round = r
             continue
         w, state, meta = client.get_model(params_template, state_template)
         if meta["round"] != r or meta["done"]:
             continue                   # raced a round close — re-pull
         cid = int(meta["cids"][slot])
+        steps = (int(local_steps[cid])
+                 if isinstance(local_steps, np.ndarray)
+                 else int(local_steps))
         msg, agg_weight, loss = client_step(w, state, r, cid,
-                                            float(weights_all[cid]))
+                                            float(weights_all[cid]),
+                                            steps)
         body = serde.dumps_msg(msg, round=r, cid=cid,
                                weight=float(agg_weight),
                                loss=float(loss))
         last_round = r
-        if slot in service.straggler_slots:
-            deferred = (r, body)
+        if faults is not None and faults.corrupts(r, slot):
+            # truncate the frame mid-buffer: serde must refuse it and
+            # the coordinator must answer 400, never crash
+            code = client.post_uplink(r, body[:max(8, len(body) // 2)]
+                                      )["http_status"]
+            if code != 400:
+                raise ServiceError(
+                    f"corrupt frame round {r} slot {slot} was not "
+                    f"refused (got {code})")
+            stats["corrupted"] += 1
             continue
-        resp = client.post_uplink(r, body)
-        if resp["http_status"] == 200:
-            posted += 1
-        elif resp["http_status"] not in (409, 410):
-            raise ServiceError(f"uplink round {r} slot {slot} -> "
-                               f"{resp}")
+        if faults is not None and faults.drops(r, slot):
+            stats["dropped"] += 1
+            continue
+        lag = faults.delay(r, slot) if faults is not None else 0
+        if slot in service.straggler_slots:
+            lag = max(lag, 1)
+        if lag > 0:
+            stats["delayed"] += 1
+            deferred.append((r + lag, r, body))
+            continue
+        post_now(r, body)

@@ -19,7 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+from functools import partial
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +31,7 @@ from ..algorithms import FLConfig, get_algorithm
 from ..codecs import MaskCodec
 from ..engine import eval_round_indices, make_client_schedule
 from . import serde
-from .client import ServiceClient, run_worker
+from .client import ServiceClient, ServiceError, run_worker
 from .server import Coordinator, ServiceConfig, make_http_server
 
 Pytree = Any
@@ -58,6 +59,15 @@ class ServiceReport:
     downlink_overhead_bits: int     # frame + algorithm state, per request
     staleness: Tuple[Tuple[Dict[str, Any], ...], ...]
     base_url: str
+    # ---- availability / fault accounting (PR 9) ------------------------
+    participation: Tuple[int, ...] = ()   # uplinks aggregated per round
+    expected: Tuple[int, ...] = ()        # survivors the trace promised
+    rejected: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    #   coordinator-side non-200 answers by reason (bad_frame/stale/...)
+    client_faults: Mapping[str, int] = dataclasses.field(
+        default_factory=dict)             # summed worker stats (dropped,
+    #   delayed, corrupted, crashed, hung, skipped, posted)
+    hung_workers: int = 0                 # seats still alive after join
 
 
 class ServiceRunner:
@@ -97,10 +107,14 @@ class ServiceRunner:
         self._eval_every = eval_every
         self.report: Optional[ServiceReport] = None
 
-        steps, batch = cfg.local_steps, cfg.batch_size
+        batch = cfg.batch_size
 
-        @jax.jit
-        def client_step(seed, w, state, r, cid, weight):
+        # ``steps`` is static (batch shapes) — per-client heterogeneous
+        # local_steps from an AvailabilityTrace compile once per distinct
+        # value, warmed up before the worker threads race to call it
+        @partial(jax.jit, static_argnames=("steps",))
+        def client_step(seed, w, state, r, cid, weight, *,
+                        steps=int(cfg.local_steps)):
             cids = jnp.reshape(cid, (1,)).astype(jnp.int32)
             wts = jnp.reshape(weight, (1,)).astype(jnp.float32)
             batches = data.gather_batches(r, cids, steps=steps,
@@ -114,8 +128,8 @@ class ServiceRunner:
             return codec.partial_aggregate(msg, weights)
 
         @jax.jit
-        def apply_fn_j(seed, w, state, agg, r):
-            return apply_fn(seed, w, state, agg, r)
+        def apply_fn_j(seed, w, state, agg, r, n_valid):
+            return apply_fn(seed, w, state, agg, r, n_valid)
 
         self._client_step = client_step
         self._partial = partial_fn
@@ -127,10 +141,20 @@ class ServiceRunner:
 
     def run(self, *, seed: Optional[int] = None,
             schedule: Optional[np.ndarray] = None,
-            service: Optional[ServiceConfig] = None
+            service: Optional[ServiceConfig] = None,
+            valid: Optional[np.ndarray] = None,
+            local_steps: Optional[np.ndarray] = None
             ) -> Tuple[Dict[str, np.ndarray], np.ndarray, int]:
         """Serve the experiment over loopback HTTP; returns ``(metrics,
-        schedule, num_dispatches)`` in scan metric layout."""
+        schedule, num_dispatches)`` in scan metric layout.
+
+        ``valid`` is an optional ``(R, K)`` availability mask aligned to
+        the schedule (seat k sits round r out when ``valid[r, k]`` is 0
+        — the coordinator's per-round close threshold caps at the
+        survivor count); ``local_steps`` an optional per-client
+        ``(num_clients,)`` heterogeneous step count.  Fault injection
+        comes from ``service.faults`` (a :class:`repro.fed.FaultPlan`).
+        """
         cfg = self.cfg
         service = service or ServiceConfig()
         if seed is None:
@@ -141,15 +165,37 @@ class ServiceRunner:
         bad = [s for s in service.straggler_slots if not 0 <= s < K]
         if bad:
             raise ValueError(f"straggler_slots {bad} out of range 0..{K-1}")
+        faults = service.faults
+        if faults is not None:
+            faults.validate(cfg.rounds, K)
+        expected = None
+        if valid is not None:
+            valid = np.asarray(valid)
+            if valid.shape != tuple(schedule.shape):
+                raise ValueError(
+                    f"valid mask shape {valid.shape} does not match "
+                    f"schedule shape {tuple(schedule.shape)}")
+            expected = valid.sum(axis=1).astype(np.int64)
+        if local_steps is not None:
+            local_steps = np.asarray(local_steps, np.int32)
+            if local_steps.shape != (cfg.num_clients,):
+                raise ValueError(
+                    f"local_steps must be ({cfg.num_clients},), got "
+                    f"{local_steps.shape}")
 
         # compile the shared client program BEFORE the worker threads
-        # race to call it (single-threaded warm-up, result discarded)
+        # race to call it — once per DISTINCT steps value (results
+        # discarded)
         seed_dev = jnp.int32(seed)
-        warm = self._client_step(
-            seed_dev, self._params, self._state0, jnp.int32(0),
-            jnp.int32(int(schedule[0][0])),
-            jnp.float32(self._weights_all[int(schedule[0][0])]))
-        jax.block_until_ready(warm[1])
+        distinct_steps = ({int(cfg.local_steps)} if local_steps is None
+                          else {int(s) for s in local_steps})
+        for steps_val in sorted(distinct_steps):
+            warm = self._client_step(
+                seed_dev, self._params, self._state0, jnp.int32(0),
+                jnp.int32(int(schedule[0][0])),
+                jnp.float32(self._weights_all[int(schedule[0][0])]),
+                steps=steps_val)
+            jax.block_until_ready(warm[1])
 
         coord = Coordinator(
             codec=self.codec, partial_fn=self._partial,
@@ -157,7 +203,8 @@ class ServiceRunner:
             apply_fn=self._apply, eval_fn=self._eval,
             eval_rounds=eval_round_indices(cfg, self._eval_every),
             params=self._params, state=self._state0, schedule=schedule,
-            seed=seed, service=service, algorithm=cfg.algorithm)
+            seed=seed, service=service, algorithm=cfg.algorithm,
+            expected=expected)
         httpd = make_http_server(coord)
         base_url = "http://%s:%d" % httpd.server_address[:2]
         server_thread = threading.Thread(target=httpd.serve_forever,
@@ -165,14 +212,14 @@ class ServiceRunner:
                                          daemon=True)
         server_thread.start()
 
-        def client_step_host(w, state, r, cid, weight):
+        def client_step_host(w, state, r, cid, weight, steps):
             msg, agg_w, loss = self._client_step(
                 seed_dev, w, state, jnp.int32(r), jnp.int32(cid),
-                jnp.float32(weight))
+                jnp.float32(weight), steps=int(steps))
             return msg, float(agg_w), float(loss)
 
         errors: List[BaseException] = []
-        posted = [0] * K
+        stats_all: List[Optional[Dict[str, int]]] = [None] * K
 
         def seat(slot: int) -> None:
             try:
@@ -180,12 +227,15 @@ class ServiceRunner:
                                        timeout_s=service.timeout_s,
                                        retries=service.retries,
                                        backoff_s=service.backoff_s)
-                posted[slot] = run_worker(
+                stats_all[slot] = run_worker(
                     slot, client, service,
                     params_template=self._params,
                     state_template=self._state0,
                     client_step=client_step_host,
-                    weights_all=self._weights_all)
+                    weights_all=self._weights_all,
+                    local_steps=(cfg.local_steps if local_steps is None
+                                 else local_steps),
+                    valid=valid, faults=faults)
             except BaseException as e:          # surfaced to the caller
                 errors.append(e)
                 with coord._cv:
@@ -195,19 +245,49 @@ class ServiceRunner:
         workers = [threading.Thread(target=seat, args=(k,),
                                     name=f"fl-client-{k}", daemon=True)
                    for k in range(K)]
+        finished = False
+        hung: List[str] = []
         try:
             for t in workers:
                 t.start()
-            coord.wait_done()
+            finished = coord.wait_done(timeout=service.run_timeout_s)
+            if not finished:
+                # force the seats out of their poll loops so join below
+                # collects every thread that CAN exit
+                with coord._cv:
+                    coord.done = True
+                    coord._cv.notify_all()
             for t in workers:
                 t.join(timeout=service.timeout_s)
+            # the satellite fix: join(timeout=) returning says NOTHING
+            # about the thread — a seat still alive is a hung worker and
+            # must never read as silent success
+            hung = [t.name for t in workers if t.is_alive()]
         finally:
             httpd.shutdown()
             httpd.server_close()
             server_thread.join(timeout=5.0)
         if errors:
             raise errors[0]
+        if not finished:
+            raise ServiceError(
+                f"service run timed out after {service.run_timeout_s}s "
+                f"at round {coord.round}/{coord.rounds} (pool depth "
+                f"{len(coord._pool)}) — the fault plan / dropouts left "
+                "a round unable to close; set quorum/min_fresh below "
+                "the loss count")
+        if hung and not service.allow_hung_workers:
+            raise ServiceError(
+                f"{len(hung)} worker thread(s) still alive after "
+                f"join(timeout={service.timeout_s}s): {hung} — a hung "
+                "seat is an error, not a silent success (set "
+                "allow_hung_workers=True to record it in the report "
+                "instead)")
 
+        client_faults: Dict[str, int] = {}
+        for stats in stats_all:
+            for k, v in (stats or {}).items():
+                client_faults[k] = client_faults.get(k, 0) + int(v)
         comm = dataclasses.replace(
             self.codec.wire_bits(self._params),
             downlink_bits=coord.downlink_params_bits)
@@ -222,7 +302,12 @@ class ServiceRunner:
                                     - coord.downlink_params_bits),
             staleness=tuple(tuple(dict(s) for s in row)
                             for row in coord.staleness_log),
-            base_url=base_url)
+            base_url=base_url,
+            participation=tuple(int(x) for x in coord.participation),
+            expected=tuple(int(x) for x in coord.expected),
+            rejected=dict(coord.rejected),
+            client_faults=client_faults,
+            hung_workers=len(hung))
         self.final_params = coord.w
         self.final_state = coord.state
         metrics = {
@@ -230,8 +315,8 @@ class ServiceRunner:
             "acc": np.asarray(coord.acc, np.float32),
             "uplink_bits": np.asarray(coord.uplink_bits, np.float32),
         }
-        # K client_step dispatches per round + the coordinator's own
-        dispatches = coord.dispatches + int(np.sum(posted))
+        # per-seat client_step dispatches + the coordinator's own
+        dispatches = coord.dispatches + client_faults.get("posted", 0)
         return metrics, schedule, dispatches
 
 

@@ -69,12 +69,20 @@ class ServiceConfig:
                                         # round (default K - #stragglers)
     straggler_slots: Tuple[int, ...] = ()   # async: worker slots that
                                         # defer their POST one round
+    quorum: Optional[int] = None        # sync: uplinks that close a round
+                                        # (default: every expected client)
     host: str = "127.0.0.1"
     port: int = 0                       # 0 = ephemeral loopback port
     timeout_s: float = 30.0             # per-request client timeout
     retries: int = 3                    # client retry attempts
     backoff_s: float = 0.05             # first retry delay (doubles)
     poll_s: float = 0.002               # client round-poll interval
+    run_timeout_s: Optional[float] = 600.0  # whole-run deadline; a run
+                                        # that cannot finish RAISES
+                                        # instead of waiting forever
+    faults: Optional[Any] = None        # a repro.fed.FaultPlan to inject
+    allow_hung_workers: bool = False    # record hung seats in the report
+                                        # instead of raising
 
     def validate(self) -> None:
         if self.mode not in ("sync", "async"):
@@ -84,6 +92,15 @@ class ServiceConfig:
             raise ValueError("staleness_beta must be in (0, 1]")
         if self.mode == "sync" and self.straggler_slots:
             raise ValueError("straggler_slots requires mode='async'")
+        if self.quorum is not None:
+            if self.mode == "async":
+                raise ValueError(
+                    "quorum is the sync barrier knob — async rounds "
+                    "close on min_fresh")
+            if self.quorum < 1:
+                raise ValueError(f"quorum must be >= 1, got {self.quorum}")
+        if self.run_timeout_s is not None and self.run_timeout_s <= 0:
+            raise ValueError("run_timeout_s must be positive (or None)")
 
 
 @dataclasses.dataclass
@@ -110,7 +127,8 @@ class Coordinator:
     def __init__(self, *, codec, partial_fn, merge_fn, finalize_fn,
                  apply_fn, eval_fn=None, eval_rounds=(), params, state,
                  schedule: np.ndarray, seed: int, service: ServiceConfig,
-                 algorithm: str = ""):
+                 algorithm: str = "",
+                 expected: Optional[np.ndarray] = None):
         service.validate()
         if service.mode == "async" and isinstance(codec, MaskCodec) \
                 and codec.count_dtype is not None:
@@ -143,11 +161,34 @@ class Coordinator:
             fresh_needed = (service.min_fresh if service.min_fresh
                             is not None else self.clients_per_round
                             - len(service.straggler_slots))
+        elif service.quorum is not None:
+            if service.quorum > self.clients_per_round:
+                raise ValueError(
+                    f"quorum={service.quorum} exceeds K="
+                    f"{self.clients_per_round}")
+            fresh_needed = service.quorum
         if not 0 < fresh_needed <= self.clients_per_round:
             raise ValueError(
                 f"min_fresh={fresh_needed} must be in 1..K="
                 f"{self.clients_per_round}")
         self._fresh_needed = fresh_needed
+        # per-round close thresholds: an availability trace lowers the
+        # number of clients a round can ever hear from, so the barrier /
+        # min_fresh caps at the expected survivor count
+        if expected is None:
+            self.expected = np.full((self.rounds,), self.clients_per_round,
+                                    np.int64)
+        else:
+            self.expected = np.asarray(expected, np.int64)
+            if self.expected.shape != (self.rounds,):
+                raise ValueError(
+                    f"expected must be ({self.rounds},), got "
+                    f"{self.expected.shape}")
+            if (self.expected < 1).any():
+                raise ValueError(
+                    "every round needs at least one expected client — "
+                    "lower dropout or enable avail_resample")
+        self._needed = np.minimum(self.expected, fresh_needed)
         # metrics (scan layout) + wire accounting
         R = self.rounds
         self.loss = np.full((R,), np.nan, np.float32)
@@ -155,11 +196,16 @@ class Coordinator:
         self.uplink_bits = np.zeros((R,), np.float32)
         self.staleness_log: List[List[Dict[str, Any]]] = [[] for _ in
                                                           range(R)]
+        self.participation = np.zeros((R,), np.int64)
         self.n_uplinks = 0
         self.uplink_payload_bits = 0
         self.uplink_framing_bits = 0
         self.downlink_requests = 0
         self.downlink_bits_served = 0
+        # every non-200 uplink answer, by reason — the fault-accounting
+        # tests balance these against the injected plan
+        self.rejected: Dict[str, int] = {"bad_frame": 0, "stale": 0,
+                                         "future": 0, "done": 0}
         self._publish()
 
     # ---- downlink ------------------------------------------------------
@@ -191,8 +237,12 @@ class Coordinator:
         try:
             msg, meta = serde.loads_msg(body)
         except (ValueError, TypeError, KeyError) as e:
+            with self._cv:
+                self.rejected["bad_frame"] += 1
             return 400, {"error": f"bad frame: {e}"}
         if int(meta.get("round", -1)) != r:
+            with self._cv:
+                self.rejected["bad_frame"] += 1
             return 400, {"error": "frame meta round does not match URL"}
         payload = msg.bits
         entry = _PoolEntry(
@@ -202,10 +252,13 @@ class Coordinator:
             wire_bits=self._entry_bits(msg))
         with self._cv:
             if self.done:
+                self.rejected["done"] += 1
                 return 410, {"error": "experiment finished"}
             if r > self.round:
+                self.rejected["future"] += 1
                 return 409, {"error": "future round", "round": self.round}
             if self.service.mode == "sync" and r < self.round:
+                self.rejected["stale"] += 1
                 return 409, {"error": "stale round (sync barrier)",
                              "round": self.round}
             self.n_uplinks += 1
@@ -224,7 +277,7 @@ class Coordinator:
 
     def _round_complete(self) -> bool:
         fresh = sum(1 for e in self._pool if e.msg_round == self.round)
-        return fresh >= self._fresh_needed
+        return fresh >= self._needed[self.round]
 
     # ---- round close ---------------------------------------------------
 
@@ -282,9 +335,13 @@ class Coordinator:
                                 for m, u in zip(masses, us)), *updates)
         else:
             agg = jax.tree_util.tree_map(lambda *us: sum(us), *updates)
+        # the pool's total weight mass rides along for bodies that need
+        # the survivor count (fedpm's Beta smoothing)
         self.w, self.state = self._apply(self._seed_dev, self.w,
-                                         self.state, agg, jnp.int32(r))
+                                         self.state, agg, jnp.int32(r),
+                                         jnp.float32(sum(masses)))
         self.dispatches += 1
+        self.participation[r] = len(entries)
         self.loss[r] = np.nanmean([e.loss for e in entries])
         self.uplink_bits[r] = sum(e.wire_bits for e in entries)
         if self._eval is not None and r in self._eval_rounds:
@@ -319,6 +376,10 @@ class Coordinator:
                 "loss": [float(x) for x in self.loss],
                 "acc": [float(x) for x in self.acc],
                 "uplink_bits_round": [float(x) for x in self.uplink_bits],
+                "participation_round": [int(x)
+                                        for x in self.participation],
+                "expected_round": [int(x) for x in self.expected],
+                "rejected": dict(self.rejected),
                 "staleness": self.staleness_log,
             }
 

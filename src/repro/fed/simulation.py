@@ -121,13 +121,18 @@ def run_federated(
 # ---------------------------------------------------------------------------
 
 def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
-                 *, schedule, eval_every, client_weights):
+                 *, schedule, eval_every, client_weights, valid=None):
     if cfg.int_mask_agg and client_weights is not None:
         # same guard as the scan chunk body: the integer count aggregate
         # folds ONE weight scalar — per-client weights need the f32 path
         raise ValueError(
             "int_mask_agg requires uniform client weights "
             "(client_weights=None)")
+    if cfg.int_mask_agg and valid is not None:
+        raise ValueError(
+            "int_mask_agg cannot mask dropped clients on engine="
+            "'batched' — run availability scenarios on engine='cohort' "
+            "or 'service'")
     w = init_params
     history = _base_history(cfg, w, schedule, "batched")
     if client_weights is None:
@@ -137,6 +142,7 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
 
     loss_buf: List[jax.Array] = []      # device scalars, read once at end
     bits_buf: List[jax.Array] = []      # per-round MEASURED wire bits
+    participation: List[int] = []
     t0 = time.time()
     for rnd in range(cfg.rounds):
         picked = schedule[rnd]
@@ -144,17 +150,31 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
             [client_batch_fn(rnd, int(cid)) for cid in picked])
         weights = jnp.asarray([client_weights[int(c)] for c in picked],
                               jnp.float32)
-        w, state, losses, wire_bits = round_fn(
-            w, state, batches, jnp.asarray(picked, jnp.int32),
-            jnp.int32(rnd), weights)
-        loss_buf.append(jnp.mean(losses[:, -1]))
-        bits_buf.append(wire_bits)
+        if valid is None:
+            nv = len(picked)
+            w, state, losses, wire_bits = round_fn(
+                w, state, batches, jnp.asarray(picked, jnp.int32),
+                jnp.int32(rnd), weights)
+            loss_buf.append(jnp.mean(losses[:, -1]))
+            bits_buf.append(wire_bits)
+        else:
+            # dropped clients carry zero aggregation weight — the
+            # normalizing codecs then average exactly the survivors
+            valid_r = jnp.asarray(valid[rnd], jnp.float32)
+            nv = int(np.asarray(valid[rnd]).sum())
+            w, state, losses, wire_bits = round_fn(
+                w, state, batches, jnp.asarray(picked, jnp.int32),
+                jnp.int32(rnd), weights * valid_r)
+            loss_buf.append(jnp.sum(valid_r * losses[:, -1]) / nv)
+            bits_buf.append(wire_bits * nv / len(picked))
+        participation.append(nv)
         if rnd % eval_every == 0 or rnd == cfg.rounds - 1:
             history["acc"].append(float(eval_fn(w)))
             history["round"].append(rnd)
     history["local_loss"] = [float(x) for x in np.asarray(jnp.stack(loss_buf))]
     history["uplink_bits_round"] = [
         float(b) for b in np.asarray(jnp.stack(bits_buf))]
+    history["participation_round"] = participation
     history["num_dispatches"] = cfg.rounds      # one round program per round
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]

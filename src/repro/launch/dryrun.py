@@ -250,7 +250,8 @@ def run_and_save(arch, shape_name, *, multi_pod, sharded=False,
     return rec
 
 
-def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2) -> dict:
+def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2,
+                faults: bool = False) -> dict:
     """Loopback smoke of the wire-true coordinator (deliverable of the
     service subsystem): run a tiny federation of ``fed_algo`` over real
     HTTP on a probe MLP and print measured-vs-analytic wire accounting.
@@ -259,9 +260,14 @@ def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2) -> dict:
     actually crossed a socket; the "analytic" side is the codec's
     :meth:`CommRecord` claim.  The two must agree exactly (the
     acceptance criterion ``tests/test_service.py`` enforces).
+
+    With ``faults=True`` the run rides a :class:`FaultPlan` (one dropped
+    + one corrupt uplink, quorum = K-1) and prints the degraded-round
+    accounting instead of silently pretending the federation was clean.
     """
     from ..data import make_federated_dataset, make_image_task, make_partition
-    from ..fed import Experiment, ExperimentSpec, FLConfig, algorithm_codec
+    from ..fed import (Experiment, ExperimentSpec, FaultPlan, FLConfig,
+                       ServiceConfig, algorithm_codec)
     from ..models.cnn import mlp_apply, mlp_init, mlp_loss
 
     task = make_image_task(0, n=400, hw=8, n_classes=4, noise=0.5)
@@ -274,8 +280,15 @@ def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2) -> dict:
     exp = Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
                                     data=ds, config=cfg,
                                     eval_apply=mlp_apply))
+    service = None
+    if faults:
+        service = ServiceConfig(
+            mode="sync", quorum=cfg.clients_per_round - 1,
+            run_timeout_s=120.0,
+            faults=FaultPlan(drop_uplinks=((0, 0),),
+                             corrupt_uplinks=((min(1, rounds - 1), 1),)))
     t0 = time.time()
-    res = exp.run(engine="service")
+    res = exp.run(engine="service", service=service)
     wall = time.time() - t0
     rep = exp.service_report
     codec = algorithm_codec(cfg, params)
@@ -294,11 +307,22 @@ def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2) -> dict:
           f"{rep.downlink_requests} requests")
     print(f"            analytic {rep.comm.downlink_bits:>10d} b  "
           f"{'OK' if rep.downlink_params_bits == rep.comm.downlink_bits else 'MISMATCH'}")
-    return {"algorithm": fed_algo, "final_acc": res.final_acc,
-            "measured_uplink_bits": rep.uplink_payload_bits,
-            "analytic_uplink_bits": rep.n_uplinks * analytic_up,
-            "measured_downlink_bits": rep.downlink_params_bits,
-            "wall_s": wall}
+    out = {"algorithm": fed_algo, "final_acc": res.final_acc,
+           "measured_uplink_bits": rep.uplink_payload_bits,
+           "analytic_uplink_bits": rep.n_uplinks * analytic_up,
+           "measured_downlink_bits": rep.downlink_params_bits,
+           "wall_s": wall}
+    if faults:
+        balanced = rep.n_uplinks == sum(rep.participation)
+        print(f"  degraded  participation {list(rep.participation)} of "
+              f"expected {list(rep.expected)}; rejected {dict(rep.rejected)}; "
+              f"client faults {dict(rep.client_faults)}  "
+              f"{'OK' if balanced else 'MISMATCH'}")
+        out.update({"participation": list(rep.participation),
+                    "rejected": dict(rep.rejected),
+                    "client_faults": dict(rep.client_faults),
+                    "accounting_balanced": balanced})
+    return out
 
 
 def main():
@@ -316,6 +340,10 @@ def main():
                     help="loopback smoke of the wire-true coordinator "
                          "(engine='service') on a probe MLP: measured vs "
                          "analytic uplink/downlink bits for --algo")
+    ap.add_argument("--serve-faults", action="store_true",
+                    help="with --serve: inject a FaultPlan (one dropped "
+                         "+ one corrupt uplink, quorum=K-1) and print "
+                         "the degraded-round accounting")
     ap.add_argument("--list-algorithms", action="store_true",
                     help="print the simulation-engine algorithm registry "
                          "(name + per-client uplink bits/param on the "
@@ -332,7 +360,7 @@ def main():
     fed_algo = args.algo or args.fed_mode or "fedmrn"
 
     if args.serve:
-        serve_smoke(fed_algo)
+        serve_smoke(fed_algo, faults=args.serve_faults)
         return
 
     if args.list_algorithms:

@@ -26,7 +26,7 @@ KEY = jax.random.key(0)
 GOLDEN_HISTORY_KEYS = {
     "algorithm", "engine", "acc", "round", "local_loss",
     "uplink_bits_per_client", "uplink_bits_round", "params", "schedule",
-    "num_dispatches", "wall_s", "final_acc",
+    "num_dispatches", "wall_s", "final_acc", "participation_round",
 }
 
 

@@ -1,0 +1,206 @@
+"""Service-tier fault injection (ISSUE 9): dropped / delayed / corrupt /
+crashed / hung clients against the loopback coordinator.  The acceptance
+bar: every fault-injected run terminates with a completed model or a
+raised error — NEVER silent success — and the ServiceReport's accounting
+balances exactly (aggregated uplinks == Σ participation; posted + dropped
++ rejected reconcile against dispatch counts)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.data import (make_federated_dataset, make_image_task,
+                        make_partition)
+from repro.fed import (AvailabilityTrace, Experiment, ExperimentSpec,
+                       FaultPlan, FLConfig, ServiceConfig)
+from repro.fed.service.client import ServiceError
+from repro.models.cnn import mlp_apply, mlp_init, mlp_loss
+
+KEY = jax.random.key(0)
+R, C, K = 3, 8, 4
+
+
+def _experiment(algorithm="fedmrn", rounds=R, trace=None, **cfg_kw):
+    task = make_image_task(0, n=400, hw=8, n_classes=4, noise=0.5)
+    parts = make_partition("iid", 0, task.y, C)
+    params = mlp_init(KEY, d_in=64, d_hidden=32, n_classes=4)
+    cfg = FLConfig(algorithm=algorithm, num_clients=C, clients_per_round=K,
+                   rounds=rounds, local_steps=2, batch_size=16, lr=0.1,
+                   noise_alpha=3e-2, **cfg_kw)
+    ds = make_federated_dataset(task.x, task.y, parts, batch_seed=7,
+                                x_test=task.x[:128], y_test=task.y[:128])
+    return Experiment(ExperimentSpec(loss_fn=mlp_loss, params=params,
+                                     data=ds, config=cfg,
+                                     eval_apply=mlp_apply,
+                                     availability=trace))
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan + ServiceConfig validation
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_validates_bounds():
+    FaultPlan(drop_uplinks=((0, 0),)).validate(rounds=3, num_slots=4)
+    with pytest.raises(ValueError):
+        FaultPlan(drop_uplinks=((3, 0),)).validate(rounds=3, num_slots=4)
+    with pytest.raises(ValueError):
+        FaultPlan(crash_slots=((0, 4),)).validate(rounds=3, num_slots=4)
+    with pytest.raises(ValueError):
+        FaultPlan(delay_uplinks=((0, 0, 0),)).validate(rounds=3,
+                                                       num_slots=4)
+
+
+def test_service_config_rejects_bad_degradation_knobs():
+    with pytest.raises(ValueError, match="quorum"):
+        ServiceConfig(mode="async", quorum=2).validate()
+    with pytest.raises(ValueError, match="quorum"):
+        ServiceConfig(mode="sync", quorum=0).validate()
+    with pytest.raises(ValueError, match="run_timeout_s"):
+        ServiceConfig(mode="sync", run_timeout_s=0.0).validate()
+
+
+def test_quorum_above_k_refused_at_run():
+    e = _experiment()
+    with pytest.raises(ValueError, match="quorum"):
+        e.run(engine="service",
+              service=ServiceConfig(mode="sync", quorum=K + 1))
+
+
+# ---------------------------------------------------------------------------
+# the hung-worker satellite: join(timeout=) is not completion
+# ---------------------------------------------------------------------------
+
+def test_hung_worker_is_an_error_not_silent_success():
+    """Regression: the runner used to join(timeout=) each worker and
+    carry on, reporting success while a seat was still alive (leaked
+    thread, silently missing uplinks).  A hung seat must raise."""
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", quorum=K - 1, run_timeout_s=60.0,
+                       timeout_s=2.0,
+                       faults=FaultPlan(hang_slots=((0, 2),),
+                                        hang_sleep_s=20.0))
+    with pytest.raises(ServiceError, match="still alive"):
+        e.run(engine="service", service=sc)
+
+
+def test_hung_worker_recorded_when_allowed():
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", quorum=K - 1, run_timeout_s=60.0,
+                       timeout_s=2.0, allow_hung_workers=True,
+                       faults=FaultPlan(hang_slots=((0, 2),),
+                                        hang_sleep_s=20.0))
+    res = e.run(engine="service", service=sc)
+    rep = e.service_report
+    # the seat is still asleep at join time, so its per-seat stats dict
+    # was never returned — the thread-level hung_workers counter is the
+    # authoritative record of the leak
+    assert rep.hung_workers == 1
+    assert np.isfinite(res.final_acc)
+    # the hung seat's round still closed on the quorum of survivors
+    assert all(p >= K - 1 for p in rep.participation)
+
+
+# ---------------------------------------------------------------------------
+# drops, corruption, crashes: terminate or raise, account exactly
+# ---------------------------------------------------------------------------
+
+def test_dropped_uplink_with_quorum_balances_accounting():
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", quorum=K - 1, run_timeout_s=60.0,
+                       faults=FaultPlan(drop_uplinks=((0, 0), (2, 3))))
+    res = e.run(engine="service", service=sc)
+    rep = e.service_report
+    assert rep.client_faults["dropped"] == 2
+    assert rep.n_uplinks == sum(rep.participation)
+    assert tuple(rep.expected) == (K,) * R
+    # posted messages either aggregated or were rejected with a status
+    assert rep.client_faults["posted"] >= sum(rep.participation)
+    assert (rep.client_faults["posted"] - sum(rep.participation)
+            <= sum(rep.rejected.values()))
+    assert np.isfinite(res.final_acc)
+
+
+def test_dropped_uplink_without_quorum_times_out_loudly():
+    """A sync barrier missing one uplink can never close its round: the
+    bounded run must raise, not hang forever or return a partial model
+    as if it were complete."""
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", run_timeout_s=4.0, timeout_s=2.0,
+                       faults=FaultPlan(drop_uplinks=((1, 0),)))
+    with pytest.raises(ServiceError, match="timed out"):
+        e.run(engine="service", service=sc)
+
+
+def test_corrupt_frame_gets_400_and_never_crashes_the_coordinator():
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", quorum=K - 1, run_timeout_s=60.0,
+                       faults=FaultPlan(corrupt_uplinks=((0, 1), (2, 2))))
+    res = e.run(engine="service", service=sc)
+    rep = e.service_report
+    assert rep.client_faults["corrupted"] == 2
+    assert rep.rejected["bad_frame"] == 2
+    assert rep.n_uplinks == sum(rep.participation)
+    assert np.isfinite(res.final_acc)
+
+
+def test_mid_round_crash_with_quorum_still_completes():
+    e = _experiment()
+    sc = ServiceConfig(mode="sync", quorum=K - 1, run_timeout_s=60.0,
+                       faults=FaultPlan(crash_slots=((1, 3),)))
+    res = e.run(engine="service", service=sc)
+    rep = e.service_report
+    assert rep.client_faults["crashed"] == 1
+    # the crashed seat contributed nothing from round 1 on
+    assert all(p >= K - 1 for p in rep.participation)
+    assert rep.n_uplinks == sum(rep.participation)
+    assert np.isfinite(res.final_acc)
+
+
+def test_delayed_uplink_in_async_mode_lands_stale():
+    e = _experiment()
+    sc = ServiceConfig(mode="async", staleness_beta=0.5, min_fresh=K - 1,
+                       run_timeout_s=60.0,
+                       faults=FaultPlan(delay_uplinks=((0, 2, 1),)))
+    res = e.run(engine="service", service=sc)
+    rep = e.service_report
+    assert rep.client_faults["delayed"] == 1
+    entries = [s for row in rep.staleness for s in row]
+    assert any(s["lag"] > 0 for s in entries)
+    assert all(s["scale"] == 0.5 ** s["lag"] for s in entries)
+    assert np.isfinite(res.final_acc)
+
+
+# ---------------------------------------------------------------------------
+# availability over the wire: service == scan under the same trace
+# ---------------------------------------------------------------------------
+
+def test_service_availability_parity_with_scan():
+    kw = dict(availability="bernoulli", dropout=0.4)
+    rs = _experiment(**kw).run(engine="scan")
+    ev = _experiment(**kw)
+    rv = ev.run(engine="service")
+    np.testing.assert_allclose(np.asarray(rv.acc), np.asarray(rs.acc),
+                               atol=1e-6)
+    rep = ev.service_report
+    assert rv.participation_round == rs.participation_round
+    assert tuple(rep.participation) == rs.participation_round
+    assert tuple(rep.expected) == rs.participation_round
+    assert rep.client_faults["skipped"] == R * K - sum(rep.participation)
+    assert rep.n_uplinks == sum(rep.participation)
+
+
+def test_service_heterogeneous_local_steps():
+    ls = AvailabilityTrace.heterogeneous_steps(0, C, choices=(1, 2, 4))
+    tr = AvailabilityTrace.always(R, C, local_steps=ls)
+    e = _experiment(trace=tr)
+    res = e.run(engine="service")
+    rep = e.service_report
+    assert rep.n_uplinks == R * K == sum(rep.participation)
+    assert np.isfinite(res.final_acc)
+
+
+def test_history_schema_includes_participation_for_service():
+    e = _experiment(availability="bernoulli", dropout=0.4)
+    res = e.run(engine="service")
+    hist = res.to_history()
+    assert hist["participation_round"] == list(res.participation_round)
+    assert min(res.participation_round) < K
