@@ -2,8 +2,9 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test test-fast test-cohort test-sharded test-service test-faults \
-    bench-engine bench-engine-smoke bench-kernels bench-kernels-smoke \
-    bench-scale bench-scale-smoke bench-service bench-service-smoke bench \
+    test-privacy bench-engine bench-engine-smoke bench-kernels \
+    bench-kernels-smoke bench-scale bench-scale-smoke bench-service \
+    bench-service-smoke bench-privacy bench-privacy-smoke bench \
     quickstart examples-smoke
 
 # tier-1 verify: the whole suite, fail-fast (matches ROADMAP.md)
@@ -34,6 +35,12 @@ test-service:
 # with exact accounting (CI job: test-faults)
 test-faults:
 	$(PY) -m pytest -x -q tests/test_availability.py tests/test_faults.py
+
+# distributed-DP tier: discrete mechanisms, RDP accounting, noise-once
+# split invariance, five-engine DP parity, coordinator (ε, δ) metrics
+# (CI job: test-privacy, run with REPRO_REQUIRE_HYPOTHESIS=1)
+test-privacy:
+	$(PY) -m pytest -x -q tests/test_privacy.py tests/test_compat.py
 
 # multi-device tier: 8 fake CPU devices so the pod client mesh axis and
 # the shard_map seed mesh genuinely partition (CI job: test-multidevice)
@@ -78,6 +85,15 @@ bench-service:
 bench-service-smoke:
 	$(PY) -m benchmarks.run --only service --quick
 
+# measured ε/accuracy/bits trade-off of the DP count release across
+# noise multipliers; writes BENCH_privacy.json at the repo root
+bench-privacy:
+	$(PY) -m benchmarks.run --only privacy
+
+# fewer rounds — keeps the BENCH_privacy.json emitter green in CI
+bench-privacy-smoke:
+	$(PY) -m benchmarks.run --only privacy --quick
+
 bench:
 	$(PY) -m benchmarks.run --quick
 
@@ -88,3 +104,4 @@ quickstart:
 examples-smoke:
 	$(PY) examples/quickstart.py --rounds 4
 	$(PY) examples/fed_image_cnn.py --rounds 3 --seeds 2
+	$(PY) examples/alpha_curve.py --rounds 3 --seeds 1 --alphas 0.5,5.0

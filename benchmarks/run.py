@@ -53,13 +53,13 @@ def main() -> None:
                     help="fewer rounds / smaller populations (CI mode)")
     ap.add_argument("--only", default=None,
                     help="table1|fig4|fig5|fig6|comm|engine|kernels|"
-                         "scale|service|roofline")
+                         "scale|service|privacy|roofline")
     args = ap.parse_args()
 
     _warn_stale_bench_files()
 
-    from . import (engine_bench, fl_suite, kernel_bench, roofline_report,
-                   scale_bench, service_bench)
+    from . import (engine_bench, fl_suite, kernel_bench, privacy_bench,
+                   roofline_report, scale_bench, service_bench)
 
     rounds = 6 if args.quick else 15
     sections = {
@@ -76,6 +76,7 @@ def main() -> None:
         "kernels": lambda: kernel_bench.kernel_rows(smoke=args.quick),
         "scale": lambda: scale_bench.scale_rows(quick=args.quick),
         "service": lambda: service_bench.service_rows(quick=args.quick),
+        "privacy": lambda: privacy_bench.privacy_rows(quick=args.quick),
         "roofline": roofline_report.roofline_rows,
     }
     if args.only:
@@ -104,6 +105,10 @@ def main() -> None:
                 print(f"# wrote {path}", file=sys.stderr)
             elif name == "service":
                 path = service_bench.write_bench_json(rows,
+                                                      quick=args.quick)
+                print(f"# wrote {path}", file=sys.stderr)
+            elif name == "privacy":
+                path = privacy_bench.write_bench_json(rows,
                                                       quick=args.quick)
                 print(f"# wrote {path}", file=sys.stderr)
         except Exception as e:  # noqa: BLE001

@@ -12,12 +12,40 @@ added two things we rely on:
   shim registers identity jvp/transpose/batching rules directly on the
   primitive.  The barrier itself still applies in the forward computation
   — only the missing transformation rules are filled in.
+
+Both shims are gated on the RUNNING jax version: on jax >= 0.5 the rules
+ship with jax and :func:`install_barrier_rules` is a hard no-op, so a
+toolchain bump can never double-register (or shadow) the real rules.
+``tests/test_compat.py`` exercises both branches.
 """
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 
 AxisType = getattr(jax.sharding, "AxisType", None)
+
+
+def version_tuple(version: str) -> Tuple[int, ...]:
+    """``"0.4.37"`` → ``(0, 4, 37)``; dev/rc suffixes are ignored
+    (``"0.5.0.dev20250101"`` → ``(0, 5, 0)``)."""
+    parts = []
+    for p in version.split(".")[:3]:
+        digits = ""
+        for ch in p:
+            if not ch.isdigit():
+                break
+            digits += ch
+        if not digits:
+            break
+        parts.append(int(digits))
+    return tuple(parts)
+
+
+#: True on the 0.4.x toolchain that needs the barrier-rule shims; jax
+#: >= 0.5 ships the rules itself and must NOT be patched.
+NEEDS_BARRIER_SHIMS = version_tuple(jax.__version__) < (0, 5)
 
 
 def mesh_axis_kwargs(n_axes: int) -> dict:
@@ -27,21 +55,33 @@ def mesh_axis_kwargs(n_axes: int) -> dict:
     return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
-def _install_barrier_rules() -> None:
+def install_barrier_rules(*, needed: bool = NEEDS_BARRIER_SHIMS) -> bool:
+    """Fill in ``optimization_barrier``'s missing AD/batching rules.
+
+    Returns True iff anything was registered this call.  No-op when
+    ``needed`` is False (jax >= 0.5: the rules exist upstream and
+    re-registering would shadow them) and idempotent when True (each
+    rule is only added if the primitive has none — a second call
+    returns False).
+    """
+    if not needed:
+        return False
     from jax.interpreters import ad, batching
     try:
         from jax._src.lax.lax import optimization_barrier_p as prim
     except ImportError:      # layout changed → newer jax → rules exist
-        return
+        return False
 
     def _tuple(outs):
         return tuple(outs) if isinstance(outs, (list, tuple)) else (outs,)
 
+    installed = False
     if prim not in batching.primitive_batchers:
         def _batch(args, dims):
             return _tuple(prim.bind(*args)), dims
 
         batching.primitive_batchers[prim] = _batch
+        installed = True
 
     if prim not in ad.primitive_jvps:
         def _jvp(primals, tangents):
@@ -50,14 +90,17 @@ def _install_barrier_rules() -> None:
             return _tuple(prim.bind(*primals)), tans
 
         ad.primitive_jvps[prim] = _jvp
+        installed = True
 
     if prim not in ad.primitive_transposes:
         def _transpose(cts, *args):
             return _tuple(cts)
 
         ad.primitive_transposes[prim] = _transpose
+        installed = True
+    return installed
 
 
-_install_barrier_rules()
+install_barrier_rules()
 
 optimization_barrier = jax.lax.optimization_barrier

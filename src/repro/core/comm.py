@@ -21,6 +21,14 @@ class CommRecord:
     uplink_bits: int          # exact, incl. headers/seeds/indices
     uplink_bits_paper: int    # paper-style (ignores index/header overhead)
     downlink_bits: int
+    # distributed-DP accounting (fed/privacy): ε after the planned/run
+    # rounds at dp_delta; inf/0.0 mean "no privacy mechanism was applied"
+    dp_epsilon: float = math.inf
+    dp_delta: float = 0.0
+    # service-tier MEASURED wire overheads (0 for simulation engines):
+    # serde frame bytes beyond payload, and downlink response framing
+    framing_bits: int = 0
+    downlink_overhead_bits: int = 0
 
     @property
     def uplink_bpp(self) -> float:
@@ -43,6 +51,11 @@ class CommRecord:
             uplink_MB=round(self.uplink_bits / 8e6, 4),
             downlink_bits=self.downlink_bits,
             compression_x=round(self.compression_x, 2),
+            framing_bits=self.framing_bits,
+            downlink_overhead_bits=self.downlink_overhead_bits,
+            dp_epsilon=(round(self.dp_epsilon, 4)
+                        if math.isfinite(self.dp_epsilon) else math.inf),
+            dp_delta=self.dp_delta,
         )
 
 

@@ -20,8 +20,9 @@ from .engine import (  # noqa: F401
 )
 from .api import (  # noqa: F401
     ENGINES, HISTORY_KEYS, Experiment, ExperimentSpec, RunResult,
-    SweepPoint, SweepResult,
+    SweepPoint, SweepResult, dp_epsilon_schedule,
 )
+from .privacy import PrivacyConfig  # noqa: F401
 from .availability import (  # noqa: F401
     AvailabilityTrace, FaultPlan, make_availability,
 )

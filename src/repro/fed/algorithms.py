@@ -75,6 +75,7 @@ from ..core.masking import tree_bernoulli_stacked
 from .codecs import (DenseCodec, MaskCodec, QuantCodec, SignCodec,
                      SparseCodec, UplinkCodec, min_count_dtype,
                      template_of)
+from .privacy.dp import PrivacyConfig, check_privacy_support
 
 Pytree = Any
 RoundBody = Callable[..., Tuple[Pytree, Pytree, jax.Array]]
@@ -128,6 +129,13 @@ class FLConfig:
     # Ji et al. 2020 dynamic sampling: re-draw dropped scheduled clients
     # from the round's still-available spares before masking
     avail_resample: bool = False
+    # distributed DP on the mask-count wire (fed/privacy/): clip each
+    # client's count contribution, add one discrete noise draw to the
+    # merged round count at finalize, account (ε, δ) per round at the
+    # recorded participation.  Count-aggregatable mask families only
+    # (fedmrn/fedmrns need shared_noise); requires uniform client
+    # weights (engines enforce, same rule as int_mask_agg).
+    privacy: Optional[PrivacyConfig] = None
     # kernel backend for masking/packing: "ref" | "pallas" | None (auto)
     backend: Optional[str] = None
 
@@ -163,6 +171,7 @@ class FLConfig:
                 f"dropout must be in [0, 1), got {self.dropout}")
         if not 0.0 < self.churn <= 1.0:
             raise ValueError(f"churn must be in (0, 1], got {self.churn}")
+        check_privacy_support(self)
 
 
 # ---------------------------------------------------------------------------
@@ -358,7 +367,7 @@ def _fedmrn_codec(cfg: FLConfig, params: Pytree) -> MaskCodec:
         noise=mrn.noise, shared_noise=cfg.shared_noise,
         count_dtype=(min_count_dtype(cfg.clients_per_round)
                      if cfg.int_mask_agg else None),
-        backend=cfg.backend)
+        backend=cfg.backend, privacy=cfg.privacy)
 
 
 def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
@@ -405,7 +414,7 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
             u_stack, seed_keys, mask_keys, losses = jax.vmap(per_client)(
                 batches, picked, r0)
             msg, agg = codec.uplink_stacked(u_stack, seed_keys, mask_keys,
-                                            weights)
+                                            weights, round_idx=round_idx)
             new_w = jax.tree_util.tree_map(mix_add, w, agg)
             return new_w, state, losses, codec.round_bits(msg)
 
@@ -414,7 +423,7 @@ def _fedmrn_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
         # ---- uplink: (packed masks, seeds) encoded in one kernel launch
         msg = codec.encode_stacked({"mask": masks, "seed": seed_keys})
         # ---- server: the codec is the decode boundary — Eq. (5) --------
-        new_w = codec.aggregate_apply(msg, weights, w)
+        new_w = codec.aggregate_apply(msg, weights, w, round_idx=round_idx)
 
         new_state = state
         if ef:
@@ -613,7 +622,27 @@ def _fedpm_codec(cfg: FLConfig, params: Pytree) -> MaskCodec:
         template_of(params), name="fedpm", mode="binary", normalize=False,
         count_dtype=(min_count_dtype(cfg.clients_per_round)
                      if cfg.int_mask_agg else None),
-        backend=cfg.backend)
+        backend=cfg.backend, privacy=cfg.privacy)
+
+
+def fedpm_posterior(m_sum: Pytree, nv, *, clamp: bool):
+    """Beta(1,1)-smoothed mask posterior + logit scores from a vote sum.
+
+    ``clamp`` bounds the smoothed probability to the open interval the
+    NOISELESS release spans, [1/(nv+2), (nv+1)/(nv+2)] — the DP count
+    noise can push a raw sum below −1 or past nv+1, whose logit is NaN
+    and would freeze training.  With ``clamp=False`` this is exactly the
+    pre-privacy expression, bitwise.
+    """
+    probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (nv + 2.0), m_sum)
+    if clamp:
+        lo = 1.0 / (nv + 2.0)
+        hi = (nv + 1.0) / (nv + 2.0)
+        probs = jax.tree_util.tree_map(
+            lambda p_: jnp.clip(p_, lo, hi), probs)
+    scores = jax.tree_util.tree_map(
+        lambda p_: jnp.log(p_ / (1 - p_)), probs)          # sigmoid^-1
+    return probs, scores
 
 
 def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
@@ -648,17 +677,18 @@ def _fedpm_body(loss_fn, cfg: FLConfig, params: Pytree) -> RoundBody:
         # (availability trace) and casts no vote.
         votes = (weights > 0).astype(jnp.float32)
         msg, m_sum = codec.uplink_stacked(probs_k, None, mask_keys,
-                                          votes, probs=True)
+                                          votes, probs=True,
+                                          round_idx=round_idx)
         nv = jnp.sum(votes)
         # Beta(1,1)-posterior (Laplace-smoothed) mask-frequency estimate,
         # accumulated in f32 regardless of param dtype.  The raw nv-client
         # mean hits exactly 0/1 whenever all clients agree, and logit of
         # the clipped value (±9.2) saturates next round's sigmoid scores —
-        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(nv+1).
-        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (nv + 2.0),
-                                       m_sum)
-        new_scores = jax.tree_util.tree_map(
-            lambda p_: jnp.log(p_ / (1 - p_)), probs)      # sigmoid^-1
+        # training freezes.  Smoothing bounds scores to |logit| ≤ ln(nv+1);
+        # under privacy the noisy sum is additionally clamped back into
+        # the noiseless release's span before the logit (NaN guard).
+        probs, new_scores = fedpm_posterior(m_sum, nv,
+                                            clamp=cfg.privacy is not None)
         new_w = jax.tree_util.tree_map(
             lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
         return new_w, {"scores": new_scores}, losses, codec.round_bits(msg)
@@ -699,10 +729,8 @@ def _fedpm_cohort_body(loss_fn, cfg: FLConfig, params: Pytree) -> CohortBody:
         # merged partial's weight mass (ones × valid) as ``n_valid``
         K = (jnp.float32(cfg.clients_per_round) if n_valid is None
              else n_valid)
-        probs = jax.tree_util.tree_map(lambda s: (s + 1.0) / (K + 2.0),
-                                       m_sum)
-        new_scores = jax.tree_util.tree_map(
-            lambda p_: jnp.log(p_ / (1 - p_)), probs)
+        probs, new_scores = fedpm_posterior(m_sum, K,
+                                            clamp=cfg.privacy is not None)
         w_frozen = gen_noise(jax.random.key(seed), params, noise_cfg)
         new_w = jax.tree_util.tree_map(
             lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)

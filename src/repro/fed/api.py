@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from functools import partial
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
@@ -82,7 +83,7 @@ HISTORY_KEYS = frozenset({
     "algorithm", "engine", "acc", "round", "local_loss",
     "uplink_bits_per_client", "uplink_bits_round", "params",
     "participation_round", "schedule", "num_dispatches", "wall_s",
-    "final_acc",
+    "final_acc", "dp_epsilon", "dp_delta",
 })
 
 
@@ -116,6 +117,10 @@ class RunResult:
     participation_round: Tuple[int, ...] = ()   # surviving clients per
     #   round; K everywhere unless an availability trace / fault plan
     #   degraded a round
+    dp_epsilon: Tuple[float, ...] = ()     # cumulative (ε, δ)-DP spend
+    #   after each round, accounted at the TRUE recorded participation;
+    #   all-inf when cfg.privacy is None
+    dp_delta: float = 0.0                  # the δ the ε column is at
 
     @property
     def final_acc(self) -> float:
@@ -142,6 +147,8 @@ class RunResult:
             "num_dispatches": self.num_dispatches,
             "wall_s": self.wall_s,
             "final_acc": self.final_acc,
+            "dp_epsilon": [float(e) for e in self.dp_epsilon],
+            "dp_delta": float(self.dp_delta),
         }
 
     @classmethod
@@ -163,7 +170,27 @@ class RunResult:
             participation_round=tuple(
                 int(p) for p in hist.get(
                     "participation_round",
-                    [cfg.clients_per_round] * cfg.rounds)))
+                    [cfg.clients_per_round] * cfg.rounds)),
+            dp_epsilon=tuple(float(e) for e in hist.get("dp_epsilon", ())),
+            dp_delta=float(hist.get("dp_delta", 0.0)))
+
+
+def dp_epsilon_schedule(cfg: FLConfig,
+                        participation: Sequence[int]) -> Tuple[
+                            Tuple[float, ...], float]:
+    """Cumulative (ε, δ) spend per round at the TRUE participation.
+
+    Accounts every round at the participation actually recorded —
+    availability dropouts and quorum-degraded service rounds spend LESS
+    budget (smaller sampling fraction q = survivors / num_clients).
+    Returns ``((inf,)*R, 0.0)`` when ``cfg.privacy`` is None.
+    """
+    if cfg.privacy is None:
+        return (math.inf,) * len(tuple(participation)), 0.0
+    from .privacy import dp_mask_mode, round_epsilons
+    eps = round_epsilons(cfg.privacy, participation, cfg.num_clients,
+                         dp_mask_mode(cfg.algorithm))
+    return tuple(float(e) for e in eps), cfg.privacy.delta
 
 
 @dataclasses.dataclass(frozen=True)
@@ -342,8 +369,16 @@ class Experiment:
     def comm_record(self) -> CommRecord:
         """The codec's cost report: measured uplink bits (summed encoded
         ``WireMsg`` buffer sizes), the paper-style figure, and the f32
-        downlink."""
-        return self.codec().wire_bits(self.spec.params)
+        downlink.  With ``config.privacy`` set, carries the PLANNED
+        (ε, δ) after ``cfg.rounds`` full-participation rounds (a run's
+        actual spend — at true participation — lives on the RunResult).
+        """
+        rec = self.codec().wire_bits(self.spec.params)
+        if self.cfg.privacy is None:
+            return rec
+        eps, delta = dp_epsilon_schedule(
+            self.cfg, [self.cfg.clients_per_round] * self.cfg.rounds)
+        return dataclasses.replace(rec, dp_epsilon=eps[-1], dp_delta=delta)
 
     # ---- eval wiring --------------------------------------------------
 
@@ -634,6 +669,7 @@ class Experiment:
         rounds = eval_round_indices(cfg, self.spec.eval_every)
         if participation is None:
             participation = [cfg.clients_per_round] * cfg.rounds
+        dp_eps, dp_delta = dp_epsilon_schedule(cfg, participation)
         return RunResult(
             algorithm=cfg.algorithm, engine=engine, config=cfg,
             seed=cfg.seed, eval_rounds=tuple(rounds),
@@ -643,7 +679,8 @@ class Experiment:
             uplink_bits_per_client=uplink_bits(cfg, self.spec.params),
             num_params=tree_num_params(self.spec.params),
             schedule=schedule, num_dispatches=dispatches, wall_s=wall_s,
-            participation_round=tuple(int(p) for p in participation))
+            participation_round=tuple(int(p) for p in participation),
+            dp_epsilon=dp_eps, dp_delta=dp_delta)
 
     def _run_host_loop(self, cfg: FLConfig, engine: str) -> RunResult:
         from .simulation import _run_batched          # no import cycle:
@@ -662,7 +699,11 @@ class Experiment:
                       eval_fn, cfg, schedule=schedule,
                       eval_every=self.spec.eval_every, client_weights=cw,
                       valid=valid)
-        return RunResult.from_history(cfg, engine, hist)
+        result = RunResult.from_history(cfg, engine, hist)
+        dp_eps, dp_delta = dp_epsilon_schedule(
+            cfg, result.participation_round)
+        return dataclasses.replace(result, dp_epsilon=dp_eps,
+                                   dp_delta=dp_delta)
 
     # ---- sweep --------------------------------------------------------
 
@@ -836,7 +877,17 @@ class Experiment:
             participation_round=tuple(
                 int(p) for p in (
                     [cfg.clients_per_round] * cfg.rounds
-                    if participations is None else participations[i]))
+                    if participations is None else participations[i])),
+            # NOTE: at fixed dp_seed all seeds of a vmapped sweep share
+            # one noise realization per round (the DP stream is keyed on
+            # (dp_seed, round) only) — the accountant is per-run either
+            # way, so the ε schedule below is exact per seed
+            dp_epsilon=dp_epsilon_schedule(
+                cfg, ([cfg.clients_per_round] * cfg.rounds
+                      if participations is None
+                      else participations[i]))[0],
+            dp_delta=(cfg.privacy.delta
+                      if cfg.privacy is not None else 0.0),
         ) for i, s in enumerate(seeds)]
 
     def _sweep_point_host(self, cfg: FLConfig, seeds: Tuple[int, ...],

@@ -239,6 +239,16 @@ def check_engine_support(cfg: FLConfig,
             "int_mask_agg cannot mask dropped clients on engine="
             f"{engine!r} (the count aggregate folds one weight scalar) — "
             "run availability scenarios on engine='cohort' or 'service'")
+    if cfg.privacy is not None and engine not in ("cohort", "looped",
+                                                  "service"):
+        # the DP count release must sum EXACTLY the surviving clients —
+        # scan/batched stack all K rows and mask by weight, which the
+        # unweighted count wire cannot honour; looped genuinely excludes
+        # dropped clients and cohort/service mask via the valid= chain
+        raise ValueError(
+            "privacy= cannot mask dropped clients on engine="
+            f"{engine!r} — run availability scenarios on "
+            "engine='cohort', 'looped' or 'service'")
     if cfg.error_feedback:
         raise ValueError(
             "error_feedback under partial participation would update "

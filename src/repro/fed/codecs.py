@@ -66,6 +66,8 @@ from ..core.packing import (tree_flat_layout, tree_num_params, tree_pack,
                             tree_pack_stacked, tree_split_flat, tree_unpack,
                             tree_unpack_counts, tree_unpack_counts_apply,
                             tree_unpack_stacked)
+from .privacy.dp import PrivacyConfig
+from .privacy.mechanisms import dp_noise_tree
 
 Pytree = Any
 
@@ -173,8 +175,14 @@ class UplinkCodec:
     def decode(self, msg: WireMsg) -> Pytree:
         raise NotImplementedError
 
-    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
-        """Stacked client messages + round weights → the server update."""
+    def aggregate(self, stacked: WireMsg, weights: jax.Array, *,
+                  round_idx=None) -> Pytree:
+        """Stacked client messages + round weights → the server update.
+
+        ``round_idx`` only matters to privacy-enabled mask codecs (the
+        round's DP noise draw is keyed on it); every other format
+        ignores it, so engines can pass it unconditionally.
+        """
         raise NotImplementedError
 
     def wire_bits(self, params: Pytree) -> CommRecord:
@@ -204,8 +212,14 @@ class UplinkCodec:
         raise NotImplementedError
 
     def partial_aggregate(self, stacked: WireMsg, weights: jax.Array,
-                          *, valid: Optional[jax.Array] = None) -> Dict:
-        """One cohort's contribution: ``{"sum", "weight", "n"}``."""
+                          *, valid: Optional[jax.Array] = None,
+                          round_idx=None) -> Dict:
+        """One cohort's contribution: ``{"sum", "weight", "n"}``.
+
+        ``round_idx`` is carried into the partial only by
+        privacy-enabled mask codecs (first-wins on merge, like the
+        shared-noise seed); the base protocol accepts and ignores it.
+        """
         if valid is None:
             w = weights
             n = jnp.int32(jnp.shape(weights)[0])
@@ -217,7 +231,9 @@ class UplinkCodec:
     def merge_partials(self, acc: Dict, part: Dict) -> Dict:
         out = {}
         for k in acc:
-            if k == "seed":                # shared noise seed: first wins
+            if k in ("seed", "round"):
+                # shared noise seed / DP round tag: identical across the
+                # round's partials by construction — first wins
                 out[k] = acc[k]
             else:
                 out[k] = jax.tree_util.tree_map(jnp.add, acc[k], part[k])
@@ -282,6 +298,15 @@ class MaskCodec(UplinkCodec):
     cross-client collective then moves ``⌈log2(K+1)⌉``-bit integers, not
     f32.  Only valid under UNIFORM weights (engines enforce this) and a
     count-aggregatable format (``noise is None`` or ``shared_noise``).
+
+    ``privacy`` routes the count-aggregatable formats through the
+    distributed-DP release (``fed/privacy/``): aggregation ALWAYS runs
+    the integer count path (clipped per client by construction — the
+    1-bit wire satisfies any ``clip ≥ 1`` identically, see
+    ``privacy.mechanisms.clip_counts``), partials carry the round tag,
+    and ``finalize_partial`` adds ONE discrete noise draw keyed on
+    ``fold_in(key(dp_seed), round)`` — so full-stack, cohort-split and
+    service-pooled aggregation noise the same integers identically.
     """
 
     mode: str = "binary"
@@ -290,6 +315,7 @@ class MaskCodec(UplinkCodec):
     normalize: bool = True
     count_dtype: Optional[Any] = None
     backend: Optional[str] = None
+    privacy: Optional[PrivacyConfig] = None
 
     @property
     def carries_seed(self) -> bool:
@@ -322,7 +348,14 @@ class MaskCodec(UplinkCodec):
             out["seed"] = jax.random.wrap_key_data(msg.buffers["seed"])
         return out
 
-    def aggregate(self, stacked: WireMsg, weights: jax.Array) -> Pytree:
+    def aggregate(self, stacked: WireMsg, weights: jax.Array, *,
+                  round_idx=None) -> Pytree:
+        if self.privacy is not None:
+            # DP routes through the partial protocol so the full stack,
+            # a cohort split and a service pool all noise the SAME
+            # merged integers with the SAME single draw per round
+            return self.finalize_partial(self.partial_aggregate(
+                stacked, weights, round_idx=round_idx))
         words = stacked.buffers["words"]
         wn = weights / jnp.sum(weights) if self.normalize else weights
         if self.noise is not None and not self.shared_noise:
@@ -362,7 +395,20 @@ class MaskCodec(UplinkCodec):
 
     # --- hierarchical partials ------------------------------------------
     def partial_aggregate(self, stacked: WireMsg, weights: jax.Array,
-                          *, valid: Optional[jax.Array] = None) -> Dict:
+                          *, valid: Optional[jax.Array] = None,
+                          round_idx=None) -> Dict:
+        if self.privacy is not None:
+            if not self.count_aggregatable:
+                raise ValueError(
+                    "privacy-enabled MaskCodec needs a count-aggregatable "
+                    "format (no noise, or shared_noise): per-client noise "
+                    "sums Σ w'_k G(s_k)⊙m_k, which no count release can "
+                    "express")
+            if round_idx is None:
+                raise ValueError(
+                    "privacy-enabled MaskCodec needs round_idx= at "
+                    "partial_aggregate — the round's single DP noise draw "
+                    "is keyed on fold_in(dp_seed, round)")
         words = stacked.buffers["words"]
         K = jnp.shape(words)[0]
         if valid is None:
@@ -372,22 +418,33 @@ class MaskCodec(UplinkCodec):
             w = weights * valid.astype(weights.dtype)
             n = jnp.sum(valid.astype(jnp.int32))
         part: Dict[str, Any] = {"weight": jnp.sum(w), "n": n}
-        if self.count_aggregatable and self.count_dtype is not None:
+        if self.privacy is not None:
+            part["round"] = jnp.asarray(round_idx, jnp.int32)
+        if self.count_aggregatable and (self.count_dtype is not None
+                                        or self.privacy is not None):
             # integer count partial: zero the padding rows' packed words,
             # popcount-sum in count_dtype.  In signed mode a zeroed row
             # still decodes as all −1 (2·0 − 1), so the raw masked sum is
             # 2c − K; adding (K − n) restores the true Σ±1 over the n
             # valid rows — an exact integer adjustment.
+            # Under privacy the count path is mandatory even without an
+            # explicit count_dtype: the DP release is defined on the
+            # clipped integer counts (the 1-bit wire satisfies any
+            # clip ≥ 1 identically, so this popcount sum IS the
+            # clipped per-client sum — property-tested in
+            # tests/test_privacy.py).
+            cdt = (self.count_dtype if self.count_dtype is not None
+                   else jnp.int32)
             if valid is not None:
                 words = words * valid[:, None].astype(words.dtype)
             counts = tree_unpack_counts(words, self.template,
                                         mode=self.mode,
-                                        dtype=self.count_dtype,
+                                        dtype=cdt,
                                         backend=self.backend)
             if self.mode == "signed" and valid is not None:
-                fix = (jnp.int32(K) - n).astype(self.count_dtype)
+                fix = (jnp.int32(K) - n).astype(cdt)
                 counts = jax.tree_util.tree_map(
-                    lambda c: (c + fix).astype(self.count_dtype), counts)
+                    lambda c: (c + fix).astype(cdt), counts)
             part["counts"] = counts
         else:
             masks = tree_unpack_stacked(words, self.template,
@@ -415,11 +472,23 @@ class MaskCodec(UplinkCodec):
     def finalize_partial(self, partial: Dict) -> Pytree:
         per_client_noise = self.noise is not None and not self.shared_noise
         if "counts" in partial:
+            counts = partial["counts"]
+            if self.privacy is not None:
+                # ONE discrete noise draw per round, added to the MERGED
+                # integer counts — cohort splits and service pool order
+                # cannot change the release (integers sum exactly, the
+                # key depends only on (dp_seed, round))
+                dp_key = jax.random.fold_in(
+                    jax.random.key(self.privacy.dp_seed),
+                    partial["round"])
+                z = dp_noise_tree(dp_key, counts, self.privacy, self.mode)
+                counts = jax.tree_util.tree_map(
+                    lambda c, zi: c.astype(jnp.int32) + zi, counts, z)
             n = partial["n"].astype(jnp.float32)
             m = jax.tree_util.tree_map(
                 lambda c: (c.astype(jnp.float32) / n if self.normalize
                            else c.astype(jnp.float32)),
-                partial["counts"])
+                counts)
         else:
             m = partial["sum"]
             if self.normalize:
@@ -435,7 +504,8 @@ class MaskCodec(UplinkCodec):
             lambda nl, ml: nl * ml.astype(nl.dtype), noise, m)
 
     def uplink_stacked(self, scores: Pytree, noise_keys, mask_keys,
-                       weights: jax.Array, *, probs: bool = False):
+                       weights: jax.Array, *, probs: bool = False,
+                       round_idx=None):
         """The WHOLE mask uplink, client sampling through server sum.
 
         ``scores`` is the client-stacked trained ``u`` (FedMRN: the mask
@@ -452,7 +522,12 @@ class MaskCodec(UplinkCodec):
         bit-identical to the pre-fusion path.
         """
         backend = resolve_backend(self.backend)
-        if backend != "pallas":
+        if backend != "pallas" or self.privacy is not None:
+            # DP always takes the staged composition: the aggregate must
+            # route through partial/finalize so the noise draw lands on
+            # the merged counts exactly once (the sampled masks are
+            # bitwise identical either way — the fused kernel is
+            # oracle-tested against this path)
             if probs:
                 masks = tree_bernoulli_stacked(scores, mask_keys)
             else:
@@ -465,7 +540,7 @@ class MaskCodec(UplinkCodec):
             if self.carries_seed:
                 payload["seed"] = noise_keys
             msg = self.encode_stacked(payload)
-            return msg, self.aggregate(msg, weights)
+            return msg, self.aggregate(msg, weights, round_idx=round_idx)
 
         noise = None
         if not probs:
@@ -498,7 +573,7 @@ class MaskCodec(UplinkCodec):
             lambda nl, ml: nl * ml.astype(nl.dtype), noise0, m_avg)
 
     def aggregate_apply(self, stacked: WireMsg, weights: jax.Array,
-                        params: Pytree) -> Pytree:
+                        params: Pytree, *, round_idx=None) -> Pytree:
         """Server decode + model update in one: equal (leaf by leaf) to
         ``mix_add(params, self.aggregate(stacked, weights))``.
 
@@ -511,9 +586,10 @@ class MaskCodec(UplinkCodec):
         """
         fused = (resolve_backend(self.backend) == "pallas"
                  and self.noise is not None and self.shared_noise
-                 and self.count_dtype is not None)
+                 and self.count_dtype is not None
+                 and self.privacy is None)
         if not fused:
-            agg = self.aggregate(stacked, weights)
+            agg = self.aggregate(stacked, weights, round_idx=round_idx)
             return jax.tree_util.tree_map(mix_add, params, agg)
         words = stacked.buffers["words"]
         wn = weights / jnp.sum(weights) if self.normalize else weights

@@ -206,6 +206,13 @@ def _make_chunk_body(
         raise ValueError(
             "int_mask_agg requires uniform client weights "
             "(client_weights=None)")
+    if cfg.privacy is not None and cw is not None:
+        # the DP release is defined on the UNWEIGHTED clipped counts —
+        # per-client weights would scale contributions past the clip
+        raise ValueError(
+            "privacy= requires uniform client weights "
+            "(client_weights=None): the clipped-count sensitivity bound "
+            "assumes every client contributes one unweighted mask")
     weights_all = jnp.asarray([1.0] * cfg.num_clients if cw is None else cw,
                               jnp.float32)
 
@@ -223,6 +230,13 @@ def _make_chunk_body(
                     "int_mask_agg cannot mask dropped clients on the "
                     "scan path — run availability scenarios on "
                     "engine='cohort' or 'service'")
+            if cfg.privacy is not None:
+                # same packed-popcount limitation: the DP count path
+                # cannot zero a dropped client's words via weights alone
+                raise ValueError(
+                    "privacy= cannot mask dropped clients on the scan "
+                    "path — run availability scenarios on "
+                    "engine='cohort', 'looped' or 'service'")
         else:
             r, picked = inp
             valid = None
@@ -549,6 +563,13 @@ class CohortRunner:
             raise ValueError(
                 "int_mask_agg requires uniform client weights "
                 "(client_weights=None)")
+        if cw is not None and isinstance(codec, MaskCodec) \
+                and codec.privacy is not None:
+            raise ValueError(
+                "privacy= requires uniform client weights "
+                "(client_weights=None): the clipped-count sensitivity "
+                "bound assumes every client contributes one unweighted "
+                "mask")
         if cw is None and isinstance(codec, MaskCodec) \
                 and codec.count_aggregatable and codec.count_dtype is None:
             # uniform weights + count-aggregatable format: cross-cohort
@@ -586,7 +607,8 @@ class CohortRunner:
                                     batch=batch, batch_seed=seed_b)
             msg, agg_w, losses = uplink_fn(seed, w, state, batches, cids,
                                            wts, r)
-            part = codec.partial_aggregate(msg, agg_w, valid=valid)
+            part = codec.partial_aggregate(msg, agg_w, valid=valid,
+                                           round_idx=r)
             loss_sum = jnp.sum(jnp.where(valid, losses[:, -1], 0.0))
             return part, loss_sum
 

@@ -33,7 +33,7 @@ import numpy as np
 from ..core import (NoiseConfig, client_local_update, gen_noise,
                     make_compressor, mix_add, sgd_local_update,
                     tree_num_params)
-from .algorithms import _CODEC_COMPRESSORS
+from .algorithms import _CODEC_COMPRESSORS, fedpm_posterior
 from .codecs import WireMsg
 from .engine import (FLConfig, fedpm_local, fedsparsify_local,
                      get_algorithm, make_client_schedule,
@@ -68,6 +68,11 @@ def run_federated_looped(
         raise ValueError(
             "int_mask_agg requires uniform client weights "
             "(client_weights=None)")
+    if cfg.privacy is not None and client_weights is not None:
+        raise ValueError(
+            "privacy= requires uniform client weights "
+            "(client_weights=None): the clipped-count sensitivity bound "
+            "assumes every client contributes one unweighted mask")
     # the same precomputed seed-stable (R, K) selection every engine uses
     if schedule is None:
         schedule = make_client_schedule(cfg)
@@ -164,7 +169,8 @@ def run_federated_looped(
                 "words": jnp.stack([r.packed_mask for r in results]),
                 "seed": jnp.stack([jax.random.key_data(r.seed_key)
                                    for r in results])})
-            w = aggregate_apply(msg, weights_dev, w)
+            w = aggregate_apply(msg, weights_dev, w,
+                                round_idx=jnp.int32(rnd))
 
         elif cfg.algorithm == "fedpm":
             masks_all = []
@@ -179,12 +185,12 @@ def run_federated_looped(
             K = len(masks_all)
             msg = encode({"mask": stack_client_batches(masks_all)})
             # vote counts, client_weights ignored — see _fedpm_body
-            m_sum = aggregate(msg, jnp.ones((K,), jnp.float32))
+            m_sum = aggregate(msg, jnp.ones((K,), jnp.float32),
+                              round_idx=jnp.int32(rnd))
             # Beta(1,1)-posterior estimate — see algorithms._fedpm_body
-            probs = jax.tree_util.tree_map(
-                lambda s: (s + 1.0) / (K + 2.0), m_sum)
-            scores_global = jax.tree_util.tree_map(
-                lambda p_: jnp.log(p_ / (1 - p_)), probs)   # sigmoid^-1
+            # (clamped under privacy: noisy counts can leave [0, K])
+            probs, scores_global = fedpm_posterior(
+                m_sum, float(K), clamp=cfg.privacy is not None)
             w = jax.tree_util.tree_map(
                 lambda wf, pr: wf * (pr > 0.5), w_frozen, probs)
 
@@ -233,4 +239,8 @@ def run_federated_looped(
     history["num_dispatches"] = int(sum(history["participation_round"]))
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
+    from .api import dp_epsilon_schedule          # lazy, one-way (like shim)
+    eps, delta = dp_epsilon_schedule(cfg, history["participation_round"])
+    history["dp_epsilon"] = list(eps)
+    history["dp_delta"] = delta
     return history

@@ -1,0 +1,107 @@
+"""`PrivacyConfig` — distributed DP over the mask-count wire.
+
+FedMRN's uplink is a packed 1-bit mask per parameter, so a client's
+contribution to the server-side count vector is bounded BY CONSTRUCTION:
+one binary mask adds at most ``1`` per entry, one signed mask moves the
+Σ±1 sum by at most ``2`` under replace-one adjacency.  That makes the
+aggregated counts the natural place for the distributed/shuffled model
+of DP (Girgis et al. 2020, PAPERS.md): clip each client's count
+contribution (``mechanisms.clip_counts``), add ONE discrete noise draw
+to the merged round count (``mechanisms.dp_noise_tree`` inside
+``MaskCodec.finalize_partial``), and account the composition per round
+at the participation actually recorded (``accountant.round_epsilons``).
+
+``PrivacyConfig`` is frozen and hashable so it can ride on
+:class:`~repro.fed.algorithms.FLConfig` (itself a jit/program-cache
+key).  This module deliberately imports nothing from the codec or
+engine layers — ``fed/codecs.py`` imports *us*.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+MECHANISMS = ("discrete_gaussian", "binomial")
+
+#: MaskCodec families whose server aggregate is a pure mask count —
+#: the only formats the DP aggregation path can route (per-client-noise
+#: fedmrn sums Σ w'_k G(s_k)⊙m_k, which no count release can express).
+COUNT_FAMILIES = ("fedmrn", "fedmrns", "fedpm")
+
+
+def dp_mask_mode(algorithm: str) -> str:
+    """The mask mode the accountant's sensitivity is computed at."""
+    return "signed" if algorithm == "fedmrns" else "binary"
+
+
+@dataclasses.dataclass(frozen=True)
+class PrivacyConfig:
+    """Static description of the distributed-DP count release.
+
+    ``noise_multiplier`` is z = σ/Δ, the noise scale in units of the
+    clipped sensitivity — the quantity the RDP accountant actually
+    consumes, so sweeping it traces the ε/accuracy frontier directly.
+    ``clip`` bounds one client's per-entry count contribution; mask
+    wires satisfy any ``clip ≥ 1`` identically (|entry| ≤ 1), but the
+    clip is still applied (and property-tested) so the sensitivity
+    claim never silently depends on the wire format staying 1-bit.
+    """
+
+    mechanism: str = "discrete_gaussian"   # one of MECHANISMS
+    noise_multiplier: float = 1.0          # z = σ / sensitivity
+    clip: int = 1                          # per-entry contribution bound
+    delta: float = 1e-5                    # target δ of the (ε, δ) report
+    dp_seed: int = 0                       # noise stream root (fold_in round)
+
+    def validate(self) -> None:
+        if self.mechanism not in MECHANISMS:
+            raise ValueError(
+                f"unknown DP mechanism {self.mechanism!r} "
+                f"(supported: {', '.join(MECHANISMS)})")
+        if not self.noise_multiplier > 0:
+            raise ValueError(
+                "noise_multiplier must be positive, got "
+                f"{self.noise_multiplier}")
+        if not (isinstance(self.clip, int) and self.clip >= 1):
+            raise ValueError(
+                f"clip must be an integer >= 1 (counts are integers), "
+                f"got {self.clip!r}")
+        if not 0.0 < self.delta < 1.0:
+            raise ValueError(
+                f"delta must be in (0, 1), got {self.delta}")
+
+    def sensitivity(self, mode: str) -> int:
+        """Δ of one round's count release under replace-one adjacency.
+
+        Binary masks: one client's clipped entry lives in [0, clip] →
+        Δ = clip.  Signed masks: in [−clip, clip] → Δ = 2·clip (the
+        exact width the ``2c − K`` popcount fixup preserves).
+        """
+        return 2 * self.clip if mode == "signed" else self.clip
+
+    def sigma(self, mode: str) -> float:
+        """Target noise standard deviation σ = z · Δ in count units."""
+        return self.noise_multiplier * self.sensitivity(mode)
+
+
+def check_privacy_support(cfg) -> None:
+    """Raise unless ``cfg``'s family can route the DP count path.
+
+    Called from :meth:`FLConfig.validate`; takes the config duck-typed
+    to keep this module import-free of the algorithm layer.
+    """
+    privacy = cfg.privacy
+    if privacy is None:
+        return
+    privacy.validate()
+    if cfg.algorithm not in COUNT_FAMILIES:
+        raise ValueError(
+            f"privacy= (distributed DP on mask counts) needs a "
+            f"count-aggregatable MaskCodec family "
+            f"({', '.join(COUNT_FAMILIES)}), got {cfg.algorithm!r} — "
+            "dense/sign/sparse wires have no bounded-count release to "
+            "noise")
+    if cfg.algorithm in ("fedmrn", "fedmrns") and not cfg.shared_noise:
+        raise ValueError(
+            "privacy= needs shared_noise for fedmrn/fedmrns: with "
+            "per-client noise the server update Σ w'_k G(s_k)⊙m_k is "
+            "not a function of the mask counts the DP release protects")

@@ -1,0 +1,131 @@
+"""Seeded, jit-safe discrete noise + count clipping for the DP uplink.
+
+Everything here is counter-based and rejection-free so the same draw is
+reproducible inside any engine's compiled program:
+
+  ``symmetric_binomial``   Binom(n, 1/2) − n/2 realized as popcounts of
+                           ``jax.random.bits`` words (the last word
+                           masked to ``n % 32`` trials) — an EXACT
+                           integer sampler with variance n/4, n chosen
+                           even so the mean shift is an integer.
+  ``discrete_gaussian``    inversion sampling on counter-derived
+                           uniforms: a numpy-precomputed CDF over the
+                           truncated support [−T, T] (T = ⌈12σ⌉, mass
+                           beyond it < 1e-31 · table tail) indexed by
+                           ``jnp.searchsorted`` — no rejection loop, so
+                           it vmaps/jits like any other primitive.
+                           (f32 uniforms resolve ~2⁻²⁴; tail values
+                           rarer than that are unreachable, a truncation
+                           far below the accountant's δ.)
+  ``clip_counts``          per-client count clipping at the configured
+                           sensitivity: binary entries to [0, c], signed
+                           to [−c, c].  Mask wires satisfy clip ≥ 1
+                           identically, which is exactly why the packed
+                           popcount path (including the signed ``2c − K``
+                           fixup) IS the clipped sum — the hypothesis
+                           property test in ``tests/test_privacy.py``
+                           pins that equivalence ref ≡ pallas-interpret.
+
+``dp_noise_tree`` mirrors ``core/noise.py``'s ``gen_noise`` fold-in
+idiom (per-leaf ``fold_in(key, i)``) so one key — derived as
+``fold_in(key(dp_seed), round)`` by the codec — determines the whole
+round's noise tree on every engine.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .dp import PrivacyConfig
+
+Pytree = Any
+
+# one uint32 word of jax.random.bits = 32 fair Bernoulli trials
+_WORD = 32
+
+
+def binomial_trials(privacy: PrivacyConfig, mode: str) -> int:
+    """Number of fair trials matching σ = z·Δ (Var = n/4 → n = 4σ²).
+
+    Rounded UP to the next even integer: the accountant then uses the
+    realized σ_eff = √n/2 ≥ σ, never less noise than configured.
+    """
+    sigma = privacy.sigma(mode)
+    n = int(math.ceil(4.0 * sigma * sigma))
+    return max(2, n + (n % 2))
+
+
+def symmetric_binomial(key: jax.Array, shape, n: int) -> jax.Array:
+    """One draw of Binom(n, 1/2) − n/2 per element, int32."""
+    if n < 2 or n % 2:
+        raise ValueError(f"n must be even and >= 2, got {n}")
+    W = (n + _WORD - 1) // _WORD
+    rem = n - _WORD * (W - 1)                       # trials in last word
+    bits = jax.random.bits(key, (W,) + tuple(shape), jnp.uint32)
+    if rem < _WORD:
+        tail = bits[W - 1] & jnp.uint32((1 << rem) - 1)
+        bits = bits.at[W - 1].set(tail)
+    pc = jax.lax.population_count(bits).astype(jnp.int32)
+    return jnp.sum(pc, axis=0) - jnp.int32(n // 2)
+
+
+def _dgauss_cdf(sigma: float) -> np.ndarray:
+    """Normalized CDF of the discrete Gaussian on [−T, T] (host numpy;
+    σ is static config, so this is a trace-time constant)."""
+    T = max(1, int(math.ceil(12.0 * sigma)))
+    t = np.arange(-T, T + 1, dtype=np.float64)
+    logp = -(t * t) / (2.0 * sigma * sigma)
+    p = np.exp(logp - logp.max())
+    cdf = np.cumsum(p / p.sum())
+    cdf[-1] = 1.0                                   # searchsorted-safe
+    return cdf
+
+
+def discrete_gaussian(key: jax.Array, shape, sigma: float) -> jax.Array:
+    """One N_Z(0, σ²) draw per element via CDF inversion, int32."""
+    if not sigma > 0:
+        raise ValueError(f"sigma must be positive, got {sigma}")
+    cdf = _dgauss_cdf(sigma)
+    T = (len(cdf) - 1) // 2
+    u = jax.random.uniform(key, tuple(shape))
+    idx = jnp.searchsorted(jnp.asarray(cdf, jnp.float32), u, side="right")
+    return (jnp.minimum(idx, 2 * T) - T).astype(jnp.int32)
+
+
+def dp_noise_tree(key: jax.Array, tree: Pytree, privacy: PrivacyConfig,
+                  mode: str) -> Pytree:
+    """Int32 noise pytree matching ``tree``'s shapes — the one draw a
+    round's finalize adds to its merged count (per-leaf ``fold_in``)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if privacy.mechanism == "binomial":
+        n = binomial_trials(privacy, mode)
+        sample = lambda k, s: symmetric_binomial(k, s, n)
+    else:
+        sigma = privacy.sigma(mode)
+        sample = lambda k, s: discrete_gaussian(k, s, sigma)
+    out = []
+    for i, leaf in enumerate(leaves):
+        out.append(sample(jax.random.fold_in(key, i), jnp.shape(leaf)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def clip_counts(contrib: Pytree, clip: int, mode: str) -> Pytree:
+    """Clip ONE client's count contribution at the sensitivity bound.
+
+    Binary entries live in [0, clip]; signed in [−clip, clip].  On the
+    1-bit mask wire this is the identity for any clip ≥ 1 — the packed
+    popcount partial (with the signed ``2c − K`` fixup) therefore equals
+    the clipped per-client sum exactly, which is the invariant the DP
+    aggregation path relies on and ``tests/test_privacy.py`` proves.
+    """
+    lo = -clip if mode == "signed" else 0
+
+    def one(x):
+        return jnp.clip(x, jnp.asarray(lo, x.dtype),
+                        jnp.asarray(clip, x.dtype))
+
+    return jax.tree_util.tree_map(one, contrib)

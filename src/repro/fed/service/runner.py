@@ -59,6 +59,10 @@ class ServiceReport:
     downlink_overhead_bits: int     # frame + algorithm state, per request
     staleness: Tuple[Tuple[Dict[str, Any], ...], ...]
     base_url: str
+    # ---- distributed-DP accounting (fed/privacy) -----------------------
+    dp_epsilon: Tuple[float, ...] = ()    # cumulative ε after each round
+    #   at the participation actually aggregated; all-inf without privacy
+    dp_delta: float = 0.0
     # ---- availability / fault accounting (PR 9) ------------------------
     participation: Tuple[int, ...] = ()   # uplinks aggregated per round
     expected: Tuple[int, ...] = ()        # survivors the trace promised
@@ -124,8 +128,8 @@ class ServiceRunner:
             return msg, agg_w[0], losses[0, -1]
 
         @jax.jit
-        def partial_fn(msg, weights):
-            return codec.partial_aggregate(msg, weights)
+        def partial_fn(msg, weights, r):
+            return codec.partial_aggregate(msg, weights, round_idx=r)
 
         @jax.jit
         def apply_fn_j(seed, w, state, agg, r, n_valid):
@@ -204,7 +208,7 @@ class ServiceRunner:
             eval_rounds=eval_round_indices(cfg, self._eval_every),
             params=self._params, state=self._state0, schedule=schedule,
             seed=seed, service=service, algorithm=cfg.algorithm,
-            expected=expected)
+            expected=expected, num_clients=cfg.num_clients)
         httpd = make_http_server(coord)
         base_url = "http://%s:%d" % httpd.server_address[:2]
         server_thread = threading.Thread(target=httpd.serve_forever,
@@ -288,9 +292,27 @@ class ServiceRunner:
         for stats in stats_all:
             for k, v in (stats or {}).items():
                 client_faults[k] = client_faults.get(k, 0) + int(v)
+        privacy = getattr(self.codec, "privacy", None)
+        if privacy is not None:
+            from ..privacy import round_epsilons
+            dp_eps = tuple(float(e) for e in round_epsilons(
+                privacy, [int(x) for x in coord.participation],
+                cfg.num_clients, self.codec.mode))
+            dp_delta = float(privacy.delta)
+        else:
+            dp_eps = (float("inf"),) * cfg.rounds
+            dp_delta = 0.0
+        # satellite: the comm record carries the MEASURED wire overheads
+        # (serde framing per uplink, downlink response beyond the params
+        # payload) and the run's final (ε, δ) — not just the payload
         comm = dataclasses.replace(
             self.codec.wire_bits(self._params),
-            downlink_bits=coord.downlink_params_bits)
+            downlink_bits=coord.downlink_params_bits,
+            framing_bits=int(coord.uplink_framing_bits),
+            downlink_overhead_bits=(coord.downlink_total_bits
+                                    - coord.downlink_params_bits),
+            dp_epsilon=dp_eps[-1] if dp_eps else float("inf"),
+            dp_delta=dp_delta)
         self.report = ServiceReport(
             mode=service.mode, comm=comm, n_uplinks=coord.n_uplinks,
             uplink_payload_bits=coord.uplink_payload_bits,
@@ -307,7 +329,8 @@ class ServiceRunner:
             expected=tuple(int(x) for x in coord.expected),
             rejected=dict(coord.rejected),
             client_faults=client_faults,
-            hung_workers=len(hung))
+            hung_workers=len(hung),
+            dp_epsilon=dp_eps, dp_delta=dp_delta)
         self.final_params = coord.w
         self.final_state = coord.state
         metrics = {

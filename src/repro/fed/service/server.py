@@ -128,7 +128,8 @@ class Coordinator:
                  apply_fn, eval_fn=None, eval_rounds=(), params, state,
                  schedule: np.ndarray, seed: int, service: ServiceConfig,
                  algorithm: str = "",
-                 expected: Optional[np.ndarray] = None):
+                 expected: Optional[np.ndarray] = None,
+                 num_clients: Optional[int] = None):
         service.validate()
         if service.mode == "async" and isinstance(codec, MaskCodec) \
                 and codec.count_dtype is not None:
@@ -136,9 +137,17 @@ class Coordinator:
                 "async staleness weighting needs f32 per-client weights "
                 "— integer count aggregation (count_dtype) cannot carry "
                 "beta**lag scales")
+        if service.mode == "async" \
+                and getattr(codec, "privacy", None) is not None:
+            raise ValueError(
+                "async rounds cannot run under privacy=: the DP release "
+                "is one noise draw on the round's merged integer counts, "
+                "but async pools mix sending rounds with beta**lag f32 "
+                "scales — run privacy experiments in mode='sync'")
         self.codec = codec
         self.service = service
         self.algorithm = algorithm
+        self.num_clients = num_clients
         self._partial = partial_fn
         self._merge = merge_fn
         self._finalize = finalize_fn
@@ -315,7 +324,8 @@ class Coordinator:
             part = None
             for e in group:
                 w = jnp.asarray([e.weight * scale], jnp.float32)
-                p = self._partial(self._stack([e]), w)
+                p = self._partial(self._stack([e]), w,
+                                  jnp.int32(group[0].msg_round))
                 part = p if part is None else self._merge(part, p)
                 self.dispatches += 1
                 self.staleness_log[r].append(
@@ -360,9 +370,31 @@ class Coordinator:
                     "done": self.done, "mode": self.service.mode,
                     "pool": len(self._pool)}
 
+    def _dp_metrics(self) -> Dict[str, Any]:
+        """Cumulative (ε, δ) after each CLOSED round (lock held).
+
+        ``dp_epsilon_round[t]`` is the budget spent through round ``t``,
+        accounted at the participation the coordinator actually
+        aggregated (quorum-degraded rounds spend less); unclosed rounds
+        are ``None``.  Both fields are ``None`` when the codec carries
+        no privacy mechanism.
+        """
+        privacy = getattr(self.codec, "privacy", None)
+        if privacy is None or self.num_clients is None:
+            return {"dp_epsilon_round": None, "dp_delta": None}
+        from ..privacy import round_epsilons
+        closed = min(self.round, self.rounds)
+        eps = round_epsilons(privacy, [int(x) for x in
+                                       self.participation[:closed]],
+                             self.num_clients, self.codec.mode)
+        col: List[Optional[float]] = [float(e) for e in eps]
+        col += [None] * (self.rounds - closed)
+        return {"dp_epsilon_round": col, "dp_delta": float(privacy.delta)}
+
     def metrics(self) -> Dict[str, Any]:
         with self._cv:
             return {
+                **self._dp_metrics(),
                 "round": self.round, "done": self.done,
                 "mode": self.service.mode,
                 "algorithm": self.algorithm,

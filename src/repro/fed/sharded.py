@@ -214,6 +214,15 @@ def make_pod_round(
         raise ValueError(
             "int_mask_agg requires uniform client weights "
             "(client_weights=None)")
+    if cfg.privacy is not None:
+        # the DP release is defined over the five simulation engines'
+        # partial/finalize chain; the pod lowering has no parity oracle
+        # for the noisy count wire yet, so refuse rather than emit an
+        # unaudited release
+        raise ValueError(
+            "privacy= is not supported by make_pod_round — run DP "
+            "experiments on engine='scan', 'batched', 'looped', "
+            "'cohort' or 'service'")
     codec = algo.codec(cfg, p_specs)
     count_ok = (isinstance(codec, MaskCodec) and codec.count_aggregatable)
     if int_mask_agg is None:

@@ -133,6 +133,16 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
             "int_mask_agg cannot mask dropped clients on engine="
             "'batched' — run availability scenarios on engine='cohort' "
             "or 'service'")
+    if cfg.privacy is not None and client_weights is not None:
+        raise ValueError(
+            "privacy= requires uniform client weights "
+            "(client_weights=None): the clipped-count sensitivity bound "
+            "assumes every client contributes one unweighted mask")
+    if cfg.privacy is not None and valid is not None:
+        raise ValueError(
+            "privacy= cannot mask dropped clients on engine='batched' — "
+            "the count wire sums every stacked row; run availability "
+            "scenarios on engine='cohort', 'looped' or 'service'")
     w = init_params
     history = _base_history(cfg, w, schedule, "batched")
     if client_weights is None:
@@ -178,4 +188,8 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
     history["num_dispatches"] = cfg.rounds      # one round program per round
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
+    from .api import dp_epsilon_schedule        # lazy, one-way (like shim)
+    eps, delta = dp_epsilon_schedule(cfg, participation)
+    history["dp_epsilon"] = list(eps)
+    history["dp_delta"] = delta
     return history

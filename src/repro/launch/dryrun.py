@@ -250,6 +250,41 @@ def run_and_save(arch, shape_name, *, multi_pod, sharded=False,
     return rec
 
 
+def _probe_wire_overheads(codec, algo, cfg, probe):
+    """MEASURED serde overheads of one service-tier exchange.
+
+    Frames one zero-update uplink exactly as the client posts it
+    (``serde.dumps_msg`` with round/cid/weight/loss meta) and one model
+    downlink exactly as the coordinator publishes it, and returns
+    ``(uplink_framing_bits, downlink_overhead_bits)`` — the frame bytes
+    beyond the raw payload on each leg.  Deterministic: the frame layout
+    is sorted-keys serde, so these are THE figures a service run pays
+    per message.
+    """
+    from ..fed.codecs import MaskCodec
+    from ..fed.service import serde
+
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, probe)
+    if isinstance(codec, MaskCodec):
+        payload = {"mask": zeros}
+        if codec.carries_seed:
+            payload["seed"] = jax.random.key(0)
+    elif getattr(codec, "needs_key", False):
+        payload = {"value": zeros, "key": jax.random.key(0)}
+    else:
+        payload = {"value": zeros}
+    msg = codec.encode(payload)
+    body = serde.dumps_msg(msg, round=0, cid=0, weight=1.0, loss=0.0)
+    up_framing = len(body) * 8 - msg.bits
+    state = algo.init_state(cfg, probe)
+    blob = serde.dumps_tree(
+        {"params": probe, "state": state}, round=0, rounds=cfg.rounds,
+        seed=0, algorithm=cfg.algorithm, done=False,
+        cids=[0] * cfg.clients_per_round)
+    dl_overhead = len(blob) * 8 - serde.tree_payload_bits(probe)
+    return int(up_framing), int(dl_overhead)
+
+
 def serve_smoke(fed_algo: str = "fedmrn", *, rounds: int = 2,
                 faults: bool = False) -> dict:
     """Loopback smoke of the wire-true coordinator (deliverable of the
@@ -368,7 +403,10 @@ def main():
         # the Experiment API AND lowerable on the pod path (--sharded
         # --algo <name>).  One row per entry: the codec's comm table
         # (CommRecord.row(): exact MEASURED bpp, paper-style bpp,
-        # downlink) on a small CNN probe model.
+        # downlink) on a small CNN probe model, plus the MEASURED serde
+        # wire overheads the service tier pays per message (satellite:
+        # these used to live only in ServiceReport, so the comm table
+        # under-reported real wire cost).
         import dataclasses as _dc
 
         from ..fed import FLConfig, get_algorithm, list_algorithms
@@ -377,19 +415,26 @@ def main():
         cfg0 = FLConfig()
         header = (f"{'algorithm':12s} {'codec':12s} {'bpp':>8s} "
                   f"{'bpp(paper)':>10s} {'uplink MB':>10s} "
-                  f"{'downlink Mb':>12s} {'compr x':>8s}")
+                  f"{'downlink Mb':>12s} {'compr x':>8s} "
+                  f"{'frame b':>8s} {'dl ovh b':>9s}")
         print(header)
         for name in list_algorithms():
             algo = get_algorithm(name)
             cfg = _dc.replace(cfg0, algorithm=name)
             codec = algo.codec(cfg, probe)
-            row = codec.wire_bits(probe).row()
+            framing, dl_overhead = _probe_wire_overheads(
+                codec, algo, cfg, probe)
+            row = _dc.replace(codec.wire_bits(probe),
+                              framing_bits=framing,
+                              downlink_overhead_bits=dl_overhead).row()
             print(f"{name:12s} {type(codec).__name__:12s} "
                   f"{row['uplink_bpp']:8.3f} "
                   f"{row['uplink_bpp_paper']:10.3f} "
                   f"{row['uplink_MB']:10.4f} "
                   f"{row['downlink_bits'] / 1e6:12.3f} "
-                  f"{row['compression_x']:8.2f}")
+                  f"{row['compression_x']:8.2f} "
+                  f"{row['framing_bits']:8d} "
+                  f"{row['downlink_overhead_bits']:9d}")
         return
 
     archs = list_archs() if (args.all or not args.arch) else [args.arch]

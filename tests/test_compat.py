@@ -1,0 +1,70 @@
+"""The jax version gate on ``repro.compat``'s 0.4.x shims.
+
+A toolchain bump past 0.5 must turn :func:`install_barrier_rules` into
+a hard no-op (the AD/batching rules ship with jax there — registering
+ours would shadow them); on the pinned 0.4.37 floor the rules must be
+installed exactly once, and gradients/vmap through the barrier must
+work.  Both branches run on ANY toolchain: the gate is an explicit
+argument.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import compat
+
+
+def test_version_tuple_parses_releases_and_dev_builds():
+    assert compat.version_tuple("0.4.37") == (0, 4, 37)
+    assert compat.version_tuple("0.5.0") == (0, 5, 0)
+    assert compat.version_tuple("0.5.0.dev20250101") == (0, 5, 0)
+    assert compat.version_tuple("0.5.0rc1") == (0, 5, 0)
+    assert compat.version_tuple("1.0") == (1, 0)
+    assert compat.version_tuple("0.4.37") < (0, 5)
+    assert not compat.version_tuple("0.5.3") < (0, 5)
+
+
+def test_gate_matches_running_jax():
+    assert compat.NEEDS_BARRIER_SHIMS == (
+        compat.version_tuple(jax.__version__) < (0, 5))
+
+
+def test_new_jax_branch_is_a_hard_noop():
+    """needed=False (the >= 0.5 branch) must touch NO registry."""
+    from jax.interpreters import ad, batching
+    before = (dict(batching.primitive_batchers), dict(ad.primitive_jvps),
+              dict(ad.primitive_transposes))
+    assert compat.install_barrier_rules(needed=False) is False
+    after = (dict(batching.primitive_batchers), dict(ad.primitive_jvps),
+             dict(ad.primitive_transposes))
+    assert before == after
+
+
+def test_old_jax_branch_is_idempotent():
+    """On the shimmed toolchain the rules are already in (module import
+    installed them) — a second forced call must register nothing, so a
+    double import / re-run can never stack rules."""
+    if not compat.NEEDS_BARRIER_SHIMS:
+        pytest.skip("running on jax >= 0.5: nothing was installed")
+    assert compat.install_barrier_rules(needed=True) is False
+
+
+def test_barrier_rules_actually_work():
+    """grad + vmap through optimization_barrier — the failures the shim
+    exists to fix on 0.4.37 (identity semantics either branch)."""
+
+    def f(x):
+        return jnp.sum(compat.optimization_barrier(x * 2.0))
+
+    x = jnp.arange(3.0)
+    assert jax.grad(f)(x) == pytest.approx([2.0, 2.0, 2.0])
+    y = jax.vmap(lambda v: compat.optimization_barrier(v) + 1.0)(x)
+    assert y == pytest.approx([1.0, 2.0, 3.0])
+
+
+def test_mesh_axis_kwargs_shape():
+    kw = compat.mesh_axis_kwargs(2)
+    if compat.AxisType is None:
+        assert kw == {}
+    else:
+        assert kw == {"axis_types": (compat.AxisType.Auto,) * 2}

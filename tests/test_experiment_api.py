@@ -27,6 +27,7 @@ GOLDEN_HISTORY_KEYS = {
     "algorithm", "engine", "acc", "round", "local_loss",
     "uplink_bits_per_client", "uplink_bits_round", "params", "schedule",
     "num_dispatches", "wall_s", "final_acc", "participation_round",
+    "dp_epsilon", "dp_delta",
 }
 
 
