@@ -1,7 +1,7 @@
 """Measured ε / accuracy / bits trade-off of the DP mask-count release.
 
 The paper-style curve the privacy subsystem exists to produce: sweep the
-noise multiplier z = σ/Δ over the SAME federation (identical task,
+noise multiplier z = σ/Δ₂ over the SAME federation (identical task,
 partition, model init, schedule) and record, per point,
 
   privacy/curve/z<z>/final_acc     measured final accuracy (scan engine)
@@ -17,9 +17,17 @@ partition, model init, schedule) and record, per point,
   privacy/binomial/...             one symmetric-binomial point at z=1 —
                                    the mechanism choice is a knob, not a
                                    fork of the pipeline
+  privacy/entry_adjacency/...      one adjacency="entry" point at z=1 —
+                                   per-ENTRY protection (Δ₂ = Δ, weaker
+                                   unit) keeps utility where the default
+                                   whole-mask client adjacency
+                                   (Δ₂ = Δ·√d) pays √d more noise
 
-Every number is MEASURED from a real engine run (the accountant reads
-the participation the engine recorded), not an analytic projection.
+The curve points run at the DEFAULT client adjacency: ε there is the
+whole-mask spend, and the accuracy column shows the honest utility cost
+of σ = z·Δ·√d per entry at this cohort size.  Every number is MEASURED
+from a real engine run (the accountant reads the participation the
+engine recorded), not an analytic projection.
 ``write_bench_json`` emits ``BENCH_privacy.json``; the CI smoke job
 asserts the ε column is finite and strictly decreasing in z.
 """
@@ -108,6 +116,17 @@ def privacy_rows(quick: bool = False) -> List[Dict]:
         dict(name="privacy/binomial/epsilon", us_per_call=0.0,
              derived=round(binom["epsilon"], 4)),
     ]
+    entry = _run_point(dataclasses.replace(
+        _base_cfg(rounds),
+        privacy=PrivacyConfig(mechanism="discrete_gaussian",
+                              noise_multiplier=1.0, delta=DELTA,
+                              adjacency="entry")))
+    rows += [
+        dict(name="privacy/entry_adjacency/final_acc", us_per_call=0.0,
+             derived=entry["final_acc"]),
+        dict(name="privacy/entry_adjacency/epsilon", us_per_call=0.0,
+             derived=round(entry["epsilon"], 4)),
+    ]
     return rows
 
 
@@ -138,6 +157,7 @@ def write_bench_json(rows: List[Dict], path: str = BENCH_JSON,
                    "local_steps": STEPS, "batch_size": BATCH,
                    "delta": DELTA,
                    "noise_multipliers": list(NOISE_MULTIPLIERS),
+                   "adjacency": "client (curve; +1 entry point)",
                    "mechanism": "discrete_gaussian (+1 binomial point)",
                    "n_devices": jax.local_device_count(),
                    "n_cpus": os.cpu_count(),

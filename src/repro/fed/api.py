@@ -175,21 +175,28 @@ class RunResult:
             dp_delta=float(hist.get("dp_delta", 0.0)))
 
 
-def dp_epsilon_schedule(cfg: FLConfig,
-                        participation: Sequence[int]) -> Tuple[
+def dp_epsilon_schedule(cfg: FLConfig, participation: Sequence[int],
+                        num_params: int) -> Tuple[
                             Tuple[float, ...], float]:
     """Cumulative (ε, δ) spend per round at the TRUE participation.
 
-    Accounts every round at the participation actually recorded —
-    availability dropouts and quorum-degraded service rounds spend LESS
-    budget (smaller sampling fraction q = survivors / num_clients).
+    ``num_params`` is the dimension of the released count vector (the
+    model's parameter count) — the accountant normalizes by the L2
+    sensitivity at ``cfg.privacy.adjacency`` (Δ·√num_params for the
+    default client adjacency).  Accounts every round at the
+    participation actually recorded — availability dropouts and
+    quorum-degraded service rounds spend LESS budget (smaller sampling
+    fraction q = survivors / num_clients).  NOTE conditioning on
+    realized dropouts assumes availability is independent of client
+    data (true for the built-in traces/fault plans); pass the scheduled
+    ``[clients_per_round] * rounds`` for the conditioning-free bound.
     Returns ``((inf,)*R, 0.0)`` when ``cfg.privacy`` is None.
     """
     if cfg.privacy is None:
         return (math.inf,) * len(tuple(participation)), 0.0
     from .privacy import dp_mask_mode, round_epsilons
     eps = round_epsilons(cfg.privacy, participation, cfg.num_clients,
-                         dp_mask_mode(cfg.algorithm))
+                         dp_mask_mode(cfg.algorithm), num_params)
     return tuple(float(e) for e in eps), cfg.privacy.delta
 
 
@@ -377,7 +384,8 @@ class Experiment:
         if self.cfg.privacy is None:
             return rec
         eps, delta = dp_epsilon_schedule(
-            self.cfg, [self.cfg.clients_per_round] * self.cfg.rounds)
+            self.cfg, [self.cfg.clients_per_round] * self.cfg.rounds,
+            tree_num_params(self.spec.params))
         return dataclasses.replace(rec, dp_epsilon=eps[-1], dp_delta=delta)
 
     # ---- eval wiring --------------------------------------------------
@@ -669,7 +677,8 @@ class Experiment:
         rounds = eval_round_indices(cfg, self.spec.eval_every)
         if participation is None:
             participation = [cfg.clients_per_round] * cfg.rounds
-        dp_eps, dp_delta = dp_epsilon_schedule(cfg, participation)
+        dp_eps, dp_delta = dp_epsilon_schedule(
+            cfg, participation, tree_num_params(self.spec.params))
         return RunResult(
             algorithm=cfg.algorithm, engine=engine, config=cfg,
             seed=cfg.seed, eval_rounds=tuple(rounds),
@@ -701,7 +710,7 @@ class Experiment:
                       valid=valid)
         result = RunResult.from_history(cfg, engine, hist)
         dp_eps, dp_delta = dp_epsilon_schedule(
-            cfg, result.participation_round)
+            cfg, result.participation_round, result.num_params)
         return dataclasses.replace(result, dp_epsilon=dp_eps,
                                    dp_delta=dp_delta)
 
@@ -885,7 +894,7 @@ class Experiment:
             dp_epsilon=dp_epsilon_schedule(
                 cfg, ([cfg.clients_per_round] * cfg.rounds
                       if participations is None
-                      else participations[i]))[0],
+                      else participations[i]), n_params)[0],
             dp_delta=(cfg.privacy.delta
                       if cfg.privacy is not None else 0.0),
         ) for i, s in enumerate(seeds)]

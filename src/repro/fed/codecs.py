@@ -301,9 +301,12 @@ class MaskCodec(UplinkCodec):
 
     ``privacy`` routes the count-aggregatable formats through the
     distributed-DP release (``fed/privacy/``): aggregation ALWAYS runs
-    the integer count path (clipped per client by construction — the
-    1-bit wire satisfies any ``clip ≥ 1`` identically, see
-    ``privacy.mechanisms.clip_counts``), partials carry the round tag,
+    the integer count path.  Per-client clipping is STRUCTURAL, not a
+    runtime op — the 1-bit wire satisfies any ``clip ≥ 1`` identically,
+    so the popcount partial IS the clipped sum; the invariant is
+    enforced only by the property tests against the reference oracle
+    ``privacy.mechanisms.clip_counts`` (a wire format change must
+    either clip at runtime or fail them).  Partials carry the round tag,
     and ``finalize_partial`` adds ONE discrete noise draw keyed on
     ``fold_in(key(dp_seed), round)`` — so full-stack, cohort-split and
     service-pooled aggregation noise the same integers identically.
@@ -429,10 +432,11 @@ class MaskCodec(UplinkCodec):
             # valid rows — an exact integer adjustment.
             # Under privacy the count path is mandatory even without an
             # explicit count_dtype: the DP release is defined on the
-            # clipped integer counts (the 1-bit wire satisfies any
-            # clip ≥ 1 identically, so this popcount sum IS the
-            # clipped per-client sum — property-tested in
-            # tests/test_privacy.py).
+            # clipped integer counts.  No clip op runs here — the 1-bit
+            # wire satisfies any clip ≥ 1 identically, so this popcount
+            # sum IS the clipped per-client sum structurally; the
+            # property tests in tests/test_privacy.py (vs the
+            # clip_counts oracle) are what enforce that equivalence.
             cdt = (self.count_dtype if self.count_dtype is not None
                    else jnp.int32)
             if valid is not None:

@@ -240,7 +240,8 @@ def run_federated_looped(
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     from .api import dp_epsilon_schedule          # lazy, one-way (like shim)
-    eps, delta = dp_epsilon_schedule(cfg, history["participation_round"])
+    eps, delta = dp_epsilon_schedule(cfg, history["participation_round"],
+                                     history["params"])
     history["dp_epsilon"] = list(eps)
     history["dp_delta"] = delta
     return history

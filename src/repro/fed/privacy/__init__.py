@@ -3,20 +3,22 @@
 Public surface:
 
   :class:`PrivacyConfig`      frozen config riding on ``FLConfig`` —
-                              mechanism, noise multiplier z, clip, δ,
-                              and the dp_seed of the round noise stream
+                              mechanism, noise multiplier z, clip,
+                              adjacency (unit of protection), δ, and
+                              the dp_seed of the round noise stream
   :mod:`mechanisms`           seeded discrete samplers + count clipping
   :mod:`accountant`           per-round subsampled RDP → (ε, δ)
 """
 from .accountant import (DEFAULT_ORDERS, eps_from_rdp, epsilon_after,
                          rdp_round, round_epsilons, sigma_normalized)
-from .dp import (COUNT_FAMILIES, MECHANISMS, PrivacyConfig,
+from .dp import (ADJACENCIES, COUNT_FAMILIES, MECHANISMS, PrivacyConfig,
                  check_privacy_support, dp_mask_mode)
 from .mechanisms import (binomial_trials, clip_counts, discrete_gaussian,
                          dp_noise_tree, symmetric_binomial)
 
 __all__ = [
-    "COUNT_FAMILIES", "DEFAULT_ORDERS", "MECHANISMS", "PrivacyConfig",
+    "ADJACENCIES", "COUNT_FAMILIES", "DEFAULT_ORDERS", "MECHANISMS",
+    "PrivacyConfig",
     "binomial_trials", "check_privacy_support", "clip_counts",
     "discrete_gaussian", "dp_mask_mode", "dp_noise_tree", "eps_from_rdp",
     "epsilon_after", "rdp_round", "round_epsilons", "sigma_normalized",

@@ -3,17 +3,27 @@
 Host-side numpy (the accountant reads the participation the engines
 RECORDED, never traced values).  Model per round ``t``:
 
-* the mechanism releases the round's merged count vector plus one
-  discrete noise draw of realized std σ_eff (``discrete_gaussian``: the
-  configured σ = z·Δ; ``binomial``: √n/2 for the even n actually drawn —
-  never less than configured);
-* one client changes the release by at most the clipped sensitivity Δ
-  (``PrivacyConfig.sensitivity``), so the normalized noise scale is
-  ``σ_n = σ_eff / Δ``;
+* the mechanism releases the round's merged d-dimensional count vector
+  plus one discrete noise draw of realized per-entry std σ_eff
+  (``discrete_gaussian``: the configured σ = z·Δ₂; ``binomial``: √n/2
+  for the even n actually drawn — never less than configured);
+* one adjacent-dataset swap changes the release by at most the L2
+  VECTOR sensitivity Δ₂ = ``PrivacyConfig.l2_sensitivity(mode, d)`` —
+  under the default ``adjacency="client"`` a replaced client can move
+  all d entries by up to the per-entry bound Δ, so Δ₂ = Δ·√d; under
+  ``"entry"`` only one entry moves and Δ₂ = Δ.  The normalized noise
+  scale is ``σ_n = σ_eff / Δ₂`` (exactly the configured multiplier z
+  for the discrete Gaussian, since its σ is calibrated to z·Δ₂);
 * the round touched ``participation[t]`` of ``num_clients`` clients —
   the TRUE survivor count the engine recorded, so a round degraded by
   ``d`` dropouts is accounted at sampling rate q_t = (K−d)/C, not the
-  scheduled K/C.
+  scheduled K/C.  CAVEAT: conditioning on realized dropouts is a valid
+  amplification argument only when availability is independent of
+  client data (true for every built-in ``AvailabilityTrace`` /
+  ``FaultPlan``, which are seed/config-driven); if participation may
+  correlate with the data, account at the scheduled rate instead —
+  pass ``[K] * rounds`` — since realized ≤ scheduled means this
+  function otherwise reports LESS spend, not a bound.
 
 Per-round Rényi divergences compose by summation over rounds; we track
 them at integer orders α and convert with the standard Mironov bound
@@ -28,11 +38,14 @@ expression reduces to the plain Gaussian α/(2σ_n²), so full
 participation needs no special casing (we still shortcut it).
 
 Documented approximations (see ``fed/privacy/README.md``): the
-symmetric binomial is accounted as a Gaussian of equal variance (tight
-for the n ≥ 8σ² regime we sample in), the discrete Gaussian uses the
-continuous-Gaussian RDP curve (an upper bound, Canonne–Kamath–Steinke
-2020), and fixed-size-without-replacement selection is accounted with
-the Poisson-subsampling bound at the same rate.
+symmetric binomial is accounted as a Gaussian of equal variance — a
+heuristic ESTIMATE, not a formal bound (the known binomial-mechanism
+bounds, Agarwal et al. 2018, carry extra slack terms we do not track);
+the discrete Gaussian uses the continuous-Gaussian RDP curve (a true
+upper bound, Canonne–Kamath–Steinke 2020); fixed-size-without-
+replacement selection is accounted with the Poisson-subsampling bound
+at the same rate; and realized-participation conditioning assumes
+data-independent availability (above).
 """
 from __future__ import annotations
 
@@ -48,12 +61,22 @@ from .dp import PrivacyConfig
 DEFAULT_ORDERS = tuple(range(2, 65)) + (80, 96, 128, 192, 256, 512)
 
 
-def sigma_normalized(privacy: PrivacyConfig, mode: str) -> float:
-    """σ_eff / Δ — the noise-to-sensitivity ratio actually realized."""
+def sigma_normalized(privacy: PrivacyConfig, mode: str,
+                     num_params: int) -> float:
+    """σ_eff / Δ₂ — noise over the release's L2 VECTOR sensitivity.
+
+    ``num_params`` is the dimension d of the released count vector;
+    Δ₂ = ``privacy.l2_sensitivity(mode, d)`` (Δ·√d at the default
+    client adjacency).  The discrete Gaussian is calibrated σ = z·Δ₂,
+    so this is exactly z; the binomial's realized σ_eff = √n/2 ≥ z·Δ₂.
+    """
     if privacy.mechanism == "binomial":
         from .mechanisms import binomial_trials
-        n = binomial_trials(privacy, mode)
-        return math.sqrt(n) / 2.0 / privacy.sensitivity(mode)
+        n = binomial_trials(privacy, mode, num_params)
+        return math.sqrt(n) / 2.0 / privacy.l2_sensitivity(mode,
+                                                           num_params)
+    # validates num_params even though z alone is the answer
+    privacy.l2_sensitivity(mode, num_params)
     return float(privacy.noise_multiplier)
 
 
@@ -97,16 +120,22 @@ def eps_from_rdp(rdp: np.ndarray, delta: float,
 
 
 def round_epsilons(privacy: PrivacyConfig, participation: Sequence[int],
-                   num_clients: int, mode: str) -> np.ndarray:
+                   num_clients: int, mode: str,
+                   num_params: int) -> np.ndarray:
     """Cumulative ε AFTER each round, at the recorded participation.
 
     ``participation[t]`` is the number of clients whose contribution
     actually entered round ``t``'s release (K − dropouts); rounds
     compose by RDP summation, so the returned array is non-decreasing.
+    ``num_params`` is the released vector's dimension — the accountant
+    normalizes by the L2 sensitivity Δ₂ at ``privacy.adjacency``.
+    Realized-participation accounting assumes data-independent
+    availability (module docstring); pass the scheduled counts for the
+    conditioning-free upper bound.
     """
     if num_clients < 1:
         raise ValueError(f"num_clients must be >= 1, got {num_clients}")
-    sigma_n = sigma_normalized(privacy, mode)
+    sigma_n = sigma_normalized(privacy, mode, num_params)
     acc = np.zeros(len(DEFAULT_ORDERS), np.float64)
     eps = np.empty(len(participation), np.float64)
     cache = {}
@@ -120,9 +149,10 @@ def round_epsilons(privacy: PrivacyConfig, participation: Sequence[int],
 
 
 def epsilon_after(privacy: PrivacyConfig, participation: Sequence[int],
-                  num_clients: int, mode: str) -> float:
+                  num_clients: int, mode: str,
+                  num_params: int) -> float:
     """Total ε of the whole recorded run (inf for an empty run)."""
     if len(participation) == 0:
         return float("inf")
     return float(round_epsilons(privacy, participation,
-                                num_clients, mode)[-1])
+                                num_clients, mode, num_params)[-1])

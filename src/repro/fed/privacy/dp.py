@@ -3,13 +3,21 @@
 FedMRN's uplink is a packed 1-bit mask per parameter, so a client's
 contribution to the server-side count vector is bounded BY CONSTRUCTION:
 one binary mask adds at most ``1`` per entry, one signed mask moves the
-Σ±1 sum by at most ``2`` under replace-one adjacency.  That makes the
-aggregated counts the natural place for the distributed/shuffled model
-of DP (Girgis et al. 2020, PAPERS.md): clip each client's count
-contribution (``mechanisms.clip_counts``), add ONE discrete noise draw
+Σ±1 sum by at most ``2``.  That per-entry bound is STRUCTURAL — the
+packed popcount partial is identically the clipped per-client sum for
+any ``clip ≥ 1`` (``mechanisms.clip_counts`` is the reference oracle
+the property tests in ``tests/test_privacy.py`` enforce; no runtime
+clip op runs on the aggregation path).  The release protects, per
+``PrivacyConfig.adjacency``, either a client's WHOLE mask (``"client"``,
+the default: the d-entry count vector has L2 sensitivity
+``Δ₂ = Δ·√d``) or a single mask entry (``"entry"``: ``Δ₂ = Δ``, the
+weaker, explicitly-opt-in unit).  That makes the aggregated counts the
+natural place for the distributed/shuffled model of DP (Girgis et al.
+2020, PAPERS.md): add ONE discrete noise draw calibrated to ``z·Δ₂``
 to the merged round count (``mechanisms.dp_noise_tree`` inside
 ``MaskCodec.finalize_partial``), and account the composition per round
-at the participation actually recorded (``accountant.round_epsilons``).
+at the participation actually recorded (``accountant.round_epsilons``;
+a documented approximation — see ``fed/privacy/README.md``).
 
 ``PrivacyConfig`` is frozen and hashable so it can ride on
 :class:`~repro.fed.algorithms.FLConfig` (itself a jit/program-cache
@@ -19,8 +27,14 @@ engine layers — ``fed/codecs.py`` imports *us*.
 from __future__ import annotations
 
 import dataclasses
+import math
 
 MECHANISMS = ("discrete_gaussian", "binomial")
+
+#: units of protection the release can be calibrated/accounted at —
+#: "client" protects a client's whole d-entry mask (Δ₂ = Δ·√d),
+#: "entry" a single mask entry (Δ₂ = Δ; weaker, explicit opt-in)
+ADJACENCIES = ("client", "entry")
 
 #: MaskCodec families whose server aggregate is a pure mask count —
 #: the only formats the DP aggregation path can route (per-client-noise
@@ -37,20 +51,37 @@ def dp_mask_mode(algorithm: str) -> str:
 class PrivacyConfig:
     """Static description of the distributed-DP count release.
 
-    ``noise_multiplier`` is z = σ/Δ, the noise scale in units of the
-    clipped sensitivity — the quantity the RDP accountant actually
-    consumes, so sweeping it traces the ε/accuracy frontier directly.
-    ``clip`` bounds one client's per-entry count contribution; mask
-    wires satisfy any ``clip ≥ 1`` identically (|entry| ≤ 1), but the
-    clip is still applied (and property-tested) so the sensitivity
-    claim never silently depends on the wire format staying 1-bit.
+    ``noise_multiplier`` is z = σ/Δ₂, the noise scale in units of the
+    release's L2 sensitivity under the configured ``adjacency`` — the
+    quantity the RDP accountant actually consumes, so sweeping it
+    traces the ε/accuracy frontier directly (same convention as the
+    DP-SGD clip-norm multiplier).  ``clip`` bounds one client's
+    PER-ENTRY count contribution; mask wires satisfy any ``clip ≥ 1``
+    identically (|entry| ≤ 1) — the bound is structural, enforced by
+    the 1-bit wire format and pinned by property tests against
+    ``mechanisms.clip_counts``, not by a runtime clip op on the
+    aggregation path.
+
+    ``adjacency`` fixes the unit of protection and therefore Δ₂:
+
+    * ``"client"`` (default) — replace-one-CLIENT adjacency.  Swapping
+      one client can move every one of the d released entries by up to
+      the per-entry bound Δ, so Δ₂ = Δ·√d and the per-entry noise
+      σ = z·Δ·√d grows with the model size: the honest price of
+      protecting a whole mask with independent per-entry noise.
+    * ``"entry"`` — replace-one-ENTRY adjacency.  The unit of
+      protection is a single mask entry (one parameter's bit), NOT a
+      client's whole contribution; Δ₂ = Δ independent of d, so the
+      noise is cheap but the guarantee is far weaker.  Never the
+      default — opting in is an explicit statement of the threat model.
     """
 
     mechanism: str = "discrete_gaussian"   # one of MECHANISMS
-    noise_multiplier: float = 1.0          # z = σ / sensitivity
+    noise_multiplier: float = 1.0          # z = σ / L2 sensitivity
     clip: int = 1                          # per-entry contribution bound
     delta: float = 1e-5                    # target δ of the (ε, δ) report
     dp_seed: int = 0                       # noise stream root (fold_in round)
+    adjacency: str = "client"              # one of ADJACENCIES
 
     def validate(self) -> None:
         if self.mechanism not in MECHANISMS:
@@ -68,19 +99,39 @@ class PrivacyConfig:
         if not 0.0 < self.delta < 1.0:
             raise ValueError(
                 f"delta must be in (0, 1), got {self.delta}")
+        if self.adjacency not in ADJACENCIES:
+            raise ValueError(
+                f"unknown DP adjacency {self.adjacency!r} "
+                f"(supported: {', '.join(ADJACENCIES)})")
 
     def sensitivity(self, mode: str) -> int:
-        """Δ of one round's count release under replace-one adjacency.
+        """Per-ENTRY bound Δ on one client's count contribution.
 
-        Binary masks: one client's clipped entry lives in [0, clip] →
+        Binary masks: one client's entry lives in [0, clip] →
         Δ = clip.  Signed masks: in [−clip, clip] → Δ = 2·clip (the
         exact width the ``2c − K`` popcount fixup preserves).
         """
         return 2 * self.clip if mode == "signed" else self.clip
 
-    def sigma(self, mode: str) -> float:
-        """Target noise standard deviation σ = z · Δ in count units."""
-        return self.noise_multiplier * self.sensitivity(mode)
+    def l2_sensitivity(self, mode: str, num_params: int) -> float:
+        """Δ₂ of the d-dimensional count release at this adjacency.
+
+        ``"client"``: replacing one client moves every one of the
+        ``num_params`` entries by up to Δ → Δ₂ = Δ·√d.  ``"entry"``:
+        one entry moves → Δ₂ = Δ, independent of d.
+        """
+        if not (isinstance(num_params, int) and num_params >= 1):
+            raise ValueError(
+                f"num_params must be an integer >= 1, got {num_params!r}")
+        d = self.sensitivity(mode)
+        if self.adjacency == "entry":
+            return float(d)
+        return d * math.sqrt(num_params)
+
+    def sigma(self, mode: str, num_params: int) -> float:
+        """Target per-entry noise std σ = z · Δ₂ in count units."""
+        return self.noise_multiplier * self.l2_sensitivity(mode,
+                                                           num_params)
 
 
 def check_privacy_support(cfg) -> None:

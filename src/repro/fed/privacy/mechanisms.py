@@ -17,14 +17,19 @@ reproducible inside any engine's compiled program:
                            (f32 uniforms resolve ~2⁻²⁴; tail values
                            rarer than that are unreachable, a truncation
                            far below the accountant's δ.)
-  ``clip_counts``          per-client count clipping at the configured
-                           sensitivity: binary entries to [0, c], signed
-                           to [−c, c].  Mask wires satisfy clip ≥ 1
-                           identically, which is exactly why the packed
-                           popcount path (including the signed ``2c − K``
-                           fixup) IS the clipped sum — the hypothesis
-                           property test in ``tests/test_privacy.py``
-                           pins that equivalence ref ≡ pallas-interpret.
+  ``clip_counts``          the REFERENCE ORACLE for per-client count
+                           clipping at the configured sensitivity:
+                           binary entries to [0, c], signed to [−c, c].
+                           It runs in tests, not on the serving path —
+                           mask wires satisfy clip ≥ 1 identically, so
+                           the packed popcount path (including the
+                           signed ``2c − K`` fixup) IS the clipped sum
+                           structurally; the hypothesis property test in
+                           ``tests/test_privacy.py`` pins that
+                           equivalence ref ≡ pallas-interpret, and is
+                           the ONLY thing enforcing it — a future
+                           multi-bit wire must either clip at runtime
+                           or fail that test.
 
 ``dp_noise_tree`` mirrors ``core/noise.py``'s ``gen_noise`` fold-in
 idiom (per-leaf ``fold_in(key, i)``) so one key — derived as
@@ -48,13 +53,18 @@ Pytree = Any
 _WORD = 32
 
 
-def binomial_trials(privacy: PrivacyConfig, mode: str) -> int:
-    """Number of fair trials matching σ = z·Δ (Var = n/4 → n = 4σ²).
+def binomial_trials(privacy: PrivacyConfig, mode: str,
+                    num_params: int) -> int:
+    """Number of fair trials matching σ = z·Δ₂ (Var = n/4 → n = 4σ²).
 
     Rounded UP to the next even integer: the accountant then uses the
     realized σ_eff = √n/2 ≥ σ, never less noise than configured.
+    Under ``adjacency="client"`` n grows linearly with ``num_params``
+    (σ² = z²Δ²d) and the sampler draws ⌈n/32⌉ uint32 words PER ENTRY —
+    fine at bench scale, prohibitive for large models; prefer
+    ``discrete_gaussian`` there (its CDF table is only O(σ) long).
     """
-    sigma = privacy.sigma(mode)
+    sigma = privacy.sigma(mode, num_params)
     n = int(math.ceil(4.0 * sigma * sigma))
     return max(2, n + (n % 2))
 
@@ -99,13 +109,19 @@ def discrete_gaussian(key: jax.Array, shape, sigma: float) -> jax.Array:
 def dp_noise_tree(key: jax.Array, tree: Pytree, privacy: PrivacyConfig,
                   mode: str) -> Pytree:
     """Int32 noise pytree matching ``tree``'s shapes — the one draw a
-    round's finalize adds to its merged count (per-leaf ``fold_in``)."""
+    round's finalize adds to its merged count (per-leaf ``fold_in``).
+
+    σ is calibrated to the L2 sensitivity of the WHOLE release: ``tree``
+    is the full count template, so d = Σ leaf sizes is the release
+    dimension the configured adjacency's Δ₂ is computed at.
+    """
     leaves, treedef = jax.tree_util.tree_flatten(tree)
+    num_params = int(sum(math.prod(jnp.shape(l)) for l in leaves))
     if privacy.mechanism == "binomial":
-        n = binomial_trials(privacy, mode)
+        n = binomial_trials(privacy, mode, num_params)
         sample = lambda k, s: symmetric_binomial(k, s, n)
     else:
-        sigma = privacy.sigma(mode)
+        sigma = privacy.sigma(mode, num_params)
         sample = lambda k, s: discrete_gaussian(k, s, sigma)
     out = []
     for i, leaf in enumerate(leaves):
@@ -119,8 +135,12 @@ def clip_counts(contrib: Pytree, clip: int, mode: str) -> Pytree:
     Binary entries live in [0, clip]; signed in [−clip, clip].  On the
     1-bit mask wire this is the identity for any clip ≥ 1 — the packed
     popcount partial (with the signed ``2c − K`` fixup) therefore equals
-    the clipped per-client sum exactly, which is the invariant the DP
-    aggregation path relies on and ``tests/test_privacy.py`` proves.
+    the clipped per-client sum exactly.  NOTE this function is the TEST
+    ORACLE of that structural invariant, not a production op: no engine
+    calls it at aggregation time (clipping there would need per-client
+    unpacking the fused popcount path exists to avoid).  The sensitivity
+    claim rests on the wire staying 1-bit, enforced solely by the
+    hypothesis property test in ``tests/test_privacy.py``.
     """
     lo = -clip if mode == "signed" else 0
 

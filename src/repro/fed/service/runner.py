@@ -295,9 +295,11 @@ class ServiceRunner:
         privacy = getattr(self.codec, "privacy", None)
         if privacy is not None:
             from ..privacy import round_epsilons
+            from ...core import tree_num_params
             dp_eps = tuple(float(e) for e in round_epsilons(
                 privacy, [int(x) for x in coord.participation],
-                cfg.num_clients, self.codec.mode))
+                cfg.num_clients, self.codec.mode,
+                tree_num_params(self._params)))
             dp_delta = float(privacy.delta)
         else:
             dp_eps = (float("inf"),) * cfg.rounds

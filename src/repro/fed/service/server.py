@@ -383,10 +383,12 @@ class Coordinator:
         if privacy is None or self.num_clients is None:
             return {"dp_epsilon_round": None, "dp_delta": None}
         from ..privacy import round_epsilons
+        from ...core import tree_num_params
         closed = min(self.round, self.rounds)
         eps = round_epsilons(privacy, [int(x) for x in
                                        self.participation[:closed]],
-                             self.num_clients, self.codec.mode)
+                             self.num_clients, self.codec.mode,
+                             tree_num_params(self.w))
         col: List[Optional[float]] = [float(e) for e in eps]
         col += [None] * (self.rounds - closed)
         return {"dp_epsilon_round": col, "dp_delta": float(privacy.delta)}

@@ -189,7 +189,8 @@ def _run_batched(loss_fn, init_params, client_batch_fn, eval_fn, cfg,
     history["wall_s"] = time.time() - t0
     history["final_acc"] = history["acc"][-1]
     from .api import dp_epsilon_schedule        # lazy, one-way (like shim)
-    eps, delta = dp_epsilon_schedule(cfg, participation)
+    eps, delta = dp_epsilon_schedule(cfg, participation,
+                                     history["params"])
     history["dp_epsilon"] = list(eps)
     history["dp_delta"] = delta
     return history

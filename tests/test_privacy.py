@@ -139,15 +139,17 @@ def test_discrete_gaussian_moments_and_determinism():
 
 
 def test_binomial_trials_never_under_noise():
-    """n is rounded UP to even, so the realized σ_eff = √n/2 ≥ z·Δ and
+    """n is rounded UP to even, so the realized σ_eff = √n/2 ≥ z·Δ₂ and
     the accountant's normalized scale is ≥ the configured multiplier."""
     for z in (0.3, 0.5, 1.0, 1.3, 2.7):
         for mode in ("binary", "signed"):
-            p = PrivacyConfig(mechanism="binomial", noise_multiplier=z)
-            n = binomial_trials(p, mode)
-            assert n >= 2 and n % 2 == 0
-            assert math.sqrt(n) / 2.0 >= p.sigma(mode) - 1e-12
-            assert sigma_normalized(p, mode) >= z - 1e-12
+            for adj in ("client", "entry"):
+                p = PrivacyConfig(mechanism="binomial",
+                                  noise_multiplier=z, adjacency=adj)
+                n = binomial_trials(p, mode, P)
+                assert n >= 2 and n % 2 == 0
+                assert math.sqrt(n) / 2.0 >= p.sigma(mode, P) - 1e-12
+                assert sigma_normalized(p, mode, P) >= z - 1e-12
 
 
 def test_dp_noise_tree_per_leaf_streams_differ():
@@ -180,7 +182,8 @@ def test_privacy_config_validation():
                 PrivacyConfig(clip=0),
                 PrivacyConfig(clip=1.5),
                 PrivacyConfig(delta=0.0),
-                PrivacyConfig(delta=1.0)):
+                PrivacyConfig(delta=1.0),
+                PrivacyConfig(adjacency="user")):
         with pytest.raises(ValueError):
             bad.validate()
 
@@ -189,10 +192,55 @@ def test_sensitivity_binary_vs_signed():
     p = PrivacyConfig(clip=3)
     assert p.sensitivity("binary") == 3              # [0, c] per entry
     assert p.sensitivity("signed") == 6              # [−c, c] per entry
-    assert p.sigma("signed") == 6.0
+    assert p.sigma("signed", 1) == 6.0               # d=1: Δ₂ = Δ
     assert dp_mask_mode("fedmrns") == "signed"
     assert dp_mask_mode("fedmrn") == "binary"
     assert dp_mask_mode("fedpm") == "binary"
+
+
+def test_vector_sensitivity_accounting():
+    """REVIEW pin: the release is d-dimensional and the default
+    adjacency protects a client's WHOLE mask — Δ₂ = Δ·√d, the σ the
+    mechanism adds is z·Δ₂, and the accountant normalizes by Δ₂ (NOT
+    the per-entry Δ, which would under-report ε by ~d in the RDP
+    exponent)."""
+    d = 641
+    p = PrivacyConfig(noise_multiplier=1.5, clip=2)
+    assert p.l2_sensitivity("binary", d) == pytest.approx(
+        2.0 * math.sqrt(d))
+    assert p.l2_sensitivity("signed", d) == pytest.approx(
+        4.0 * math.sqrt(d))
+    assert p.sigma("binary", d) == pytest.approx(3.0 * math.sqrt(d))
+    # entry adjacency: Δ₂ = Δ, independent of d — the weaker opt-in
+    e = dataclasses.replace(p, adjacency="entry")
+    assert e.l2_sensitivity("binary", d) == 2.0
+    assert e.sigma("binary", 10**6) == 3.0
+    # discrete Gaussian: σ calibrated to z·Δ₂ → σ_n is exactly z for
+    # ANY d and either adjacency (the noise, not the ε, pays for √d)
+    for d_ in (1, 7, d):
+        assert sigma_normalized(p, "binary", d_) == pytest.approx(1.5)
+        assert sigma_normalized(e, "binary", d_) == pytest.approx(1.5)
+    # binomial: realized σ_eff = √n/2 over the SAME Δ₂
+    b = PrivacyConfig(mechanism="binomial", noise_multiplier=0.7)
+    n = binomial_trials(b, "binary", d)
+    assert sigma_normalized(b, "binary", d) == pytest.approx(
+        math.sqrt(n) / 2.0 / math.sqrt(d))
+    assert sigma_normalized(b, "binary", d) >= 0.7
+    with pytest.raises(ValueError, match="num_params"):
+        p.l2_sensitivity("binary", 0)
+
+
+def test_dp_noise_magnitude_scales_with_vector_sensitivity():
+    """The draw the codec actually adds realizes σ = z·Δ·√d under the
+    default client adjacency, and σ = z·Δ under entry adjacency."""
+    big = {"x": jnp.zeros((200, 50))}                   # d = 10_000
+    z = np.asarray(dp_noise_tree(KEY, big, PrivacyConfig(), "binary")["x"],
+                   np.float64)
+    np.testing.assert_allclose(z.std(), 100.0, rtol=0.05)   # √d = 100
+    ze = np.asarray(dp_noise_tree(
+        KEY, big, PrivacyConfig(adjacency="entry"), "binary")["x"],
+        np.float64)
+    np.testing.assert_allclose(ze.std(), 1.0, rtol=0.05)
 
 
 def test_family_support_guards():
@@ -214,41 +262,42 @@ def test_family_support_guards():
 # ---------------------------------------------------------------------------
 
 def test_epsilon_is_cumulative_and_finite():
-    eps = round_epsilons(PRIV, [4] * 6, 8, "binary")
+    eps = round_epsilons(PRIV, [4] * 6, 8, "binary", P)
     assert np.all(np.isfinite(eps)) and np.all(eps > 0)
     assert np.all(np.diff(eps) > 0)                  # each round spends
 
 
 def test_subsampling_amplifies():
-    sub = round_epsilons(PRIV, [4] * 5, 8, "binary")
-    full = round_epsilons(PRIV, [8] * 5, 8, "binary")
+    sub = round_epsilons(PRIV, [4] * 5, 8, "binary", P)
+    full = round_epsilons(PRIV, [8] * 5, 8, "binary", P)
     assert np.all(sub < full)
 
 
 def test_more_noise_less_epsilon():
     lo = round_epsilons(PrivacyConfig(noise_multiplier=0.5),
-                        [4] * 5, 8, "binary")
+                        [4] * 5, 8, "binary", P)
     hi = round_epsilons(PrivacyConfig(noise_multiplier=2.0),
-                        [4] * 5, 8, "binary")
+                        [4] * 5, 8, "binary", P)
     assert np.all(hi < lo)
 
 
 def test_dropout_rounds_spend_less():
-    clean = round_epsilons(PRIV, [4, 4, 4], 8, "binary")
-    degraded = round_epsilons(PRIV, [4, 2, 4], 8, "binary")
+    clean = round_epsilons(PRIV, [4, 4, 4], 8, "binary", P)
+    degraded = round_epsilons(PRIV, [4, 2, 4], 8, "binary", P)
     assert degraded[0] == clean[0]                   # same first round
     assert degraded[-1] < clean[-1]                  # q=2/8 < q=4/8
-    assert epsilon_after(PRIV, [4, 2, 4], 8, "binary") == degraded[-1]
-    assert epsilon_after(PRIV, [], 8, "binary") == math.inf
+    assert epsilon_after(PRIV, [4, 2, 4], 8, "binary", P) == degraded[-1]
+    assert epsilon_after(PRIV, [], 8, "binary", P) == math.inf
 
 
 def test_binomial_accounted_at_realized_sigma():
-    """z=1 binary: n = 4σ² = 4 exactly, so σ_eff = 1 and the binomial
-    column must equal the discrete-Gaussian one."""
+    """z=1 binary client adjacency: σ² = d, so n = 4d exactly (even),
+    σ_eff = √(4d)/2 = √d = σ — the binomial column must equal the
+    discrete-Gaussian one."""
     b = round_epsilons(PrivacyConfig(mechanism="binomial"),
-                       [4] * 4, 8, "binary")
+                       [4] * 4, 8, "binary", P)
     g = round_epsilons(PrivacyConfig(mechanism="discrete_gaussian"),
-                       [4] * 4, 8, "binary")
+                       [4] * 4, 8, "binary", P)
     np.testing.assert_allclose(b, g, rtol=1e-12)
 
 
@@ -258,7 +307,9 @@ def test_accountant_input_validation():
     with pytest.raises(ValueError, match="delta"):
         eps_from_rdp(np.zeros(3), 0.0, orders=(2, 3, 4))
     with pytest.raises(ValueError, match="num_clients"):
-        round_epsilons(PRIV, [4], 0, "binary")
+        round_epsilons(PRIV, [4], 0, "binary", P)
+    with pytest.raises(ValueError, match="num_params"):
+        round_epsilons(PRIV, [4], 8, "binary", 0)
     np.testing.assert_array_equal(rdp_round(0.0, 1.0),
                                   np.zeros(len(rdp_round(0.0, 1.0))))
 
@@ -405,7 +456,8 @@ def test_dp_parity_across_all_five_engines():
     assert all(math.isfinite(e) for e in ref.dp_epsilon)
     assert list(ref.dp_epsilon) == sorted(ref.dp_epsilon)
     expected = dp_epsilon_schedule(_experiment(
-        "fedmrn", shared_noise=True, privacy=PRIV).cfg, [K] * R)
+        "fedmrn", shared_noise=True, privacy=PRIV).cfg, [K] * R,
+        ref.num_params)
     assert ref.dp_epsilon == expected[0]
     assert ref.dp_delta == expected[1] == PRIV.delta
     for eng, res in runs.items():
@@ -437,7 +489,8 @@ def test_fedmrns_binomial_end_to_end():
     cfg = FLConfig(algorithm="fedmrns", num_clients=C,
                    clients_per_round=K, rounds=R, shared_noise=True,
                    privacy=priv)
-    assert res.dp_epsilon == dp_epsilon_schedule(cfg, [K] * R)[0]
+    assert res.dp_epsilon == dp_epsilon_schedule(cfg, [K] * R,
+                                                 res.num_params)[0]
 
 
 def test_dropout_discounts_the_recorded_spend():
@@ -451,8 +504,8 @@ def test_dropout_discounts_the_recorded_spend():
     res = exp.run(engine="looped")
     assert sum(res.participation_round) < K * R     # the trace does drop
     assert res.dp_epsilon == dp_epsilon_schedule(
-        exp.cfg, res.participation_round)[0]
-    clean = dp_epsilon_schedule(exp.cfg, [K] * R)[0]
+        exp.cfg, res.participation_round, res.num_params)[0]
+    clean = dp_epsilon_schedule(exp.cfg, [K] * R, res.num_params)[0]
     assert res.dp_epsilon[-1] < clean[-1]
 
 
@@ -534,7 +587,8 @@ def test_coordinator_metrics_report_cumulative_epsilon():
     m = coord.metrics()
     assert m["dp_epsilon_round"] == [None] * R       # nothing closed yet
     assert m["dp_delta"] == PRIV.delta
-    expected = dp_epsilon_schedule(cfg, [K] * R)[0]
+    expected = dp_epsilon_schedule(cfg, [K] * R,
+                                   tree_num_params(coord.w))[0]
     for r in range(R):
         for slot in range(K):
             code, _ = _post(runner, coord, r, slot, schedule)
